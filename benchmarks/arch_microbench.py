@@ -1,0 +1,40 @@
+"""Per-architecture microbench: reduced-config forward + train-step wall time
+on CPU (framework sanity, not a TPU number)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, ShapeConfig
+from repro.models import forward, init_params, model_specs
+from repro.models.params import init_params as init_tree
+from repro.train import OptConfig, make_train_step, opt_state_specs, synthetic_batch
+
+from .common import emit
+
+
+def main(full: bool = False) -> None:
+    key = jax.random.PRNGKey(0)
+    shape = ShapeConfig("bench", 64, 2, "train")
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch, reduced=True).replace(dtype="float32",
+                                                     remat="none")
+        specs = model_specs(cfg)
+        params = init_params(specs, key, dtype=jnp.float32)
+        oc = OptConfig(lr=1e-3)
+        opt = init_tree(opt_state_specs(oc, specs), key, jnp.float32)
+        step = jax.jit(make_train_step(cfg, oc))
+        batch = synthetic_batch(cfg, shape, 0)
+        p, o, m = step(params, opt, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        iters = 3
+        for _ in range(iters):
+            p, o, m = step(p, o, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.time() - t0) / iters * 1e6
+        emit(f"arch_trainstep_{arch}", us, f"loss={float(m['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    main(full=True)

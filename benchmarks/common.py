@@ -1,0 +1,29 @@
+"""Shared helpers for the paper benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.sim import build_simulation
+
+
+def run_sim(algo: str, n: int, *, batch: int = 4, network: str = "sdc",
+            rounds: int = 15, max_time: float = 60.0, d: Optional[int] = None,
+            crash=None):
+    """Run one simulated deployment; return (metrics, wall_seconds)."""
+    t0 = time.time()
+    sim, met = build_simulation(algo, n, batch=batch, network=network, d=d)
+    if crash:
+        for c in crash:
+            sim.schedule_crash(*c)
+    sim.start()
+    target = rounds * n
+    sim.run(until=lambda: len(met.delivered_msgs) >= max(n - len(crash or ()), 1)
+            and all(v >= target for v in met.delivered_msgs.values()),
+            max_time=max_time)
+    return met, time.time() - t0
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,22 @@
+"""Paper Fig. 3: effect of batching on AllConcur+ latency/throughput
+(SDC and MDC)."""
+from .common import emit, run_sim
+
+BATCHES = [1, 4, 16, 64, 256]
+
+
+def main(full: bool = False) -> None:
+    n = 32 if full else 16
+    for network in ("sdc", "mdc"):
+        for batch in BATCHES:
+            met, wall = run_sim("allconcur+", n, batch=batch, network=network,
+                                rounds=12, max_time=120.0)
+            lat = met.median_latency()
+            thr = met.throughput(3, 10)
+            emit(f"fig3_batching_{network}_n{n}_b{batch}", lat * 1e6,
+                 f"latency_ms={lat*1e3:.3f};throughput_txn_s={thr:.0f};"
+                 f"wall_s={wall:.1f}")
+
+
+if __name__ == "__main__":
+    main(full=True)

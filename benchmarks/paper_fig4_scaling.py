@@ -1,0 +1,39 @@
+"""Paper Fig. 4: AllConcur+ vs AllConcur / AllConcur-w/EA / AllGather / LCR /
+Libpaxos, latency + throughput vs n (SDC + MDC).
+
+Simulated sizes are reduced vs the paper (n <= 128 by default; the paper goes
+to 455) to keep the discrete-event run affordable in CI; trends and ratios
+are the deliverable.
+"""
+from .common import emit, run_sim
+
+ALGOS = ["allgather", "allconcur+", "allconcur", "allconcur-ea", "lcr",
+         "libpaxos"]
+
+
+def main(full: bool = False) -> None:
+    sizes = [8, 16, 32, 64] if not full else [8, 16, 32, 64, 128]
+    for network in ("sdc", "mdc"):
+        for n in sizes:
+            if network == "mdc" and n > 32 and not full:
+                continue
+            base_thr = None
+            for algo in ALGOS:
+                if algo == "libpaxos" and n > 64:
+                    continue  # O(n^2) events; paper shows collapse anyway
+                if algo == "allconcur-ea" and n > 32:
+                    continue
+                met, wall = run_sim(algo, n, network=network, rounds=12,
+                                    max_time=180.0)
+                lat = met.median_latency()
+                thr = met.throughput(3, 10)
+                if algo == "allconcur+":
+                    base_thr = thr
+                rel = (thr / base_thr) if base_thr else float("nan")
+                emit(f"fig4_{network}_n{n}_{algo}", lat * 1e6,
+                     f"latency_ms={lat*1e3:.3f};throughput_txn_s={thr:.0f};"
+                     f"vs_allconcur+={rel:.3f};wall_s={wall:.1f}")
+
+
+if __name__ == "__main__":
+    main(full=True)

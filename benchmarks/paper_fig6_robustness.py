@@ -1,0 +1,35 @@
+"""Paper Fig. 6: expected latency/throughput vs failure frequency (sequences
+of lambda unreliable rounds between failures), from the paper's analytic
+model with delta_u/delta_r measured in our simulator.
+
+  latency(lambda)    = 2 du + (du + 2 dr) / lambda
+  throughput(lambda) = (1 - 1/lambda) / (du + dr/lambda)
+  worst case: latency 3 du + 2 dr; throughput 1/(2 du + dr)
+"""
+from .common import emit, run_sim
+
+
+def main(full: bool = False) -> None:
+    n = 32 if full else 16
+    mp, _ = run_sim("allconcur+", n, rounds=12)
+    ma, _ = run_sim("allconcur", n, rounds=12)
+    du = mp.median_latency() / 2.0   # paper: du = half AllConcur+ latency
+    dr = ma.median_latency()         # paper: dr = AllConcur latency
+    emit(f"fig6_params_n{n}", du * 1e6, f"delta_u_ms={du*1e3:.3f};"
+         f"delta_r_ms={dr*1e3:.3f}")
+    # non-failure + worst case
+    emit(f"fig6_nf_n{n}", (2 * du) * 1e6,
+         f"latency_factor_dr={2*du/dr:.3f};throughput_factor={dr/du:.3f}")
+    emit(f"fig6_wc_n{n}", (3 * du + 2 * dr) * 1e6,
+         f"latency_factor_dr={(3*du+2*dr)/dr:.3f};"
+         f"throughput_factor={dr/(2*du+dr):.3f}")
+    for lam in (3, 5, 10, 20, 100):
+        lat = 2 * du + (du + 2 * dr) / lam
+        thr = (1 - 1.0 / lam) / (du + dr / lam)
+        emit(f"fig6_lambda{lam}_n{n}", lat * 1e6,
+             f"latency_factor_dr={lat/dr:.3f};"
+             f"throughput_factor={thr*dr:.3f}")
+
+
+if __name__ == "__main__":
+    main(full=True)

@@ -1,0 +1,35 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale sizes
+(slow); default is CI-sized."""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="table3|fig3|fig4|fig5|fig6|arch")
+    args = ap.parse_args()
+
+    from . import (arch_microbench, paper_fig3_batching, paper_fig4_scaling,
+                   paper_fig5_failures, paper_fig6_robustness,
+                   paper_table3_connectivity)
+
+    benches = {
+        "table3": paper_table3_connectivity.main,
+        "fig3": paper_fig3_batching.main,
+        "fig4": paper_fig4_scaling.main,
+        "fig5": paper_fig5_failures.main,
+        "fig6": paper_fig6_robustness.main,
+        "arch": arch_microbench.main,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        fn(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Serve a small model with batched requests (prefill + greedy decode).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import subprocess
+import sys
+
+# the serving loop lives in the launcher; this example drives it
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "granite-3-8b",
+     "--requests", "4", "--prompt-len", "12", "--gen", "12"],
+    env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}))

@@ -1,0 +1,19 @@
+"""Reproduce the paper's headline comparison (Fig. 4 trends) at small n.
+
+    PYTHONPATH=src python examples/simulate_paper.py
+"""
+from repro.sim import build_simulation
+
+N = 32
+print(f"n={N}, batch=4 (1kB messages), single-datacenter fat-tree")
+print(f"{'algorithm':14s} {'median latency':>16s} {'throughput':>22s}")
+for algo in ["allgather", "allconcur+", "allconcur", "lcr", "libpaxos"]:
+    sim, met = build_simulation(algo, N, batch=4, network="sdc")
+    sim.start()
+    sim.run(until=lambda: len(met.delivered_msgs) == N and
+            all(v >= 15 * N for v in met.delivered_msgs.values()),
+            max_time=60.0)
+    print(f"{algo:14s} {met.median_latency()*1e3:13.3f} ms "
+          f"{met.throughput(3, 10):15.0f} txn/s/srv")
+print("\nexpected (paper): AllConcur+ ~= AllGather throughput, ~2x its "
+      "latency; >> AllConcur, LCR, Libpaxos")

@@ -1,0 +1,80 @@
+"""Hypothesis->change->measure hillclimb driver (runs in its own process).
+
+Usage: PYTHONPATH=src python experiments/hillclimb.py <series>
+"""
+import sys
+import json
+from repro.launch.dryrun import run_cell   # sets XLA_FLAGS first
+
+SERIES = {
+    "A0": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=8,
+               tag="base_ga8"),
+    "C0": dict(arch="granite-34b", shape="train_4k", grad_accum=8,
+               tag="base_ga8"),
+    # A: kimi-k2 train_4k — most collective-bound cell
+    "A1": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=2,
+               tag="ga2"),
+    "A2": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=1,
+               tag="ga1"),
+    "A3": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=8,
+               overrides={"moe_weight_sharding": "ep_tp"}, tag="eptp_ga8"),
+    "A4": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=2,
+               overrides={"moe_weight_sharding": "ep_tp"}, tag="eptp_ga2"),
+    # B: kimi-k2 prefill_32k — worst roofline fraction (non-decode)
+    "B1": dict(arch="kimi-k2-1t-a32b", shape="prefill_32k",
+               overrides={"moe_weight_sharding": "ep_tp"}, tag="eptp"),
+    "B2": dict(arch="kimi-k2-1t-a32b", shape="prefill_32k",
+               overrides={"moe_weight_sharding": "ep_tp",
+                          "capacity_factor": 1.0}, tag="eptp_cf1"),
+    # C: granite-34b train_4k — dense, memory-infeasible, push to roofline
+    "C1": dict(arch="granite-34b", shape="train_4k", grad_accum=16,
+               tag="ga16"),
+    "C2": dict(arch="granite-34b", shape="train_4k", grad_accum=8,
+               overrides={"remat": "dots"}, tag="dots_ga8"),
+    "C3": dict(arch="granite-34b", shape="train_4k", grad_accum=32,
+               overrides={"remat": "dots"}, tag="dots_ga32"),
+    "C4": dict(arch="granite-34b", shape="train_4k", grad_accum=32,
+               tag="ga32"),
+    "C5": dict(arch="granite-34b", shape="train_4k", grad_accum=16,
+               overrides={"remat": "save_attn"}, tag="saveattn_ga16"),
+    "C6": dict(arch="granite-34b", shape="train_4k", grad_accum=16,
+               overrides={"remat": "dots"}, tag="dots_ga16"),
+    "A7": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=1,
+               overrides={"remat": "dots"}, tag="dots_ga1"),
+    "D0": dict(arch="granite-34b", shape="decode_32k", tag="base"),
+    # wave 3: donation + regrouped EP
+    "C7": dict(arch="granite-34b", shape="train_4k", grad_accum=16,
+               tag="ga16_donate"),
+    "D2": dict(arch="granite-34b", shape="decode_32k", tag="donate"),
+    "B0": dict(arch="kimi-k2-1t-a32b", shape="prefill_32k", tag="base"),
+    "B3": dict(arch="kimi-k2-1t-a32b", shape="prefill_32k",
+               overrides={"moe_weight_sharding": "ep_tp"},
+               rule_overrides={"exp_group": "model", "experts": "data",
+                               "expert_tp": "model"}, tag="regroup_ep"),
+    "A8": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=1,
+               overrides={"moe_weight_sharding": "ep_tp", "remat": "dots"},
+               rule_overrides={"exp_group": "model", "experts": "data",
+                               "expert_tp": "model"}, tag="regroup_dots_ga1"),
+    # E: kimi multi-pod (its feasible home)
+    "E1": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=2,
+               multi_pod=True, tag="mp_ga2"),
+    "E2": dict(arch="kimi-k2-1t-a32b", shape="train_4k", grad_accum=1,
+               multi_pod=True, tag="mp_ga1"),
+    # D (bonus): granite-34b decode — test weight-stationary hypothesis
+    "D1": dict(arch="granite-34b", shape="decode_32k",
+               rule_overrides={"fsdp": None}, tag="replicated"),
+}
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list(SERIES)
+    for name in names:
+        kw = SERIES[name]
+        row = run_cell(kw.pop("arch"), kw.pop("shape"),
+                       save_dir="experiments/perf", **kw)
+        keep = {k: row.get(k) for k in
+                ("arch", "shape", "tag", "status", "t_compute_s",
+                 "t_memory_s", "t_collective_s", "dominant",
+                 "roofline_fraction", "per_device_memory_bytes",
+                 "mem_args_gb", "mem_out_gb", "mem_temp_gb",
+                 "collective_breakdown", "error")}
+        print(f"[{name}] {json.dumps(keep)}")

@@ -1,0 +1,46 @@
+"""Render the EXPERIMENTS.md roofline table from the dry-run JSON cells."""
+import glob
+import json
+import os
+import sys
+
+
+def fmt_row(d):
+    if d.get("status") == "SKIP":
+        return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | SKIP | — | — | — "
+                f"| — | — | — | {d.get('reason','')[:46]} |")
+    if d.get("status") != "OK":
+        return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | FAIL | — | — | —"
+                f" | — | — | — | {d.get('error','')[:46]} |")
+    mem_gb = d["per_device_memory_bytes"] / 1e9
+    note = "fits" if d.get("fits_hbm") else f"needs {mem_gb/16:.1f}x HBM"
+    return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | OK "
+            f"| {d['t_compute_s']*1e3:.2f} | {d['t_memory_s']*1e3:.2f} "
+            f"| {d['t_collective_s']*1e3:.2f} | **{d['dominant'][:4]}** "
+            f"| {d['roofline_fraction']:.3f} | {mem_gb:.1f} | {note} |")
+
+
+def main(dirname="experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        name = os.path.basename(f)
+        if name.count("__") != 2:
+            continue  # hillclimb variants live in experiments/perf
+        rows.append(json.load(open(f)))
+    shapes_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                    "long_500k": 3}
+    rows.sort(key=lambda d: (d["mesh"], d["arch"],
+                             shapes_order.get(d["shape"], 9)))
+    print("| arch | shape | mesh | status | t_comp (ms) | t_mem (ms) "
+          "| t_coll (ms) | dom | roofline frac | mem/dev (GB) | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        print(fmt_row(d))
+    ok = sum(1 for d in rows if d.get("status") == "OK")
+    sk = sum(1 for d in rows if d.get("status") == "SKIP")
+    fl = sum(1 for d in rows if d.get("status") == "FAIL")
+    print(f"\n{ok} OK / {sk} SKIP / {fl} FAIL out of {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

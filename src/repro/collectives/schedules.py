@@ -1,0 +1,57 @@
+"""Digraph dissemination schedules -> jax.lax.ppermute step-schedules.
+
+TPU-native mapping of the paper's two overlays:
+
+- G_U (redundancy-free): ring and recursive-doubling (binomial) all-gather —
+  every shard crosses each link once; total traffic = (n-1)/n x payload per
+  device, the ICI analogue of "every server sends and receives every message
+  at most once".
+- G_R (resilient): circulant-flood all-gather over the G_S(n,d) offsets —
+  d x redundant traffic, the exact work overhead the paper's reliable mode
+  pays; used when links/nodes are suspect.
+
+All schedules are static permutation lists, so XLA sees plain
+collective-permutes it can overlap with compute.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from ..core.digraph import _geometric_offsets
+
+
+def ring_schedule(n: int) -> List[List[Tuple[int, int]]]:
+    """n-1 steps; step t sends along the ring."""
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    return [perm for _ in range(n - 1)]
+
+
+def doubling_schedule(n: int) -> List[List[Tuple[int, int]]]:
+    """Recursive-doubling all-gather: ceil(log2 n) steps; step k shifts by
+    2^k (power-of-two n)."""
+    assert n & (n - 1) == 0, "recursive doubling needs power-of-two n"
+    steps = []
+    k = 1
+    while k < n:
+        steps.append([(i, (i + k) % n) for i in range(n)])
+        k <<= 1
+    return steps
+
+
+def gs_flood_schedule(n: int, d: int) -> Tuple[List[int], int]:
+    """Circulant G_S(n,d) flood: returns (offsets, n_steps) where at every
+    step each device sends its whole known buffer along all d offsets;
+    n_steps = graph diameter (all deltas covered)."""
+    offsets = _geometric_offsets(n, d)
+    known = {0}
+    steps = 0
+    while len(known) < n:
+        new = set()
+        for delta in known:
+            for off in offsets:
+                new.add((delta + off) % n)
+        known |= new
+        steps += 1
+        if steps > n:
+            break
+    return offsets, steps

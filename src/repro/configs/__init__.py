@@ -1,0 +1,24 @@
+"""Assigned architectures (10) + shapes (4) as selectable configs."""
+from .base import (ModelConfig, ShapeConfig, SHAPES, get_config, list_archs,
+                   register, shape_applicable)
+
+# importing the modules registers full + reduced configs
+from . import (whisper_base, qwen2_vl_72b, kimi_k2, llama4_maverick,
+               granite_34b, yi_6b, granite_3_8b, qwen3_1_7b, xlstm_350m,
+               jamba_1_5_large)  # noqa: F401
+
+ALL_ARCHS = (
+    "whisper-base",
+    "qwen2-vl-72b",
+    "kimi-k2-1t-a32b",
+    "llama4-maverick-400b-a17b",
+    "granite-34b",
+    "yi-6b",
+    "granite-3-8b",
+    "qwen3-1.7b",
+    "xlstm-350m",
+    "jamba-1.5-large-398b",
+)
+
+__all__ = ["ALL_ARCHS", "ModelConfig", "SHAPES", "ShapeConfig", "get_config",
+           "list_archs", "register", "shape_applicable"]

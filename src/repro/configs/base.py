@@ -1,0 +1,194 @@
+"""Config system: model architecture + input shapes + run settings.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs``; ``get_config(name)`` resolves them, and every config
+provides a ``reduced()`` variant for CPU smoke tests (same family, tiny
+dims).  Input shapes are the four assigned (seq_len, global_batch) cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // num_heads
+
+    # --- MoE -----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0            # per-expert hidden size (0 -> d_ff)
+    moe_every: int = 1           # every k-th layer is MoE (1 = all)
+    capacity_factor: float = 1.25
+    moe_groups: int = 1          # dispatch groups (= data shards; launcher-set)
+    moe_weight_sharding: str = "fsdp"  # fsdp (d-dim over data) | ep_tp (ff over data; weight-stationary)
+
+    # --- positional / norm ----------------------------------------------------
+    rope_theta: float = 1e4
+    use_qk_norm: bool = False
+    mrope: bool = False          # qwen2-vl M-RoPE (3-section rotary)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    norm_kind: str = "rmsnorm"   # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+
+    # --- block structure --------------------------------------------------
+    # layer pattern repeated over depth: entries in {"attn","mamba","slstm","mlstm"}
+    block_pattern: Tuple[str, ...] = ("attn",)
+    encoder_layers: int = 0      # >0 -> encoder-decoder (whisper)
+    frontend: str = "none"       # none | audio_stub | vision_stub
+    frontend_len: int = 0        # frames/patches provided by the stub
+    tie_embeddings: bool = False
+    act: str = "swiglu"          # swiglu | gelu
+
+    # --- ssm (mamba) ----------------------------------------------------------
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+
+    # --- xlstm -----------------------------------------------------------
+    xlstm_proj_factor: float = 2.0
+
+    # --- execution -----------------------------------------------------------
+    dtype: str = "bfloat16"
+    attn_impl: str = "flash"     # flash (pallas) | reference
+    remat: str = "full"          # full | dots | none
+    scan_layers: bool = True
+    optimizer: str = "adamw"     # adamw | adafactor
+    sub_quadratic: bool = False  # supports long_500k
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up for TP sharding (multiple of 256 = 16 model
+        shards x 16 lanes); logits are sliced back to vocab_size."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def pattern_for_depth(self) -> Tuple[str, ...]:
+        """Full per-layer pattern for the decoder stack."""
+        pat = []
+        i = 0
+        while len(pat) < self.num_layers:
+            pat.append(self.block_pattern[i % len(self.block_pattern)])
+            i += 1
+        return tuple(pat[: self.num_layers])
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # --- analytics ---------------------------------------------------------
+    def param_count(self) -> int:
+        """Total parameters (embeddings + blocks), for roofline MODEL_FLOPS."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        hd, nh, nkv = self.head_dim, self.num_heads, self.num_kv_heads
+        total = v * d * (1 if self.tie_embeddings else 2)
+        pat = self.pattern_for_depth()
+        for li, kind in enumerate(pat):
+            total += 2 * d  # norms
+            if kind == "attn":
+                total += d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+            elif kind == "mamba":
+                di = self.ssm_expand * d
+                total += d * 2 * di + di * self.ssm_conv + di * (2 * self.ssm_state + 2) + di * d
+            elif kind in ("slstm", "mlstm"):
+                dp = int(self.xlstm_proj_factor * d)
+                total += 2 * d * dp + dp * d + 4 * dp * dp // max(self.num_heads, 1)
+            if kind == "attn" or self.family in ("moe", "hybrid", "dense", "vlm", "encdec"):
+                if self.is_moe and (li % self.moe_every == self.moe_every - 1):
+                    total += self.num_experts * 3 * d * self.expert_ff + d * self.num_experts
+                elif kind == "attn" or self.family != "ssm":
+                    if ff > 0:
+                        mult = 3 if self.act == "swiglu" else 2
+                        total += mult * d * ff
+        if self.encoder_layers:
+            # encoder blocks + cross-attention in decoder
+            total += self.encoder_layers * (4 * d * d + 2 * d * ff + 4 * d)
+            total += self.num_layers * (4 * d * d + 2 * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k of E experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        n_moe_layers = sum(1 for li in range(self.num_layers)
+                           if li % self.moe_every == self.moe_every - 1)
+        all_exp = n_moe_layers * self.num_experts * 3 * d * self.expert_ff
+        act_exp = n_moe_layers * self.num_experts_per_tok * 3 * d * self.expert_ff
+        return total - all_exp + act_exp
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+# the four assigned shape cells (LM shapes: seq_len x global_batch)
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+_REGISTRY: Dict[str, "ModelConfig"] = {}
+_REDUCED: Dict[str, "ModelConfig"] = {}
+
+
+def register(cfg: ModelConfig, reduced: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    _REDUCED[cfg.name] = reduced
+    return cfg
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    from . import ALL_ARCHS  # ensure modules imported  # noqa: F401
+    table = _REDUCED if reduced else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]
+
+
+def list_archs() -> Tuple[str, ...]:
+    from . import ALL_ARCHS
+    return tuple(ALL_ARCHS)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, per the assignment brief."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention (skip: full-attn arch)"
+    return True, ""

@@ -1,0 +1,16 @@
+"""granite-34b [dense]: llama-arch, MQA (kv=1), code model. [arXiv:2405.04324]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="granite-34b", family="dense",
+    num_layers=88, d_model=6144, num_heads=48, num_kv_heads=1,
+    d_ff=24576, vocab_size=49152,
+    act="gelu",  # granite code models use gpt-bigcode style MLP
+)
+
+REDUCED = FULL.replace(
+    num_layers=2, d_model=64, num_heads=8, num_kv_heads=1, head_dim=0,
+    d_ff=128, vocab_size=256, scan_layers=False,
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,15 @@
+"""granite-3-8b [dense]: GQA kv=8. [hf:ibm-granite/granite-3.0-2b-base]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="granite-3-8b", family="dense",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=12800, vocab_size=49155,
+)
+
+REDUCED = FULL.replace(
+    num_layers=2, d_model=64, num_heads=8, num_kv_heads=2, head_dim=0,
+    d_ff=128, vocab_size=256, scan_layers=False,
+)
+
+register(FULL, REDUCED)

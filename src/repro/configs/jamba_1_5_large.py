@@ -1,0 +1,24 @@
+"""jamba-1.5-large-398b [hybrid]: Mamba+attn 1:7 interleave, MoE 16e top-2
+every other layer. [arXiv:2403.19887]"""
+from .base import ModelConfig, register
+
+# period-8 block pattern: attention at position 4, mamba elsewhere (1:7)
+_PATTERN = ("mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba")
+
+FULL = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    num_layers=72, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=24576, vocab_size=65536,
+    block_pattern=_PATTERN,
+    num_experts=16, num_experts_per_tok=2, moe_d_ff=24576, moe_every=2,
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+    sub_quadratic=True, optimizer="adafactor",
+)
+
+REDUCED = FULL.replace(
+    num_layers=8, d_model=64, num_heads=8, num_kv_heads=4, head_dim=0,
+    d_ff=128, vocab_size=256, num_experts=4, num_experts_per_tok=2,
+    moe_d_ff=128, scan_layers=False, optimizer="adamw",
+)
+
+register(FULL, REDUCED)

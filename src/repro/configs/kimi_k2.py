@@ -1,0 +1,20 @@
+"""kimi-k2-1t-a32b [moe]: trillion-param MoE, 384 experts top-8.
+[arXiv:2501.kimi2 paper-table]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+    d_ff=2048, vocab_size=163840,
+    head_dim=112,
+    num_experts=384, num_experts_per_tok=8, moe_d_ff=2048, moe_every=1,
+    rope_theta=5e4, optimizer="adafactor",
+)
+
+REDUCED = FULL.replace(
+    num_layers=2, d_model=64, num_heads=8, num_kv_heads=4, head_dim=8,
+    d_ff=96, vocab_size=256, num_experts=8, num_experts_per_tok=2,
+    moe_d_ff=96, scan_layers=False, optimizer="adamw",
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,19 @@
+"""llama4-maverick-400b-a17b [moe]: 128 experts top-1 (Switch-style), early
+fusion. [hf:meta-llama/Llama-4-Scout-17B-16E]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=8192, vocab_size=202048,
+    num_experts=128, num_experts_per_tok=1, moe_d_ff=8192, moe_every=2,
+    rope_theta=5e5, optimizer="adafactor",
+)
+
+REDUCED = FULL.replace(
+    num_layers=2, d_model=64, num_heads=8, num_kv_heads=4, head_dim=0,
+    d_ff=96, vocab_size=256, num_experts=4, num_experts_per_tok=1,
+    moe_d_ff=96, scan_layers=False, optimizer="adamw",
+)
+
+register(FULL, REDUCED)

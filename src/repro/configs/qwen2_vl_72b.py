@@ -1,0 +1,20 @@
+"""qwen2-vl-72b [vlm]: M-RoPE, dynamic resolution (patch frontend stub).
+[arXiv:2409.12191]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=29568, vocab_size=152064,
+    mrope=True, mrope_sections=(16, 56, 56),  # t/h/w sections of head_dim/2
+    frontend="vision_stub", frontend_len=64,
+    rope_theta=1e6, optimizer="adafactor",
+)
+
+REDUCED = FULL.replace(
+    num_layers=2, d_model=64, num_heads=8, num_kv_heads=4, head_dim=0,
+    d_ff=160, vocab_size=256, frontend_len=8, mrope_sections=(2, 3, 3),
+    scan_layers=False, optimizer="adamw",
+)
+
+register(FULL, REDUCED)

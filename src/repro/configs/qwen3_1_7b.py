@@ -1,0 +1,16 @@
+"""qwen3-1.7b [dense]: qk_norm, GQA kv=8. [hf:Qwen/Qwen3-8B]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="qwen3-1.7b", family="dense",
+    num_layers=28, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=6144, vocab_size=151936,
+    use_qk_norm=True, rope_theta=1e6, tie_embeddings=True,
+)
+
+REDUCED = FULL.replace(
+    num_layers=2, d_model=64, num_heads=8, num_kv_heads=4, head_dim=0,
+    d_ff=128, vocab_size=256, scan_layers=False,
+)
+
+register(FULL, REDUCED)

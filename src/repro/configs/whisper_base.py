@@ -1,0 +1,19 @@
+"""whisper-base [audio]: enc-dec, conv frontend stub. [arXiv:2212.04356]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="whisper-base", family="encdec",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab_size=51865,
+    encoder_layers=6, frontend="audio_stub", frontend_len=1500,
+    norm_kind="layernorm", act="gelu", rope_theta=0.0,  # learned/sinusoidal pos
+    tie_embeddings=True, sub_quadratic=False,
+)
+
+REDUCED = FULL.replace(
+    name="whisper-base", num_layers=2, encoder_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=4, head_dim=0, d_ff=128, vocab_size=256,
+    frontend_len=32, scan_layers=False,
+)
+
+register(FULL, REDUCED)

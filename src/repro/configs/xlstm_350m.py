@@ -1,0 +1,18 @@
+"""xlstm-350m [ssm]: alternating sLSTM + mLSTM blocks, d_ff=0 (projection
+inside the blocks). [arXiv:2405.04517]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="xlstm-350m", family="ssm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    block_pattern=("mlstm", "slstm"), xlstm_proj_factor=2.0,
+    sub_quadratic=True, tie_embeddings=True,
+)
+
+REDUCED = FULL.replace(
+    num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=0,
+    vocab_size=256, scan_layers=False,
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,16 @@
+"""yi-6b [dense]: llama-arch GQA kv=4. [arXiv:2403.04652]"""
+from .base import ModelConfig, register
+
+FULL = ModelConfig(
+    name="yi-6b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=4,
+    d_ff=11008, vocab_size=64000,
+    rope_theta=5e6,
+)
+
+REDUCED = FULL.replace(
+    num_layers=2, d_model=64, num_heads=8, num_kv_heads=2, head_dim=0,
+    d_ff=128, vocab_size=256, scan_layers=False,
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,200 @@
+"""Elastic multi-pod training runtime driven by AllConcur+.
+
+Each pod leader is an AllConcur+ server; protocol round r carries that pod's
+contribution to training step r (gradient summary + data watermark +
+checkpoint id).  A-delivery of round r == global commit of step r: every pod
+deterministically merges the delivered set (gradient averaging) and applies
+the optimizer, so all pods hold identical state without any parameter
+server — the paper's leaderless distributed agreement applied to training.
+
+Fault tolerance comes from the protocol itself:
+  - pod crash -> heartbeat FD -> reliable round -> membership shrink,
+  - rollback: rounds not yet A-delivered are re-run; payloads are cached per
+    round (the paper's validity requirement: reruns re-broadcast the same
+    message), so recovery is exact,
+  - checkpoints: a pod A-broadcasts its checkpoint id; once the round is
+    A-delivered on every pod the checkpoint is globally committed and
+    becomes the agreed restart point,
+  - elastic shrink: on membership change, the data pipeline re-partitions
+    deterministically over the survivors,
+  - stragglers: a slow pod may contribute an empty payload for a round
+    (deterministic-merge "skip" policy from the paper's §V discussion);
+    delivered rounds average over the gradients actually present.
+
+This in-process runtime is the control-plane logic a real deployment would
+run over TCP between pod leaders; the data plane (per-pod SPMD training)
+uses the jit'd train steps from repro.train.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.cluster import Cluster
+from ..core.server import DeliveryRecord, Mode
+from ..models import init_params, model_specs
+from ..train import (CheckpointManager, DataPipeline, OptConfig, cross_entropy,
+                     make_loss_fn, opt_state_specs, tree_hash)
+from ..train.compression import (CompressionConfig, GradCompressor,
+                                 decompress)
+from ..train.optimizer import apply_updates
+from ..models.params import init_params as init_tree
+
+
+@dataclass
+class PodState:
+    pid: int
+    params: Any
+    opt_state: Any
+    pipeline: DataPipeline
+    committed_step: int = 0
+    grad_cache: Dict[int, Any] = field(default_factory=dict)
+    applied_rounds: List[int] = field(default_factory=list)
+    losses: Dict[int, float] = field(default_factory=dict)
+    ckpt: Optional[CheckpointManager] = None
+    last_committed_ckpt: int = 0
+    hash_history: Dict[int, str] = field(default_factory=dict)
+
+
+class ElasticTrainer:
+    """n_pods data-parallel pods coordinated by AllConcur+."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, n_pods: int,
+                 *, d_reliable: int = 3, seed: int = 0,
+                 oc: Optional[OptConfig] = None,
+                 ckpt_dirs: Optional[List[str]] = None,
+                 ckpt_every: int = 0,
+                 straggler_skip: Optional[Dict[int, int]] = None,
+                 compression: Optional[CompressionConfig] = None):
+        self.cfg = cfg
+        self.shape = shape
+        self.oc = oc or OptConfig(lr=1e-3, warmup_steps=2, decay_steps=100)
+        self.n_pods = n_pods
+        self.ckpt_every = ckpt_every
+        self.straggler_skip = straggler_skip or {}
+        self.compression = compression or CompressionConfig()
+        self._compressors: Dict[int, GradCompressor] = {}
+
+        specs = model_specs(cfg)
+        key = jax.random.PRNGKey(seed)
+        params0 = init_params(specs, key, dtype=jnp.float32)
+        opt0 = init_tree(opt_state_specs(self.oc, specs), key, dtype=jnp.float32)
+        self.loss_fn = jax.jit(jax.value_and_grad(make_loss_fn(cfg), has_aux=True))
+
+        self.pods: Dict[int, PodState] = {}
+        for pid in range(n_pods):
+            self.pods[pid] = PodState(
+                pid=pid,
+                params=params0,
+                opt_state=opt0,
+                pipeline=DataPipeline(cfg, shape, seed=seed,
+                                      n_shards=n_pods, my_shard=pid),
+                ckpt=(CheckpointManager(ckpt_dirs[pid]) if ckpt_dirs else None),
+            )
+
+        self.cluster = Cluster(
+            n_pods, d=d_reliable, mode=Mode.DUAL, seed=seed,
+            payload_fn=self._payload_for,
+        )
+        for pid, srv in self.cluster.servers.items():
+            srv.on_deliver_cb = (lambda p: (lambda rec: self._on_deliver(p, rec)))(pid)
+
+    # ----------------------------------------------------------- data plane
+    def _compute_grad(self, pid: int, rnd: int):
+        pod = self.pods[pid]
+        if rnd in pod.grad_cache:
+            return pod.grad_cache[rnd]
+        batch = pod.pipeline.batch_at(rnd)
+        (loss, _), grads = self.loss_fn(pod.params, batch)
+        comp = self._compressors.setdefault(
+            pid, GradCompressor(self.compression))
+        host = comp.compress(grads)   # cross-pod gradient compression (DCN)
+        pod.grad_cache[rnd] = {"grad": host, "loss": float(loss)}
+        return pod.grad_cache[rnd]
+
+    def _payload_for(self, pid: int, rnd: int) -> Dict[str, Any]:
+        """The paper's validity requirement: the same payload is re-broadcast
+        when a round is rerun — grad_cache keys by round."""
+        skip_until = self.straggler_skip.get(pid, 0)
+        if rnd <= skip_until:
+            payload = {"empty": True, "pod": pid}
+        else:
+            g = self._compute_grad(pid, rnd)
+            payload = {"grad": g["grad"], "loss": g["loss"], "pod": pid}
+        if self.ckpt_every and rnd % self.ckpt_every == 0:
+            payload["ckpt_step"] = rnd
+        return payload
+
+    # -------------------------------------------------------- commit (A-del)
+    def _on_deliver(self, pid: int, rec: DeliveryRecord) -> None:
+        pod = self.pods[pid]
+        grads = [decompress(m.payload["grad"]) for m in rec.msgs
+                 if m.payload and not m.payload.get("empty")]
+        if grads:
+            avg = jax.tree_util.tree_map(
+                lambda *gs: jnp.asarray(np.mean(np.stack(gs), axis=0)), *grads)
+            pod.params, pod.opt_state, _ = apply_updates(
+                self.oc, avg, pod.opt_state, pod.params)
+        pod.applied_rounds.append(rec.round)
+        pod.committed_step = rec.round
+        pod.hash_history[rec.round] = tree_hash({"params": pod.params})
+        losses = [m.payload["loss"] for m in rec.msgs
+                  if m.payload and not m.payload.get("empty")]
+        if losses:
+            pod.losses[rec.round] = float(np.mean(losses))
+        # garbage-collect grad cache for committed rounds
+        for r in [r for r in pod.grad_cache if r <= rec.round]:
+            pod.grad_cache.pop(r, None)
+        # checkpoint commit: every pod delivered the ckpt marker round
+        if self.ckpt_every and any(
+                m.payload and m.payload.get("ckpt_step") for m in rec.msgs):
+            if pod.ckpt is not None:
+                pod.ckpt.save(rec.round, {"params": pod.params},
+                              {"committed_round": rec.round})
+            pod.last_committed_ckpt = rec.round
+
+    # ------------------------------------------------------------- controls
+    def start(self) -> None:
+        self.cluster.start()
+
+    def run_rounds(self, target_rounds: int, max_steps: int = 2_000_000) -> bool:
+        return self.cluster.run_until(
+            lambda: all(self.pods[p].committed_step >= target_rounds
+                        for p in self.alive()),
+            max_steps=max_steps)
+
+    def crash_pod(self, pid: int, partial_sends: Optional[int] = None) -> None:
+        self.cluster.crash(pid, partial_sends=partial_sends)
+
+    def alive(self) -> List[int]:
+        return self.cluster.alive()
+
+    def repartition_all(self) -> None:
+        """Elastic shrink: survivors re-partition the data deterministically
+        (each pod derives the same mapping from the agreed membership)."""
+        for pid in self.alive():
+            members = self.cluster.servers[pid].members
+            self.pods[pid].pipeline.repartition(len(members),
+                                                members.index(pid))
+
+    # ------------------------------------------------------------ invariants
+    def params_hash(self, pid: int) -> str:
+        return tree_hash({"params": self.pods[pid].params})
+
+    def all_pods_identical(self) -> bool:
+        """Agreement invariant: for every round committed by several pods,
+        the post-commit parameter hashes are identical."""
+        alive = self.alive()
+        if not alive:
+            return True
+        common: Dict[int, set] = {}
+        for p in alive:
+            for rnd, h in self.pods[p].hash_history.items():
+                common.setdefault(rnd, set()).add(h)
+        return all(len(hs) == 1 for hs in common.values())

@@ -1,0 +1,20 @@
+# The paper's primary contribution: AllConcur+ — leaderless concurrent
+# atomic broadcast over dual overlay digraphs (unreliable G_U + reliable G_R).
+from .digraph import (Digraph, binomial_digraph, binomial_schedule,
+                      circulant_digraph, gs_digraph, resilience_degree,
+                      ring_digraph)
+from .messages import (FailNotification, Heartbeat, Message, MsgKind,
+                       PartitionMarker, RoundType)
+from .overlay import BinomialOverlay, RingOverlay, UnreliableOverlay, make_overlay
+from .server import AllConcurServer, DeliveryRecord, Mode, Transition
+from .tracking import TrackingDigraph, TrackingState
+from .cluster import Cluster
+
+__all__ = [
+    "AllConcurServer", "BinomialOverlay", "Cluster", "DeliveryRecord",
+    "Digraph", "FailNotification", "Heartbeat", "Message", "Mode", "MsgKind",
+    "PartitionMarker", "RingOverlay", "RoundType", "TrackingDigraph",
+    "TrackingState", "Transition", "UnreliableOverlay", "binomial_digraph",
+    "binomial_schedule", "circulant_digraph", "gs_digraph", "make_overlay",
+    "resilience_degree", "ring_digraph",
+]

@@ -1,0 +1,169 @@
+"""Deterministic in-process cluster for protocol testing.
+
+Channels are FIFO queues per directed (src, dst) pair (the paper's FIFO
+reliable channels).  A scheduler (seeded RNG or strict round-robin) picks the
+next non-empty channel and delivers its head message.  Crashes: a crashed
+server stops processing and sending; a crash can optionally truncate the
+sends of its final action (to model "p0 sent m0 only to p5 and then failed",
+Fig. 1).
+
+This harness is for *correctness* (hypothesis drives it through thousands of
+schedules); timing/throughput live in ``repro.sim``.
+"""
+from __future__ import annotations
+
+import random
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .digraph import Digraph, gs_digraph
+from .messages import FailNotification, Message, MsgKind
+from .overlay import BinomialOverlay, UnreliableOverlay, make_overlay
+from .server import AllConcurServer, DeliveryRecord, Mode
+
+
+class Cluster:
+    def __init__(
+        self,
+        n: int,
+        d: int = 3,
+        *,
+        mode: Mode = Mode.DUAL,
+        overlay: str = "binomial",
+        uniform: bool = False,
+        primary_partition: bool = False,
+        payload_fn: Optional[Callable[[int, int], Any]] = None,
+        seed: int = 0,
+    ):
+        self.n = n
+        self.members = list(range(n))
+        self.rng = random.Random(seed)
+        payload_fn = payload_fn or (lambda sid, rnd: f"p{sid}:r{rnd}")
+        self.servers: Dict[int, AllConcurServer] = {}
+        f = max(d - 1, 0)
+        for sid in self.members:
+            self.servers[sid] = AllConcurServer(
+                sid,
+                self.members,
+                overlay_u=make_overlay(overlay, self.members),
+                g_r=gs_digraph(self.members, d),
+                mode=mode,
+                payload_for=(lambda s: (lambda r: payload_fn(s, r)))(sid),
+                uniform=uniform,
+                f=f,
+                primary_partition=primary_partition,
+            )
+        self.channels: Dict[Tuple[int, int], deque] = {}
+        self.crashed: Set[int] = set()
+        self.fd_pending: List[Tuple[int, int]] = []  # (target, detector)
+        self.steps = 0
+
+    # ----------------------------------------------------------------- wiring
+    def start(self) -> None:
+        for s in self.servers.values():
+            s.start()
+            self._drain(s)
+
+    def _drain(self, server: AllConcurServer, allow: Optional[int] = None) -> None:
+        """Move messages from a server's outbox into channels.  ``allow``
+        truncates to the first ``allow`` sends (crash mid-send)."""
+        out = server.outbox
+        server.outbox = []
+        if server.sid in self.crashed:
+            if allow is None:
+                return
+            out = out[:allow]
+        for dst, msg in out:
+            if dst == server.sid:
+                continue
+            self.channels.setdefault((server.sid, dst), deque()).append(msg)
+
+    # ---------------------------------------------------------------- control
+    def crash(self, sid: int, partial_sends: Optional[int] = None) -> None:
+        """Crash ``sid``.  Pending outbox truncated to ``partial_sends``
+        messages (None = all already-queued sends still go out).  Successors
+        of sid in each alive server's G_R will detect the failure (queued as
+        FD events, delivered by the scheduler)."""
+        if sid in self.crashed:
+            return
+        srv = self.servers[sid]
+        self._drain(srv, allow=(partial_sends if partial_sends is not None else None))
+        self.crashed.add(sid)
+        srv.outbox = []
+        # perfect FD: detection is by successors of sid in G_R (local FD)
+        g_r = srv.g_r
+        for det in g_r.successors(sid):
+            if det not in self.crashed:
+                self.fd_pending.append((sid, det))
+
+    # -------------------------------------------------------------- scheduler
+    def pending_channels(self) -> List[Tuple[int, int]]:
+        return [ch for ch, q in self.channels.items() if q and ch[1] not in self.crashed]
+
+    def step(self) -> bool:
+        """Deliver one message (or one FD event).  Returns False if nothing
+        is pending.
+
+        FD events for (target, det) are only eligible once the FIFO channel
+        target->det has drained: heartbeats travel the same channel as
+        messages, so a timeout implies everything the target sent before
+        crashing has arrived (Proposition III.14's premise)."""
+        self.steps += 1
+        choices: List[Tuple[str, Any]] = []
+        for ch in self.pending_channels():
+            choices.append(("msg", ch))
+        for i, fd in enumerate(self.fd_pending):
+            target, det = fd
+            if det not in self.crashed and not self.channels.get((target, det)):
+                choices.append(("fd", i))
+        if not choices:
+            return False
+        kind, pick = self.rng.choice(choices)
+        if kind == "msg":
+            src, dst = pick
+            msg = self.channels[(src, dst)].popleft()
+            srv = self.servers[dst]
+            if not srv.halted:
+                srv.on_message(msg)
+                self._drain(srv)
+        else:
+            target, det = self.fd_pending.pop(pick)
+            srv = self.servers[det]
+            if not srv.halted and det not in self.crashed:
+                srv.on_failure_detected(target)
+                self._drain(srv)
+        return True
+
+    def run(self, max_steps: int = 2_000_000) -> int:
+        k = 0
+        while k < max_steps and self.step():
+            k += 1
+        return k
+
+    def run_until(self, pred: Callable[[], bool], max_steps: int = 2_000_000) -> bool:
+        k = 0
+        while k < max_steps:
+            if pred():
+                return True
+            if not self.step():
+                return pred()
+            k += 1
+        return pred()
+
+    # ------------------------------------------------------------- inspection
+    def alive(self) -> List[int]:
+        return [sid for sid in self.members
+                if sid not in self.crashed and not self.servers[sid].halted]
+
+    def deliveries(self, sid: int) -> List[DeliveryRecord]:
+        return self.servers[sid].delivered
+
+    def delivered_payload_streams(self) -> Dict[int, List[Any]]:
+        return {sid: [m.payload for m in self.servers[sid].adelivered]
+                for sid in self.alive()}
+
+    def min_delivered_rounds(self) -> int:
+        alive = self.alive()
+        if not alive:
+            return 0
+        return min(len(self.servers[s].delivered) for s in alive)

@@ -1,0 +1,82 @@
+"""Message types for AllConcur+.
+
+Messages are uniquely identified by (source id, epoch, round, round type);
+failure notifications by (target id, owner id) — per paper §III-F.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+
+class RoundType(enum.Enum):
+    UNRELIABLE = 0
+    RELIABLE = 1
+
+
+class MsgKind(enum.Enum):
+    BCAST = 0       # unreliable A-broadcast message (travels G_U)
+    RBCAST = 1      # reliable A-broadcast message (travels G_R)
+    FAIL = 2        # failure notification (R-broadcast on G_R)
+    HEARTBEAT = 3   # FD heartbeat (G_R edges)
+    FWD = 4         # primary-partition forward marker (G_R)
+    BWD = 5         # primary-partition backward marker (G_R transpose)
+
+
+@dataclass(frozen=True)
+class Message:
+    """An A-broadcast protocol message."""
+    kind: MsgKind
+    src: int                 # sender(m) — the origin server
+    epoch: int
+    round: int
+    payload: Any = None      # application payload (batch of transactions)
+    eon: int = 0
+
+    @property
+    def rtype(self) -> RoundType:
+        return RoundType.RELIABLE if self.kind == MsgKind.RBCAST else RoundType.UNRELIABLE
+
+    @property
+    def uid(self) -> Tuple[int, int, int, int]:
+        return (self.src, self.epoch, self.round, self.kind.value)
+
+    def __repr__(self) -> str:  # compact debugging
+        tag = {MsgKind.BCAST: "m", MsgKind.RBCAST: "M"}.get(self.kind, self.kind.name)
+        return f"{tag}{self.src}@({self.epoch},{self.round})"
+
+
+@dataclass(frozen=True)
+class FailNotification:
+    """R-broadcast notification that ``target`` failed, detected by ``owner``
+    (a successor of target in G_R)."""
+    target: int
+    owner: int
+    eon: int = 0
+
+    @property
+    def uid(self) -> Tuple[int, int]:
+        return (self.target, self.owner)
+
+    def __repr__(self) -> str:
+        return f"fn({self.target}<-{self.owner})"
+
+
+@dataclass(frozen=True)
+class Heartbeat:
+    src: int
+    seq: int
+    eon: int = 0
+
+
+@dataclass(frozen=True)
+class PartitionMarker:
+    """Forward/backward markers of the primary-partition mechanism (§III-H):
+    after completing a reliable round, each server R-broadcasts a forward
+    marker on G_R and a backward marker on G_R^T; A-delivery waits for both
+    markers from a majority."""
+    forward: bool
+    src: int
+    epoch: int
+    round: int

@@ -1,0 +1,99 @@
+"""Unreliable-overlay routing (G_U).
+
+The paper's unreliable digraph has kappa(G_U)=1 and enables *minimal-work*
+dissemination: per A-broadcast message, every server receives it exactly once
+and the total number of sends is n-1.  AllConcur+ instantiates it with the
+AllGather mechanism — every server disseminates its message along a binomial
+tree rooted at itself (§IV).  Routing is therefore *source-dependent*: the
+next hops for message m depend on m's origin.
+
+We also provide a ring overlay (the circular digraph of §I / LCR) as an
+alternative G_U.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Set
+
+
+class UnreliableOverlay:
+    """Base: source-rooted routing over an ordered membership."""
+
+    kind = "abstract"
+
+    def __init__(self, members: Sequence[int]):
+        self.members: List[int] = sorted(members)
+        self._pos: Dict[int, int] = {m: i for i, m in enumerate(self.members)}
+        self.vertex_set: Set[int] = set(self.members)
+
+    @property
+    def n(self) -> int:
+        return len(self.members)
+
+    @property
+    def vertices(self) -> List[int]:
+        return list(self.members)
+
+    def __contains__(self, v: int) -> bool:
+        return v in self.vertex_set
+
+    def rebuild(self, members: Sequence[int]) -> "UnreliableOverlay":
+        return type(self)(members)
+
+    def next_hops(self, src: int, sid: int) -> List[int]:
+        raise NotImplementedError
+
+    def depth(self) -> int:
+        """Dissemination depth in hops (latency proxy)."""
+        raise NotImplementedError
+
+
+class BinomialOverlay(UnreliableOverlay):
+    """Binomial-tree-per-source (AllGather dissemination).
+
+    Relative position p (w.r.t. the source) sends to p + 2^k for every k with
+    2^k > p and p + 2^k < n: every server receives each message exactly once;
+    n-1 total sends; ceil(log2 n) steps."""
+
+    kind = "binomial"
+
+    def next_hops(self, src: int, sid: int) -> List[int]:
+        if src not in self._pos or sid not in self._pos:
+            return []
+        n = self.n
+        p = (self._pos[sid] - self._pos[src]) % n
+        hops: List[int] = []
+        k = 1
+        while k < n:
+            if k > p and p + k < n:
+                hops.append(self.members[(self._pos[src] + p + k) % n])
+            k <<= 1
+        return hops
+
+    def depth(self) -> int:
+        return max(1, (self.n - 1).bit_length())
+
+
+class RingOverlay(UnreliableOverlay):
+    """Circular digraph: each message travels the ring (n-1 hops)."""
+
+    kind = "ring"
+
+    def next_hops(self, src: int, sid: int) -> List[int]:
+        if src not in self._pos or sid not in self._pos:
+            return []
+        n = self.n
+        p = (self._pos[sid] - self._pos[src]) % n
+        if p == n - 1:
+            return []  # last server on the ring: stop
+        return [self.members[(self._pos[sid] + 1) % n]]
+
+    def depth(self) -> int:
+        return max(1, self.n - 1)
+
+
+def make_overlay(kind: str, members: Sequence[int]) -> UnreliableOverlay:
+    if kind == "binomial":
+        return BinomialOverlay(members)
+    if kind == "ring":
+        return RingOverlay(members)
+    raise ValueError(f"unknown overlay kind: {kind}")

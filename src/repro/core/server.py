@@ -1,0 +1,534 @@
+"""AllConcur+ server — the paper's Algorithms 1–5 (+ Table II), faithfully.
+
+The server is transport-agnostic and wall-clock-free: events come in through
+``on_message`` / ``on_failure_detected``; outgoing messages are appended to
+``outbox`` as ``(dst, wire_message)`` pairs and drained by the caller (the
+discrete-event simulator, the test harness, or the training coordinator).
+
+Modes:
+  DUAL            — AllConcur+ (the paper's contribution)
+  RELIABLE_ONLY   — AllConcur  (baseline: every round reliable, early term.)
+  UNRELIABLE_ONLY — AllGather  (baseline: non-fault-tolerant dissemination)
+
+Optional features (paper §III-H, §III-I, Appendix C):
+  uniform=True           — round stability (delay unreliable A-delivery until
+                           >= f messages of round r+2 are received)
+  primary_partition=True — eventual-accuracy mode: completion of a reliable
+                           round additionally requires forward/backward
+                           markers from a majority (Kosaraju-style check)
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .digraph import Digraph, gs_digraph
+from .messages import FailNotification, Message, MsgKind, PartitionMarker, RoundType
+from .overlay import BinomialOverlay, UnreliableOverlay
+from .tracking import TrackingState
+
+FailurePair = Tuple[int, int]
+
+
+class Mode(enum.Enum):
+    DUAL = "allconcur+"
+    RELIABLE_ONLY = "allconcur"
+    UNRELIABLE_ONLY = "allgather"
+
+
+@dataclass(frozen=True)
+class DeliveryRecord:
+    """One A-delivered round: messages in deterministic (src-sorted) order."""
+    epoch: int
+    round: int
+    rtype: RoundType
+    msgs: Tuple[Message, ...]
+
+    @property
+    def payloads(self) -> Tuple[Any, ...]:
+        return tuple(m.payload for m in self.msgs)
+
+
+class Transition(enum.Enum):
+    T_UU = "uu"     # [e,r]   -> [e,r+1]
+    T_RNF = "r>"    # [[e,r]] -> [e,r+1]>
+    T_UR = "ur"     # [e,r]   -> [[e+1,r-1]]
+    T_NFR = ">r"    # [e,r]>  -> [[e+1,r]]
+    T_RR = "rr"     # [[e,r]] -> [[e+1,r+1]]
+    T_SK = "sk"     # [[e,r]] -> [[e,r+1]]
+
+
+class AllConcurServer:
+    """One protocol participant (vertex p_i)."""
+
+    def __init__(
+        self,
+        sid: int,
+        members: Sequence[int],
+        overlay_u: Optional[UnreliableOverlay] = None,
+        g_r: Optional[Digraph] = None,
+        *,
+        mode: Mode = Mode.DUAL,
+        payload_for: Optional[Callable[[int], Any]] = None,
+        on_deliver: Optional[Callable[[DeliveryRecord], None]] = None,
+        d_reliable: int = 3,
+        uniform: bool = False,
+        f: int = 0,
+        primary_partition: bool = False,
+    ):
+        self.sid = sid
+        self.members: List[int] = sorted(members)
+        self.ov_u = overlay_u if overlay_u is not None else BinomialOverlay(self.members)
+        self.g_r = g_r if g_r is not None else gs_digraph(self.members, d_reliable)
+        self.mode = mode
+        self.payload_for = payload_for or (lambda r: None)
+        self.on_deliver_cb = on_deliver
+        self.uniform = uniform
+        self.f = f
+        self.primary_partition = primary_partition
+
+        # -- state machine ([e, r], round type, |> marker) -------------------
+        self.epoch = 1
+        self.round = 0
+        self.rtype = RoundType.RELIABLE  # initial state [[1,0]] (virtual)
+        self.first_unreliable = False    # the |> marker
+        self.eon = 0
+
+        # -- message sets ----------------------------------------------------
+        self.M: Dict[int, Message] = {}
+        self.M_prev: Dict[int, Message] = {}
+        self.M_next: Dict[int, Message] = {}
+        # uniform mode: completed unreliable round awaiting round stability
+        self._uniform_pending: Optional[Tuple[int, int, Dict[int, Message]]] = None
+
+        self.F: List[FailurePair] = []   # valid failure notifications (ordered)
+        self._fset: Set[FailurePair] = set()
+        self.tracking = TrackingState(self.g_r)
+
+        # -- outputs ---------------------------------------------------------
+        self.outbox: List[Tuple[int, Any]] = []
+        self.delivered: List[DeliveryRecord] = []
+        self.adelivered: List[Message] = []   # flat total-order stream
+        self._delivered_rounds: Set[int] = set()
+        self.transitions: List[Tuple[Transition, int, int]] = []
+
+        # primary-partition markers per (epoch, round): sid -> [fwd, bwd]
+        self._markers: Dict[Tuple[int, int], Dict[int, List[bool]]] = {}
+        self._marker_sent: Set[Tuple[int, int]] = set()
+        self._n0 = len(self.members)     # initial n (majority base)
+
+        # eons (§III-I)
+        self._pending_gr_update: Optional[Callable[[Sequence[int]], Digraph]] = None
+        self._next_eon_buffer: List[Message] = []
+
+        self.halted = False              # not in surviving partition / removed
+
+    # ------------------------------------------------------------------ api
+    def start(self) -> None:
+        """Initial transition [[1,0]] -> [1,1]|> (the virtual reliable round 0
+        is considered completed with no messages A-broadcast)."""
+        if self.mode == Mode.RELIABLE_ONLY:
+            self.epoch, self.round = 1, 1
+            self.rtype = RoundType.RELIABLE
+            self.tracking.reset(self.g_r)
+        else:
+            self.epoch, self.round = 1, 1
+            self.rtype = RoundType.UNRELIABLE
+            self.first_unreliable = True
+        self._maybe_abroadcast()
+
+    @property
+    def state(self) -> Tuple[int, int, str]:
+        marker = ("R" if self.rtype == RoundType.RELIABLE
+                  else ("U>" if self.first_unreliable else "U"))
+        return (self.epoch, self.round, marker)
+
+    def alive_view(self) -> List[int]:
+        return list(self.members)
+
+    # --------------------------------------------------------------- sending
+    def _send(self, dst: int, msg: Any) -> None:
+        self.outbox.append((dst, msg))
+
+    def _broadcast_u(self, m: Message) -> None:
+        """broadcast() — Algorithm 1 lines 10-12.  Dissemination is
+        source-rooted (binomial tree per origin): minimal work."""
+        if m.src in self.M:
+            return
+        for q in self.ov_u.next_hops(m.src, self.sid):
+            self._send(q, m)
+        self.M[m.src] = m
+
+    def _broadcast_r(self, m: Message) -> None:
+        """R-broadcast() — Algorithm 1 lines 13-16."""
+        if m.src in self.M:
+            return
+        for q in self.g_r.successors(self.sid):
+            self._send(q, m)
+        self.M[m.src] = m
+        self.tracking.stop_tracking(m.src)
+
+    def _maybe_abroadcast(self) -> None:
+        """Main-loop A-broadcast of own message (Algorithm 1 line 3)."""
+        if self.halted:
+            return
+        if self.sid in self.M:
+            return
+        kind = (MsgKind.RBCAST if self.rtype == RoundType.RELIABLE else MsgKind.BCAST)
+        m = Message(kind, self.sid, self.epoch, self.round,
+                    payload=self.payload_for(self.round), eon=self.eon)
+        if kind == MsgKind.BCAST:
+            self._broadcast_u(m)
+        else:
+            self._broadcast_r(m)
+
+    # -------------------------------------------------------------- delivery
+    def _adeliver_round(self, epoch: int, rnd: int, rtype: RoundType,
+                        msgs: Dict[int, Message]) -> None:
+        if rnd in self._delivered_rounds:
+            return  # integrity: every round A-delivered at most once
+        ordered = tuple(msgs[k] for k in sorted(msgs.keys()))
+        rec = DeliveryRecord(epoch, rnd, rtype, ordered)
+        self.delivered.append(rec)
+        self._delivered_rounds.add(rnd)
+        self.adelivered.extend(ordered)
+        if self.on_deliver_cb:
+            self.on_deliver_cb(rec)
+
+    # ---------------------------------------------------------------- events
+    def on_message(self, msg: Any) -> None:
+        if self.halted:
+            return
+        if isinstance(msg, Message):
+            if msg.kind == MsgKind.BCAST:
+                self._handle_bcast(msg)
+            elif msg.kind == MsgKind.RBCAST:
+                self._handle_rbcast(msg)
+        elif isinstance(msg, FailNotification):
+            self._handle_fail(msg.target, msg.owner, eon=msg.eon)
+        elif isinstance(msg, PartitionMarker):
+            self._handle_marker(msg)
+
+    def on_failure_detected(self, target: int) -> None:
+        """Local FD reports a failed predecessor (owner = self)."""
+        self._handle_fail(target, self.sid, eon=self.eon)
+
+    # ------------------------------------------------- Algorithm 2 (BCAST)
+    def _handle_bcast(self, m: Message) -> None:
+        e, r = m.epoch, m.round
+        if self.mode == Mode.UNRELIABLE_ONLY:
+            self._handle_bcast_allgather(m)
+            return
+        if e < self.epoch or (e == self.epoch and r < self.round):
+            return  # outdated — drop
+        if e > self.epoch:
+            return  # impossible among non-faulty (Prop III.3); drop
+        if r > self.round:
+            # r == round+1 (Prop III.3): postpone for [e, r+1]  (#1/#5)
+            if r != self.round + 1:
+                return
+            if all(pm.epoch == self.epoch and pm.kind == MsgKind.BCAST
+                   for pm in self.M_next.values()):
+                self.M_next[m.src] = m
+            return
+        # e == epoch, r == round -> we must be in an unreliable round (III.2)
+        if self.rtype != RoundType.UNRELIABLE:
+            return  # defensive (cannot occur among non-faulty under P)
+        self._broadcast_u(m)          # (1) send further via G_U
+        self._maybe_abroadcast()      # (2) A-broadcast own message
+        self._try_to_complete()       # (3) try to complete round
+
+    def _handle_bcast_allgather(self, m: Message) -> None:
+        """AllGather baseline: no epochs, no fault tolerance."""
+        r = m.round
+        if r < self.round:
+            return
+        if r > self.round:
+            if r == self.round + 1:
+                self.M_next[m.src] = m
+            return
+        self._broadcast_u(m)
+        self._maybe_abroadcast()
+        self._try_to_complete()
+
+    # ------------------------------------------------ Algorithm 3 (RBCAST)
+    def _handle_rbcast(self, m: Message) -> None:
+        e, r = m.epoch, m.round
+        if m.eon != self.eon:
+            if m.eon > self.eon:
+                # postpone to next eon (kept keyed by src in M_next-like buf)
+                self._next_eon_buffer.append(m)
+            return
+        if e < self.epoch or (e == self.epoch and r < self.round):
+            return  # outdated
+        if e > self.epoch:
+            # e == epoch+1 and r == round+1 (Prop III.4): forward now,
+            # deliver later in [[e+1, r+1]]   (#6)
+            if e != self.epoch + 1 or r != self.round + 1:
+                return
+            if m.src in self.M_next and self.M_next[m.src].uid == m.uid:
+                return  # duplicate copy via another G_R path: already forwarded
+            for q in self.g_r.successors(self.sid):
+                self._send(q, m)
+            if any(pm.kind == MsgKind.BCAST for pm in self.M_next.values()):
+                self.M_next.clear()   # reliable premature trumps unreliable
+            self.M_next[m.src] = m
+            return
+        # e == epoch; r == round or round+1 (Prop III.5); we are RELIABLE
+        if self.rtype != RoundType.RELIABLE:
+            return  # defensive
+        if r == self.round + 1:
+            # ---- skip transition T_Sk (#7, Figure 2) -----------------------
+            if self.M_prev:
+                self._adeliver_round(self.epoch - 1, self.round,
+                                     RoundType.UNRELIABLE, self.M_prev)
+            self.M_prev = {}
+            self.M = {}
+            self.M_next = {}
+            self.tracking.reset(self.g_r)
+            self.tracking.apply_notifications([], list(self.F))
+            self.round += 1
+            self.transitions.append((Transition.T_SK, self.epoch, self.round))
+            self._maybe_abroadcast()
+            # fall through: re-handle m in the new current state (#8)
+        # ---- current state [[e, r]] (#8) -----------------------------------
+        self._broadcast_r(m)          # (1) send further via G_R (+track stop)
+        self._maybe_abroadcast()      # (2) A-broadcast own message
+        self._try_to_complete()       # (3) try to complete round
+
+    # -------------------------------------------------- Algorithm 4 (FAIL)
+    def _handle_fail(self, target: int, owner: int, eon: int = 0) -> None:
+        if self.mode == Mode.UNRELIABLE_ONLY:
+            return  # AllGather has no fault tolerance
+        if eon != self.eon:
+            return  # eon-specific notifications (§III-I)
+        if target not in self.g_r or owner not in self.g_r:
+            return  # invalid notification
+        if (target, owner) in self._fset:
+            return  # duplicate copy (R-broadcast dedup)
+        fn = FailNotification(target, owner, eon=self.eon)
+        for q in self.g_r.successors(self.sid):   # (1) send further via G_R
+            self._send(q, fn)
+        if self.rtype == RoundType.UNRELIABLE:
+            # rollback to latest A-delivered round; rerun successor reliably
+            self.M = {}
+            self.M_next = {}
+            if self._uniform_pending is not None:
+                # uniform mode: earliest completed-but-undelivered round is
+                # the rollback target; its messages become M_prev
+                _, prnd, pmsgs = self._uniform_pending
+                self._uniform_pending = None
+                self.M_prev = pmsgs
+                self.epoch += 1
+                self.round = prnd
+                self.transitions.append((Transition.T_UR, self.epoch, self.round))
+            elif self.M_prev:
+                self.epoch += 1                       # T_UR: [[e+1, r-1]]
+                self.round -= 1
+                self.transitions.append((Transition.T_UR, self.epoch, self.round))
+            else:
+                self.epoch += 1                       # T_|>R: [[e+1, r]]
+                self.transitions.append((Transition.T_NFR, self.epoch, self.round))
+            self.rtype = RoundType.RELIABLE
+            self.first_unreliable = False
+            self.tracking.reset(self.g_r)
+            self.tracking.apply_notifications([], list(self.F))
+            self._maybe_abroadcast()
+        # (2) update tracking digraphs; (3) record; (4) try to complete
+        self.tracking.apply_notifications(list(self.F), [(target, owner)])
+        self.F.append((target, owner))
+        self._fset.add((target, owner))
+        self._try_to_complete()
+
+    # -------------------------------------------- Algorithm 5 (completion)
+    def _try_to_complete(self) -> None:
+        if self.halted:
+            return
+        if self.rtype == RoundType.UNRELIABLE:
+            self._try_complete_unreliable()
+        else:
+            self._try_complete_reliable()
+
+    def _try_complete_unreliable(self) -> None:
+        if self.uniform:
+            self._check_uniform_stability()
+        if len(self.M) != self.ov_u.n:
+            return
+        if self.mode == Mode.UNRELIABLE_ONLY:
+            # AllGather: A-deliver at completion, no stability delay
+            self._adeliver_round(self.epoch, self.round, RoundType.UNRELIABLE, self.M)
+            self.round += 1
+            self.M_prev = {}
+        else:
+            # completing [e,r] (not |>) A-delivers [e, r-1]
+            if self.uniform:
+                # round stability: delay delivery of M_prev until >= f
+                # messages of round r+1 (== r_prev + 2) arrive
+                if self._uniform_pending is not None:
+                    ue, ur, umsgs = self._uniform_pending
+                    self._adeliver_round(ue, ur, RoundType.UNRELIABLE, umsgs)
+                if self.M_prev:
+                    self._uniform_pending = (self.epoch, self.round - 1,
+                                             dict(self.M_prev))
+            elif self.M_prev:
+                self._adeliver_round(self.epoch, self.round - 1,
+                                     RoundType.UNRELIABLE, self.M_prev)
+            self.M_prev = self.M
+            self.round += 1
+            self.first_unreliable = False
+            self.transitions.append((Transition.T_UU, self.epoch, self.round))
+        # handle postponed unreliable messages: forward + install as current
+        postponed = [pm for pm in self.M_next.values()
+                     if pm.kind == MsgKind.BCAST and pm.src in self.ov_u]
+        self.M = {}
+        self.M_next = {}
+        for pm in postponed:
+            self._broadcast_u(pm)     # send further via G_U now
+        self._maybe_abroadcast()
+        if self.uniform and self._uniform_pending is not None:
+            self._check_uniform_stability()
+        self._try_to_complete()
+
+    def _check_uniform_stability(self) -> None:
+        if self._uniform_pending is None:
+            return
+        ue, ur, umsgs = self._uniform_pending
+        if self.round == ur + 2 and len(self.M) >= max(self.f, 1):
+            self._adeliver_round(ue, ur, RoundType.UNRELIABLE, umsgs)
+            self._uniform_pending = None
+
+    def _try_complete_reliable(self) -> None:
+        if not self.tracking.all_empty():
+            return
+        if self.primary_partition and not self._partition_commit_ready():
+            return
+        # ---- round completes: A-deliver it ---------------------------------
+        self._adeliver_round(self.epoch, self.round, RoundType.RELIABLE, self.M)
+        completed_msgs = self.M
+        # remove servers for which no message was A-delivered
+        removed = [p for p in self.members if p not in completed_msgs]
+        if removed:
+            for p in removed:
+                self.g_r.remove_vertex(p)
+            self.members = [p for p in self.members if p not in removed]
+            if self.sid not in self.members:
+                self.halted = True   # we were removed (e.g., false suspicion)
+                return
+            # every reliable round agrees on the next G_U (§III-F footnote 4)
+            self.ov_u = self.ov_u.rebuild(self.members)
+            rset = set(removed)
+            self.F = [(t, o) for (t, o) in self.F if t not in rset and o not in rset]
+            self._fset = set(self.F)
+        self.M_prev = {}
+        self._uniform_pending = None
+        self.tracking.reset(self.g_r)
+        if self._pending_gr_update is not None:
+            self._apply_eon_update()
+        if self.mode == Mode.RELIABLE_ONLY:
+            # AllConcur: next round is always reliable
+            self.epoch += 1
+            self.round += 1
+            self.transitions.append((Transition.T_RR, self.epoch, self.round))
+            self.M = {}
+            self.M_next = {}
+            self.tracking.apply_notifications([], list(self.F))
+            self._maybe_abroadcast()
+            self._try_to_complete()
+            return
+        if not self.F:
+            # ---- T_R|>: start a sequence of unreliable rounds --------------
+            self.epoch = self.epoch
+            self.round += 1
+            self.rtype = RoundType.UNRELIABLE
+            self.first_unreliable = True
+            self.transitions.append((Transition.T_RNF, self.epoch, self.round))
+            postponed = [pm for pm in self.M_next.values()
+                         if pm.kind == MsgKind.BCAST and pm.src in self.ov_u]
+            self.M = {}
+            self.M_next = {}
+            for pm in postponed:
+                self._broadcast_u(pm)
+            self._maybe_abroadcast()
+            self._try_to_complete()
+        else:
+            # ---- T_RR: remaining valid notifications => reliable again -----
+            self.epoch += 1
+            self.round += 1
+            self.transitions.append((Transition.T_RR, self.epoch, self.round))
+            has_stale_unreliable = any(pm.kind == MsgKind.BCAST
+                                       for pm in self.M_next.values())
+            if has_stale_unreliable:
+                self.M = {}
+                self.M_next = {}
+            else:
+                # deliver postponed reliable messages of [[e+1, r+1]]
+                self.M = {pm.src: pm for pm in self.M_next.values()
+                          if pm.kind == MsgKind.RBCAST and pm.src in self.g_r}
+                self.M_next = {}
+                for pm in self.M.values():
+                    self.tracking.stop_tracking(pm.src)
+            self.tracking.apply_notifications([], list(self.F))
+            self._maybe_abroadcast()
+            self._try_to_complete()
+
+    # --------------------------------------------- primary partition (◇P)
+    def _partition_commit_ready(self) -> bool:
+        """§III-H: before A-delivering a completed reliable round, R-broadcast
+        a forward marker on G_R and a backward marker on G_R^T; deliver when
+        both markers arrive from a majority (self included)."""
+        key = (self.epoch, self.round)
+        if key not in self._marker_sent:
+            self._marker_sent.add(key)
+            fwd = PartitionMarker(True, self.sid, self.epoch, self.round)
+            bwd = PartitionMarker(False, self.sid, self.epoch, self.round)
+            for q in self.g_r.successors(self.sid):
+                self._send(q, fwd)
+            for q in self.g_r.predecessors(self.sid):
+                self._send(q, bwd)
+            self._markers.setdefault(key, {}).setdefault(self.sid, [False, False])
+            self._markers[key][self.sid] = [True, True]
+        marks = self._markers.get(key, {})
+        majority = self._n0 // 2 + 1
+        both = sum(1 for v in marks.values() if v[0] and v[1])
+        return both >= majority
+
+    def _handle_marker(self, mk: PartitionMarker) -> None:
+        key = (mk.epoch, mk.round)
+        ent = self._markers.setdefault(key, {}).setdefault(mk.src, [False, False])
+        idx = 0 if mk.forward else 1
+        if ent[idx]:
+            return  # already seen: stop re-forwarding
+        ent[idx] = True
+        # relay on the same digraph orientation
+        if mk.forward:
+            for q in self.g_r.successors(self.sid):
+                self._send(q, mk)
+        else:
+            for q in self.g_r.predecessors(self.sid):
+                self._send(q, mk)
+        if (self.rtype == RoundType.RELIABLE and (mk.epoch, mk.round) ==
+                (self.epoch, self.round)):
+            self._try_to_complete()
+
+    # --------------------------------------------------------- eons (§III-I)
+    def schedule_gr_update(self, builder: Callable[[Sequence[int]], Digraph]) -> None:
+        """Schedule an eon change: the next completed reliable round acts as
+        the transitional round; afterwards G_R is rebuilt by ``builder`` over
+        the surviving membership and the eon number increments."""
+        self._pending_gr_update = builder
+
+    def _apply_eon_update(self) -> None:
+        builder = self._pending_gr_update
+        self._pending_gr_update = None
+        self.g_r = builder(self.members)
+        self.eon += 1
+        # failure notifications are eon-specific: drop all (re-detection will
+        # re-issue any still-relevant ones on the new digraph)
+        self.F = []
+        self._fset = set()
+        self.tracking.reset(self.g_r)
+        buf, self._next_eon_buffer = list(self._next_eon_buffer), []
+        for m in buf:
+            if m.eon == self.eon:
+                self.on_message(m)

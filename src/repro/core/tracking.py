@@ -1,0 +1,139 @@
+"""Message-tracking digraphs and AllConcur's early-termination mechanism.
+
+For every A-broadcast message m_* (origin p_*), every server maintains a
+tracking digraph g[p_*]: vertices are the servers suspected of (still)
+having m_*, edges are the paths on which m_* is suspected of having been
+transmitted.  Tracking stops (digraph emptied) when the server either
+receives m_* or suspects only failed servers of having it.  A reliable round
+completes when *all* tracking digraphs are empty (paper §III-A, Algorithm 6).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .digraph import Digraph
+
+FailurePair = Tuple[int, int]  # (target, owner)
+
+
+class TrackingDigraph:
+    """One tracking digraph g[p_*] (lightweight adjacency sets)."""
+
+    __slots__ = ("origin", "verts", "succ")
+
+    def __init__(self, origin: int):
+        self.origin = origin
+        self.verts: Set[int] = {origin}
+        self.succ: Dict[int, Set[int]] = {origin: set()}
+
+    def reset(self) -> None:
+        self.verts = {self.origin}
+        self.succ = {self.origin: set()}
+
+    def clear(self) -> None:
+        """Stop tracking (message received, or provably lost)."""
+        self.verts = set()
+        self.succ = {}
+
+    @property
+    def empty(self) -> bool:
+        return not self.verts
+
+    def add_edge(self, u: int, v: int) -> None:
+        if u not in self.verts:
+            self.verts.add(u)
+            self.succ.setdefault(u, set())
+        if v not in self.verts:
+            self.verts.add(v)
+            self.succ.setdefault(v, set())
+        self.succ[u].add(v)
+
+    def successors(self, v: int) -> Set[int]:
+        return self.succ.get(v, set())
+
+    def _reachable_from_origin(self) -> Set[int]:
+        if self.origin not in self.verts:
+            return set()
+        seen = {self.origin}
+        q = deque([self.origin])
+        while q:
+            u = q.popleft()
+            for v in self.succ.get(u, ()):
+                if v in self.verts and v not in seen:
+                    seen.add(v)
+                    q.append(v)
+        return seen
+
+    def prune(self, fail_targets: Set[int]) -> None:
+        """Paper §III-F pruning: (1) drop vertices with no path from p_*;
+        (2) if every remaining vertex is the target of a received failure
+        notification, the message is lost — stop tracking."""
+        reach = self._reachable_from_origin()
+        if reach != self.verts:
+            self.verts = reach
+            self.succ = {u: {v for v in outs if v in reach}
+                         for u, outs in self.succ.items() if u in reach}
+        if self.verts and all(v in fail_targets for v in self.verts):
+            self.clear()
+
+    def update(self, g_r: Digraph, known: List[FailurePair],
+               new: Iterable[FailurePair]) -> None:
+        """Algorithm 6 — update after appending ``new`` notifications to the
+        ``known`` set.  ``known`` is mutated (shared across tracking digraphs
+        is NOT assumed; callers pass a fresh working list)."""
+        fset: Set[FailurePair] = set(known)
+        targets: Set[int] = {t for (t, _o) in fset}
+        for (pj, pk) in new:
+            fset.add((pj, pk))
+            targets.add(pj)
+            if pj not in self.verts:
+                continue
+            if not self.successors(pj):
+                # maybe p_j sent m_* further before failing: expand
+                q: deque = deque((pj, p) for p in g_r.successors(pj) if p != pk)
+                while q:
+                    pp, p = q.popleft()
+                    if p not in self.verts:
+                        self.verts.add(p)
+                        self.succ.setdefault(p, set())
+                        if p in targets:
+                            for ps in g_r.successors(p):
+                                if (p, ps) not in fset:
+                                    q.append((p, ps))
+                    self.add_edge(pp, p)
+            elif pk in self.successors(pj):
+                # FIFO: p_k would have relayed m_* before its notification —
+                # p_k has not received m_* from p_j
+                self.succ[pj].discard(pk)
+            self.prune(targets)
+
+
+class TrackingState:
+    """All tracking digraphs of one server for the current reliable round."""
+
+    def __init__(self, g_r: Digraph):
+        self.g_r = g_r
+        self.graphs: Dict[int, TrackingDigraph] = {
+            v: TrackingDigraph(v) for v in g_r.vertices
+        }
+
+    def reset(self, g_r: Digraph) -> None:
+        self.g_r = g_r
+        self.graphs = {v: TrackingDigraph(v) for v in g_r.vertices}
+
+    def stop_tracking(self, src: int) -> None:
+        if src in self.graphs:
+            self.graphs[src].clear()
+
+    def all_empty(self) -> bool:
+        return all(g.empty for g in self.graphs.values())
+
+    def pending_sources(self) -> List[int]:
+        return [s for s, g in self.graphs.items() if not g.empty]
+
+    def apply_notifications(self, known: List[FailurePair],
+                            new: List[FailurePair]) -> None:
+        for g in self.graphs.values():
+            if not g.empty:
+                g.update(self.g_r, list(known), new)

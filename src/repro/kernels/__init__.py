@@ -1,0 +1,3 @@
+from .ops import decode_attention, flash_attention, mamba_scan, rmsnorm
+
+__all__ = ["decode_attention", "flash_attention", "mamba_scan", "rmsnorm"]

@@ -1,0 +1,107 @@
+"""Flash-decode attention as a Pallas TPU kernel.
+
+One query token attends over a long KV cache.  The KV axis is the innermost
+*arbitrary* grid dimension (KV-split); online-softmax partials persist in
+VMEM scratch.  The whole GQA group (G query heads per kv head) is processed
+together as a (G, hd) tile so the score matmul is (G, hd) x (hd, block_kv)
+— MXU-shaped when G*block_kv is 128-aligned.  kv_len arrives via
+scalar-prefetch (SMEM) for per-batch cache-length masking.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, sm_scale: float, block_kv: int,
+                   kvh: int):
+    bk = pl.program_id(0)
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = kvlen_ref[bk // kvh]
+    kv_start = ki * block_kv
+
+    @pl.when(kv_start < kv_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (G, hd)
+        k = k_ref[0].astype(jnp.float32)          # (block_kv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                          # (G, block_kv)
+        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, kv_len, *, block_kv: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, hd); k/v: (B, KVH, Smax, hd); kv_len: (B,) int32."""
+    b, h, hd = q.shape
+    kvh, smax = k.shape[1], k.shape[2]
+    g = h // kvh
+    sm_scale = 1.0 / math.sqrt(hd)
+    block_kv = min(block_kv, smax)
+    pad = (-smax) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    smax_p = smax + pad
+    nk = smax_p // block_kv
+
+    qr = q.reshape(b * kvh, g, hd)
+    kr = k.reshape(b * kvh, smax_p, hd)
+    vr = v.reshape(b * kvh, smax_p, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda bk, ki, kvlen: (bk, 0, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda bk, ki, kvlen: (bk, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda bk, ki, kvlen: (bk, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda bk, ki, kvlen: (bk, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, sm_scale=sm_scale,
+                          block_kv=block_kv, kvh=kvh),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, g, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(kv_len.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,129 @@
+"""Flash attention (causal, GQA) as a Pallas TPU kernel.
+
+TPU-native adaptation: q/k/v blocks are tiled into VMEM with BlockSpecs whose
+last two dims are MXU-aligned (block_q x head_dim, block_kv x head_dim,
+multiples of 128 on the full configs); the kv axis is the innermost
+*arbitrary* grid dimension so the online-softmax running max / denominator /
+accumulator persist in VMEM scratch across kv iterations.  GQA is handled in
+the k/v index_maps (head h reads kv-head h // group), so kv blocks are
+fetched once per kv-head — no repeat-materialization in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, block_q: int, block_kv: int,
+                  seq_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    kv_start = ki * block_kv
+    # causal: skip kv blocks that are entirely in the future
+    run = (kv_start <= q_start + block_q - 1) if causal else (ki >= 0)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (block_q, hd)
+        k = k_ref[0].astype(jnp.float32)          # (block_kv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                          # (block_q, block_kv)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kv_pos < seq_kv
+        if causal:
+            mask = mask & (q_pos >= kv_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Sq, hd); k/v: (B, KVH, Skv, hd).  Sq/Skv padded to blocks."""
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    sq_p, skv_p = sq + pad_q, skv + pad_kv
+    nq, nk = sq_p // block_q, skv_p // block_kv
+
+    qr = q.reshape(b * h, sq_p, hd)
+    kr = k.reshape(b * kvh, skv_p, hd)
+    vr = v.reshape(b * kvh, skv_p, hd)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        bb = bh // h
+        hh = bh % h
+        return (bb * kvh + hh // g, ki, 0)
+
+    grid = (b * h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, sm_scale=sm_scale, causal=causal,
+                          block_q=block_q, block_kv=block_kv, seq_kv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_map),
+            pl.BlockSpec((1, block_kv, hd), kv_map),
+            pl.BlockSpec((1, block_kv, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(qr, kr, vr)
+    out = out.reshape(b, h, sq_p, hd)
+    return out[:, :, :sq, :]

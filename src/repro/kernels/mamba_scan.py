@@ -1,0 +1,85 @@
+"""Mamba selective scan as a Pallas TPU kernel.
+
+Grid: (batch, d_inner blocks) parallel; the time recurrence runs inside the
+kernel as a fori_loop over S with the state h (block_d, d_state) carried in
+VREGs/VMEM.  block_d x d_state tiles (e.g. 256 x 16) keep the VPU lanes full;
+all inputs for the (batch, block_d) slice are staged into VMEM once, so HBM
+traffic is one read of delta/u and one write of y per element — the paper's
+"work" analogue of the redundancy-free overlay: no re-reads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(delta_ref, u_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+                  y_ref, hout_ref, *, seq: int):
+    a = a_ref[...].astype(jnp.float32)            # (block_d, st)
+    d_skip = d_ref[...].astype(jnp.float32)       # (block_d,)
+    h0 = h0_ref[0].astype(jnp.float32)            # (block_d, st)
+
+    def step(t, h):
+        dt = delta_ref[0, t, :].astype(jnp.float32)       # (block_d,)
+        ut = u_ref[0, t, :].astype(jnp.float32)
+        bt = b_ref[0, t, :].astype(jnp.float32)           # (st,)
+        ct = c_ref[0, t, :].astype(jnp.float32)
+        abar = jnp.exp(dt[:, None] * a)                   # (block_d, st)
+        h = abar * h + (dt * ut)[:, None] * bt[None, :]
+        y = jnp.sum(h * ct[None, :], axis=1) + d_skip * ut
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, seq, step, h0)
+    hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def mamba_scan_kernel(delta, u, b_in, c_in, a, d_skip, h0=None, *,
+                      block_d: int = 256, interpret: bool = False):
+    """delta/u: (B, S, di); b_in/c_in: (B, S, st); a: (di, st); d_skip: (di,).
+    Returns (y (B,S,di), h_final (B,di,st))."""
+    bsz, s, di = u.shape
+    st = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, st), jnp.float32)
+    block_d = min(block_d, di)
+    pad = (-di) % block_d
+    if pad:
+        delta = jnp.pad(delta, ((0, 0), (0, 0), (0, pad)))
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        d_skip = jnp.pad(d_skip, ((0, pad),))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad), (0, 0)))
+    di_p = di + pad
+    nd = di_p // block_d
+
+    grid = (bsz, nd)
+    y, hout = pl.pallas_call(
+        functools.partial(_mamba_kernel, seq=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, s, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, s, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, s, st), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((1, s, st), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((block_d, st), lambda b, d: (d, 0)),
+            pl.BlockSpec((block_d,), lambda b, d: (d,)),
+            pl.BlockSpec((1, block_d, st), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, block_d, st), lambda b, d: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, di_p), u.dtype),
+            jax.ShapeDtypeStruct((bsz, di_p, st), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(delta, u, b_in, c_in, a, d_skip, h0)
+    return y[:, :, :di], hout[:, :di]

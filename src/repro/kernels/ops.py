@@ -1,0 +1,61 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU, so
+the same call sites work in tests and production.  Layout adapters here keep
+the model code in (B, S, H, hd) while kernels use (B, H, S, hd).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_kernel
+from .flash_attention import flash_attention_kernel
+from .mamba_scan import mamba_scan_kernel
+from .rmsnorm import rmsnorm_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool | None = None):
+    """q: (B, S, H, hd); k/v: (B, S, KVH, hd) — model layout."""
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_kernel(qt, kt, vt, causal=causal, block_q=block_q,
+                                 block_kv=block_kv, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+@partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, k, v, kv_len, *, block_kv: int = 512,
+                     interpret: bool | None = None):
+    """q: (B, 1, H, hd); k/v: (B, Smax, KVH, hd); kv_len: (B,)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    out = decode_attention_kernel(q[:, 0], jnp.swapaxes(k, 1, 2),
+                                  jnp.swapaxes(v, 1, 2), kv_len,
+                                  block_kv=block_kv, interpret=interpret)
+    return out[:, None]
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return rmsnorm_kernel(x, w, eps=eps, block_rows=block_rows,
+                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def mamba_scan(delta, u, b_in, c_in, a, d_skip, h0=None, *,
+               block_d: int = 256, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return mamba_scan_kernel(delta, u, b_in, c_in, a, d_skip, h0,
+                             block_d=block_d, interpret=interpret)

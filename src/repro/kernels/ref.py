@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately naive (materialize scores, sequential scans) — they
+define correctness, not performance.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: (B, H, Sq, hd); k/v: (B, KVH, Skv, hd); GQA via head grouping."""
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, kvh, g, sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qf, kf) / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return o.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len) -> jnp.ndarray:
+    """q: (B, H, hd); k/v: (B, KVH, Smax, hd); kv_len: (B,) int32."""
+    b, h, hd = q.shape
+    kvh, smax = k.shape[1], k.shape[2]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, kvh, g, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qf, k.astype(jnp.float32)) / math.sqrt(hd)
+    live = jnp.arange(smax)[None, :] < kv_len[:, None]
+    s = jnp.where(live[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_scan_ref(delta, u, b_in, c_in, a, d_skip,
+                   h0: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential selective-scan oracle.
+
+    delta/u: (B, S, di); b_in/c_in: (B, S, st); a: (di, st); d_skip: (di,).
+    Returns (y (B,S,di), h_final (B,di,st))."""
+    bsz, s, di = u.shape
+    st = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, st), jnp.float32)
+
+    def step(h, t):
+        dt = delta[:, t].astype(jnp.float32)          # (B, di)
+        ut = u[:, t].astype(jnp.float32)
+        bt = b_in[:, t].astype(jnp.float32)           # (B, st)
+        ct = c_in[:, t].astype(jnp.float32)
+        abar = jnp.exp(dt[..., None] * a[None])       # (B, di, st)
+        h = abar * h + (dt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, ct) + d_skip * ut
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1).astype(u.dtype), h

@@ -1,0 +1,366 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, prove memory/sharding coherence, and emit the
+roofline terms.
+
+MUST be run as its own process (the first two lines force 512 host devices
+before jax initializes).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun                      # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod          # 2-pod mesh
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
+from ..models import (abstract_params, decode_state_specs, model_specs,
+                      param_logical_axes)
+from ..models.params import tree_map_spec
+from ..roofline.analysis import (RooflineReport, model_flops_for,
+                                 parse_collectives, wire_bytes)
+from ..roofline.analytic import cost_model
+from ..sharding.rules import (decode_rules, to_pspec, train_rules,
+                              tree_pspecs, use_rules)
+from ..train import OptConfig, batch_struct, make_serve_step, make_train_step
+from ..train.optimizer import opt_state_specs
+from .mesh import data_shards, make_production_mesh, total_chips
+
+
+def _shardings(mesh, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), pspec_tree,
+        is_leaf=lambda v: isinstance(v, P))
+
+
+def _param_bytes_per_device(params_abs, param_sh, mesh) -> float:
+    """Exact per-device parameter residency from the shardings: a leaf split
+    over k devices stores 1/k of its bytes per device (replicated axes store
+    full copies — this is what makes the memory roofline sharding-aware)."""
+    import numpy as _np
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0.0
+    leaves = zip(jax.tree_util.tree_leaves(params_abs),
+                 jax.tree_util.tree_leaves(
+                     param_sh, is_leaf=lambda v: isinstance(v, NamedSharding)))
+    for leaf, sh in leaves:
+        nbytes = _np.prod(leaf.shape) * leaf.dtype.itemsize if leaf.shape else leaf.dtype.itemsize
+        shards = 1
+        for ax in sh.spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                shards *= sizes.get(a, 1)
+        total += nbytes / shards
+    return total
+
+
+def _batch_pspecs(cfg, shape, rules) -> Dict[str, P]:
+    out: Dict[str, P] = {"tokens": to_pspec(("batch", None), rules)}
+    if shape.is_train:
+        out["labels"] = to_pspec(("batch", None), rules)
+    if cfg.frontend == "vision_stub":
+        out["vision_embeds"] = to_pspec(("batch", None, None), rules)
+        out["positions3"] = to_pspec(("batch", None, None), rules)
+    if cfg.encoder_layers:
+        out["frames"] = to_pspec(("batch", None, None), rules)
+    return out
+
+
+DEFAULT_GRAD_ACCUM = 8
+
+
+def prepare_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+                 overrides: Optional[Dict[str, Any]] = None,
+                 grad_accum: int = 1,
+                 rule_overrides: Optional[Dict[str, Any]] = None,
+                 batch_scale: int = 1):
+    """Build (fn, abstract_args, in_shardings, out_shardings, rules, cfg)."""
+    cfg = get_config(arch).replace(attn_impl="reference")
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    if batch_scale > 1:
+        import dataclasses as _dc
+        shape = _dc.replace(shape,
+                            global_batch=max(shape.global_batch // batch_scale,
+                                             1))
+    rules = (train_rules(multi_pod) if shape.is_train else
+             decode_rules(multi_pod, long_context=(shape.name == "long_500k")))
+    if rule_overrides:
+        rules = dict(rules, **rule_overrides)
+    # big models: FSDP across pods too (ZeRO-3 over DCN) so params fit
+    if multi_pod and cfg.param_count() * 2 > 256 * 8e9:
+        rules = dict(rules, fsdp=("pod", "data"))
+    tokens_total = shape.global_batch * shape.seq_len
+    groups = data_shards(mesh)
+    if tokens_total % groups != 0:
+        groups = 1
+    cfg = cfg.replace(moe_groups=groups)
+
+    pspecs = model_specs(cfg)
+    params_abs = abstract_params(pspecs, dtype=jnp.dtype(cfg.dtype))
+    plog = param_logical_axes(pspecs)
+    param_sh = _shardings(mesh, tree_pspecs(plog, rules))
+
+    if shape.is_train:
+        oc = OptConfig(name=cfg.optimizer)
+        ospecs = opt_state_specs(oc, pspecs)
+        opt_abs = abstract_params(ospecs, dtype=jnp.float32)
+        olog = param_logical_axes(ospecs)
+        opt_sh = _shardings(mesh, tree_pspecs(olog, rules))
+        batch_abs = batch_struct(cfg, shape)
+        batch_sh = _shardings(mesh, _batch_pspecs(cfg, shape, rules))
+        fn = make_train_step(cfg, oc, grad_accum=grad_accum)
+        args = (params_abs, opt_abs, batch_abs)
+        in_sh = (param_sh, opt_sh, batch_sh)
+        out_sh = (param_sh, opt_sh, None)
+        donate = (0, 1)
+    else:
+        sspecs = decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+        state_abs = abstract_params(sspecs, dtype=jnp.dtype(cfg.dtype))
+        slog = param_logical_axes(sspecs)
+        state_sh = _shardings(mesh, tree_pspecs(slog, rules))
+        tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, to_pspec(("batch", None), rules))
+        if shape.kind == "prefill":
+            # prefill lowers the full forward (cache build); we lower the
+            # train-less forward via serve prefill step
+            from ..train import make_prefill_step
+            batch_abs = batch_struct(cfg, shape)
+            batch_sh = _shardings(mesh, _batch_pspecs(cfg, shape, rules))
+            fn = make_prefill_step(cfg)
+            args = (params_abs, batch_abs)
+            in_sh = (param_sh, batch_sh)
+            out_sh = None
+            donate = ()
+        else:
+            fn = make_serve_step(cfg)
+            args = (params_abs, state_abs, tok_abs)
+            in_sh = (param_sh, state_sh, tok_sh)
+            out_sh = (None, state_sh)
+            donate = (1,)
+    return fn, args, in_sh, out_sh, rules, cfg, shape, donate
+
+
+def _collectives_at(arch, shape_name, mesh, *, multi_pod, overrides,
+                    cfg_full, rule_overrides, batch_scale) -> Dict[str, float]:
+    """Full-depth per-device collective wire bytes at one batch scale, by
+    linear extrapolation over 1-period and 2-period unrolled lowerings."""
+    from ..models.model import effective_period
+    p = effective_period(cfg_full)
+    reps = cfg_full.num_layers // p
+    counts = []
+    for n_periods in (1, 2):
+        ovr = dict(overrides or {})
+        ovr.update({"num_layers": p * n_periods, "scan_layers": False})
+        fn, args, in_sh, out_sh, rules, cfg, shape, donate = prepare_cell(
+            arch, shape_name, mesh, multi_pod=multi_pod, overrides=ovr,
+            rule_overrides=rule_overrides, batch_scale=batch_scale)
+        with mesh, use_rules(rules, mesh):
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh).lower(*args).compile()
+        counts.append(wire_bytes(parse_collectives(compiled.as_text())))
+    kinds = set(counts[0]) | set(counts[1])
+    total = {}
+    for k in kinds:
+        c1, c2 = counts[0].get(k, 0.0), counts[1].get(k, 0.0)
+        per = max(c2 - c1, 0.0)
+        base = max(c1 - per, 0.0)
+        total[k] = base + reps * per
+    return total
+
+
+def _calibrated_collectives(arch, shape_name, mesh, *, multi_pod, overrides,
+                            cfg_full, rule_overrides=None,
+                            grad_accum: int = 1) -> Dict[str, Any]:
+    """Per-STEP collective volume, accounting for gradient accumulation.
+
+    With microbatching, parameter all-gathers and gradient reduce-scatters
+    repeat per microbatch while token-proportional collectives (MoE
+    all-to-alls, activation reshards) total the same across microbatches.
+    Decompose with two batch scales:
+        C(B)    = P + T          (full batch, one microbatch)
+        C(B/ga) = P + T/ga       (one microbatch of the accumulated step)
+        => P = (ga*C(B/ga) - C(B)) / (ga - 1);  step total = ga*P + T.
+    """
+    c_full = _collectives_at(arch, shape_name, mesh, multi_pod=multi_pod,
+                             overrides=overrides, cfg_full=cfg_full,
+                             rule_overrides=rule_overrides, batch_scale=1)
+    if grad_accum <= 1:
+        return c_full
+    c_micro = _collectives_at(arch, shape_name, mesh, multi_pod=multi_pod,
+                              overrides=overrides, cfg_full=cfg_full,
+                              rule_overrides=rule_overrides,
+                              batch_scale=grad_accum)
+    ga = grad_accum
+    total = {}
+    for k in set(c_full) | set(c_micro):
+        cb = c_full.get(k, 0.0)
+        cm = c_micro.get(k, 0.0)
+        p_part = max((ga * cm - cb) / (ga - 1), 0.0)
+        t_part = max(cb - p_part, 0.0)
+        total[k] = ga * p_part + t_part
+    return total
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             overrides: Optional[Dict[str, Any]] = None,
+             save_dir: Optional[str] = None, verbose: bool = True,
+             keep_hlo: bool = False, calibrate: bool = True,
+             grad_accum: Optional[int] = None,
+             rule_overrides: Optional[Dict[str, Any]] = None,
+             tag: str = "") -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg0, shape)
+    if not ok:
+        row = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "SKIP", "reason": why}
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIP ({why})")
+        if save_dir:
+            _save_row(save_dir, arch, shape_name, mesh_name, row)
+        return row
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ga = grad_accum if grad_accum is not None else (
+        DEFAULT_GRAD_ACCUM if shape.is_train else 1)
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, rules, cfg, shape, donate = prepare_cell(
+            arch, shape_name, mesh, multi_pod=multi_pod, overrides=overrides,
+            grad_accum=ga, rule_overrides=rule_overrides)
+        with mesh, use_rules(rules, mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        raw_wires = wire_bytes(parse_collectives(hlo))
+        chips = total_chips(mesh)
+
+        # analytic FLOPs/bytes (HLO cost_analysis counts scan bodies once)
+        cm = cost_model(cfg, shape)
+        # sharding-aware parameter traffic: replicated params are re-read on
+        # every replica, so per-chip bytes use the ACTUAL residency
+        param_sh_tree = in_sh[0]
+        params_abs_tree = args[0]
+        param_dev_bytes = _param_bytes_per_device(params_abs_tree,
+                                                  param_sh_tree, mesh)
+        chips0 = total_chips(mesh)
+        bytes_per_chip = (cm.bytes_nonparam / chips0 +
+                          param_dev_bytes * cm.param_read_mult / 2.0)
+        # param_read_mult counts bytes (incl. bpe); param_dev_bytes is bf16
+        # resident bytes -> divide by bpe=2 to get element count
+        if calibrate:
+            wires = _calibrated_collectives(arch, shape_name, mesh,
+                                            multi_pod=multi_pod,
+                                            overrides=overrides, cfg_full=cfg,
+                                            rule_overrides=rule_overrides,
+                                            grad_accum=ga)
+        else:
+            wires = raw_wires
+        per_dev_mem = (getattr(mem, "argument_size_in_bytes", 0)
+                       + getattr(mem, "output_size_in_bytes", 0)
+                       + getattr(mem, "temp_size_in_bytes", 0)
+                       - getattr(mem, "alias_size_in_bytes", 0))
+        rep = RooflineReport(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops_per_chip=cm.flops_total / chips,
+            hlo_bytes_per_chip=bytes_per_chip,
+            collective_bytes_per_chip=sum(wires.values()),
+            collective_breakdown=wires,
+            model_flops=model_flops_for(cfg, shape),
+            per_device_memory_bytes=per_dev_mem,
+            n_collectives=len(parse_collectives(hlo)),
+        )
+        row = rep.row()
+        row.update({
+            "status": "OK",
+            "tag": tag,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "fits_hbm": bool(per_dev_mem <= 16e9),
+            "optimizer": cfg.optimizer,
+            "grad_accum": ga,
+            "mem_args_gb": round(getattr(mem, "argument_size_in_bytes", 0) / 1e9, 2),
+            "mem_out_gb": round(getattr(mem, "output_size_in_bytes", 0) / 1e9, 2),
+            "mem_temp_gb": round(getattr(mem, "temp_size_in_bytes", 0) / 1e9, 2),
+            "mem_alias_gb": round(getattr(mem, "alias_size_in_bytes", 0) / 1e9, 2),
+            "raw_hlo_flops": float(cost.get("flops", 0.0)),
+            "raw_hlo_bytes": float(cost.get("bytes accessed", 0.0)),
+            "raw_collective_bytes": sum(raw_wires.values()),
+            "analytic_fwd_flops": cm.flops_fwd,
+        })
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+                  f"mem/dev={per_dev_mem/1e9:.2f}GB fits={row['fits_hbm']} "
+                  f"t_comp={rep.t_compute:.4f}s t_mem={rep.t_memory:.4f}s "
+                  f"t_coll={rep.t_collective:.4f}s dom={rep.dominant} "
+                  f"frac={rep.roofline_fraction:.3f} "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        if keep_hlo:
+            row["hlo_text"] = hlo
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        row = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {e}")
+    if save_dir:
+        _save_row(save_dir, arch, shape_name, mesh_name, row, tag=tag)
+    return row
+
+
+def _save_row(save_dir, arch, shape_name, mesh_name, row, tag: str = ""):
+    os.makedirs(save_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json".replace("/", "_")
+    slim = {k: v for k, v in row.items() if k not in ("hlo_text", "traceback")}
+    with open(os.path.join(save_dir, fname), "w") as f:
+        json.dump(slim, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--save-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ALL_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rows.append(run_cell(arch, shape, multi_pod=multi_pod,
+                                     save_dir=args.save_dir))
+    n_ok = sum(1 for r in rows if r.get("status") == "OK")
+    n_skip = sum(1 for r in rows if r.get("status") == "SKIP")
+    n_fail = sum(1 for r in rows if r.get("status") == "FAIL")
+    print(f"[dryrun] done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

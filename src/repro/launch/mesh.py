@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to get 512 placeholder host devices; smoke tests and benches see the
+real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU integration tests (requires >= prod(shape) devices,
+    e.g. via --xla_force_host_platform_device_count in a subprocess)."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_shards(mesh) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    return sizes.get("data", 1)
+
+
+def total_chips(mesh) -> int:
+    import numpy as np
+    return int(np.prod(mesh.devices.shape))

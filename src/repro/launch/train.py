@@ -1,0 +1,114 @@
+"""Training launcher.
+
+CPU-friendly end-to-end driver: picks an architecture (reduced config by
+default — full configs are exercised via the dry-run), builds the data
+pipeline, train step, checkpoint manager, and optionally the AllConcur+
+elastic coordinator for multi-pod runs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --steps 50
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m --steps 200 \\
+        --pods 4 --crash-pod 2 --crash-at 60      # elastic multi-pod demo
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config, ShapeConfig
+from ..coordinator.runtime import ElasticTrainer
+from ..models import init_params, model_specs
+from ..models.params import init_params as init_tree, param_count
+from ..train import (CheckpointManager, OptConfig, make_train_step,
+                     opt_state_specs, synthetic_batch)
+
+
+def single_process(args) -> None:
+    cfg = get_config(args.arch, reduced=not args.full)
+    cfg = cfg.replace(dtype="float32", remat="none") if not args.full else cfg
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    specs = model_specs(cfg)
+    print(f"[train] {cfg.name}: {param_count(specs)/1e6:.2f}M params, "
+          f"batch={args.batch} seq={args.seq}")
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(specs, key, dtype=jnp.float32)
+    oc = OptConfig(name=cfg.optimizer if args.full else "adamw",
+                   lr=args.lr, warmup_steps=20, decay_steps=args.steps)
+    opt_state = init_tree(opt_state_specs(oc, specs), key, jnp.float32)
+    step_fn = jax.jit(make_train_step(cfg, oc))
+    cm = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        batch = synthetic_batch(cfg, shape, step, seed=args.seed)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0:
+            jax.block_until_ready(m["loss"])
+            print(f"[train] step {step:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/step:.2f}s/step)")
+        if cm and step % args.ckpt_every == 0:
+            cm.save_async(step, {"params": params, "opt": opt_state},
+                          {"config": cfg.name})
+    if cm:
+        cm.wait()
+        print(f"[train] checkpoints: {cm.steps()}")
+
+
+def multi_pod(args) -> None:
+    cfg = get_config(args.arch, reduced=True).replace(dtype="float32",
+                                                      remat="none")
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    dirs = ([f"{args.ckpt_dir}/pod{i}" for i in range(args.pods)]
+            if args.ckpt_dir else None)
+    tr = ElasticTrainer(cfg, shape, n_pods=args.pods, d_reliable=2,
+                        seed=args.seed, ckpt_dirs=dirs,
+                        ckpt_every=args.ckpt_every)
+    tr.start()
+    crashed = False
+    for target in range(5, args.steps + 1, 5):
+        if args.crash_pod is not None and not crashed and target >= args.crash_at:
+            print(f"[coord] crashing pod {args.crash_pod}")
+            tr.crash_pod(args.crash_pod)
+            crashed = True
+            tr.run_rounds(target)
+            tr.repartition_all()
+        else:
+            tr.run_rounds(target)
+        pid = tr.alive()[0]
+        losses = tr.pods[pid].losses
+        last = losses.get(max(losses)) if losses else float("nan")
+        print(f"[coord] committed step {tr.pods[pid].committed_step:4d} "
+              f"loss {last:.4f} pods={tr.alive()} "
+              f"identical={tr.all_pods_identical()}")
+    assert tr.all_pods_identical()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="full (paper-sized) config — TPU only")
+    ap.add_argument("--pods", type=int, default=0,
+                    help=">0: run the AllConcur+ elastic multi-pod trainer")
+    ap.add_argument("--crash-pod", type=int, default=None)
+    ap.add_argument("--crash-at", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+    if args.pods > 0:
+        multi_pod(args)
+    else:
+        single_process(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from .model import (decode_state_specs, decode_step, forward, model_specs,
+                    effective_period, layer_kind, scan_repeats)
+from .params import (ParamSpec, abstract_params, init_params, param_count,
+                     param_logical_axes)
+
+__all__ = [
+    "ParamSpec", "abstract_params", "decode_state_specs", "decode_step",
+    "effective_period", "forward", "init_params", "layer_kind",
+    "model_specs", "param_count", "param_logical_axes", "scan_repeats",
+]

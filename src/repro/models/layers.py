@@ -1,0 +1,417 @@
+"""Transformer building blocks (functional JAX, spec-first params).
+
+All attention paths use a memory-sane chunked (flash-style) reference by
+default — the Pallas kernels in ``repro.kernels`` are drop-in replacements on
+TPU and are validated against these references in interpret mode.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import constrain
+from .params import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig, name: str = "norm") -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    if cfg.norm_kind == "layernorm":
+        return {"scale": ParamSpec((d,), ("d_model",), init="ones"),
+                "bias": ParamSpec((d,), ("d_model",), init="zeros")}
+    return {"scale": ParamSpec((d,), ("d_model",), init="ones")}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        return (y * p["scale"] + p["bias"]).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps):
+    """qk-norm: RMSNorm over head_dim (qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig) -> jnp.ndarray:
+    hd = cfg.head_dim
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, freqs):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, freqs, sections: Tuple[int, int, int]):
+    """Qwen2-VL M-RoPE: positions3 (B, 3, S) = (t, h, w) ids; the hd/2
+    frequency slots are split into three sections, each rotated by its own
+    positional stream."""
+    b, s = positions3.shape[0], positions3.shape[2]
+    parts = []
+    start = 0
+    for sec_i, sec in enumerate(sections):
+        f = freqs[start:start + sec]
+        pos = positions3[:, sec_i, :]
+        ang = pos[..., None].astype(jnp.float32) * f
+        parts.append(ang)
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, hd/2)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (d even)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-math.log(10000.0) * jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA; chunked flash-style reference)
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    sp = {
+        "wq": ParamSpec((d, nh * hd), ("fsdp", "heads"), fan_in=d),
+        "wk": ParamSpec((d, nkv * hd), ("fsdp", "kv_heads"), fan_in=d),
+        "wv": ParamSpec((d, nkv * hd), ("fsdp", "kv_heads"), fan_in=d),
+        "wo": ParamSpec((nh * hd, d), ("heads", "fsdp"), fan_in=nh * hd),
+    }
+    if cfg.use_qk_norm:
+        sp["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        sp["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    return sp
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                       kv_len: Optional[jnp.ndarray] = None,
+                       chunk: int = 1024):
+    """Flash-style online-softmax attention in pure jnp.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KVH, hd).  GQA: H = KVH * G.
+    Memory: O(Sq * chunk) — never materializes the full score matrix.
+    kv_len: optional (B,) active KV length (decode with cache).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, g, hd)
+
+    nchunks = max(1, (skv + chunk - 1) // chunk)
+    pad = nchunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.astype(jnp.float32).reshape(b, nchunks, chunk, kvh, hd)
+    vc = v.astype(jnp.float32).reshape(b, nchunks, chunk, kvh, hd)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        ci, kci, vci = inputs
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qf, kci)  # (B,Sq,KVH,G,chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+        mask = mask & (kv_pos[None, :] < (skv if kv_len is None else 10**9))
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        if kv_len is not None:
+            live = kv_pos[None, :] < kv_len[:, None]   # (B, chunk)
+            s = jnp.where(live[:, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqkgc,bckh->bqkgh", p, vci)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+    idx = jnp.arange(nchunks)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (idx, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, hd)
+
+
+def _decode_attention(q, k, v, kv_len):
+    """Single-query attention over a (possibly sequence-sharded) KV cache.
+    No chunk scan — GSPMD turns the softmax reductions over the sharded KV
+    axis into small partial all-reduces (flash-decode style).
+
+    q: (B, 1, H, hd); k/v: (B, Smax, KVH, hd); kv_len: (B,)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qf, k.astype(jnp.float32))
+    live = jnp.arange(k.shape[1])[None, :] < kv_len[:, None]      # (B, Smax)
+    s = jnp.where(live[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd)
+
+
+def attention(cfg: ModelConfig, p, x, positions, *, causal=True,
+              positions3=None, kv_cache=None, cache_pos=None,
+              cross_kv=None, return_kv=False):
+    """Self- or cross-attention.
+
+    kv_cache: optional dict {k: (B,Smax,KVH,hd), v: ...} for decode.
+    cache_pos: scalar current write position (decode) — also the KV length.
+    cross_kv: (k, v) precomputed encoder keys/values for cross-attention.
+    return_kv: prefill — return this call's (k, v) as a fresh cache.
+    Returns (out, new_cache)."""
+    b, s, d = x.shape
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        if cfg.use_qk_norm:
+            q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
+        out = _chunked_attention(q, k, v, causal=False)
+        out = constrain(out.reshape(b, s, nh * hd), "batch", "seq", "heads")
+        return (out @ p["wo"]).astype(x.dtype), None
+
+    k = (x @ p["wk"]).reshape(b, s, nkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, nkv, hd)
+
+    if cfg.use_qk_norm:
+        q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if cfg.rope_theta > 0:
+        freqs = rope_freqs(cfg)
+        if cfg.mrope and positions3 is not None:
+            q = apply_mrope(q, positions3, freqs, cfg.mrope_sections)
+            k = apply_mrope(k, positions3, freqs, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, freqs)
+            k = apply_rope(k, positions, freqs)
+
+    new_cache = None
+    if kv_cache is not None:
+        # decode: write this step's k/v at cache_pos, attend over the cache
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_pos, axis=1)
+        ck = constrain(ck, "batch", "seq_kv", "kv_heads", None)
+        cv = constrain(cv, "batch", "seq_kv", "kv_heads", None)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = jnp.full((b,), cache_pos + s, jnp.int32)
+        if s == 1:
+            out = _decode_attention(q, ck, cv, kv_len)
+        else:
+            out = _chunked_attention(q, ck, cv, causal=False, kv_len=kv_len)
+    else:
+        out = _chunked_attention(q, k, v, causal=causal)
+        if return_kv:
+            new_cache = {"k": k, "v": v}
+
+    out = constrain(out.reshape(b, s, nh * hd), "batch", "seq", "heads")
+    return (out @ p["wo"]).astype(x.dtype), new_cache
+
+
+def cross_attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return attn_specs(cfg.replace(use_qk_norm=False))
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    b, se, d = enc_out.shape
+    nkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"]).reshape(b, se, nkv, hd)
+    v = (enc_out @ p["wv"]).reshape(b, se, nkv, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    ff = ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, ff), ("fsdp", "ff"), fan_in=d),
+            "w_up": ParamSpec((d, ff), ("fsdp", "ff"), fan_in=d),
+            "w_down": ParamSpec((ff, d), ("ff", "fsdp"), fan_in=ff),
+        }
+    return {
+        "w_up": ParamSpec((d, ff), ("fsdp", "ff"), fan_in=d),
+        "w_down": ParamSpec((ff, d), ("ff", "fsdp"), fan_in=ff),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = constrain(h, "batch", "seq", "ff")
+    return (h @ p["w_down"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k, capacity-based dispatch; EP over "experts" logical axis)
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.expert_ff
+    if cfg.moe_weight_sharding == "ep_tp":
+        # weight-stationary: experts over "model" x ff over "data" — fully
+        # sharded with NO per-use d-axis all-gather (beyond-paper perf lever)
+        wax = ("experts", None, "expert_tp")
+        dax = ("experts", "expert_tp", None)
+    else:
+        wax = ("experts", "fsdp", None)
+        dax = ("experts", None, "fsdp")
+    return {
+        "w_router": ParamSpec((d, e), ("fsdp", None), fan_in=d),
+        "w_gate": ParamSpec((e, d, ff), wax, fan_in=d),
+        "w_up": ParamSpec((e, d, ff), wax, fan_in=d),
+        "w_down": ParamSpec((e, ff, d), dax, fan_in=ff),
+    }
+
+
+def _positions_within_expert(flat_e: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Rank of each routing slot within its expert — sort-based (O(T log T)
+    memory-lean; avoids the (T, E) one-hot cumsum blowup)."""
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    rank_sorted = jnp.arange(flat_e.shape[0]) - jnp.searchsorted(
+        sorted_e, sorted_e, side="left")
+    pos = jnp.zeros_like(flat_e).at[order].set(rank_sorted)
+    return pos
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """Top-k routing with per-expert capacity, group-local dispatch.
+
+    Tokens are split into G = cfg.moe_groups groups (G = #data shards, set by
+    the launcher) so routing positions/cumsums stay shard-local; experts are
+    EP-sharded over the "model" axis, so dispatch becomes an all-to-all
+    between the data and model axes (GSPMD inserts it from the sharding
+    constraints).  Tokens over capacity are dropped (residual passthrough) —
+    capacity floors at min(T_g, 64) so serving batches never drop."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    g = cfg.moe_groups if t % cfg.moe_groups == 0 else 1
+    tg = t // g
+    xt = x.reshape(g, tg, d)
+    xt = constrain(xt, "exp_group", None, None)
+
+    logits = (xt @ p["w_router"]).astype(jnp.float32)            # (G, Tg, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, k)                       # (G, Tg, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    cap = max(int(math.ceil(cfg.capacity_factor * tg * k / e)), min(tg, 64))
+    flat_e = top_e.reshape(g, tg * k)
+    pos = jax.vmap(lambda fe: _positions_within_expert(fe, e))(flat_e)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)          # (G, Tg*k)
+
+    # dispatch: scatter tokens into (G, E*cap, d)
+    xrep = jnp.repeat(xt, k, axis=1)                             # (G, Tg*k, d)
+    xe = jnp.zeros((g, e * cap + 1, d), x.dtype)
+    xe = jax.vmap(lambda z, sl, xr: z.at[sl].add(xr))(xe, slot, xrep)
+    xe = xe[:, :-1].reshape(g, e, cap, d)
+    xe = constrain(xe, "exp_group", "experts", None, None)
+
+    # expert weights stay bf16 (fp32 accumulation via preferred_element_type
+    # — avoids XLA upcasting operands before their all-gather: 2x wire bytes)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if cfg.moe_weight_sharding == "ep_tp":
+        # pin weight-stationary layout at the use site (in_shardings alone
+        # are overridden by GSPMD propagation from activation constraints)
+        wg = constrain(wg, "experts", None, "expert_tp")
+        wu = constrain(wu, "experts", None, "expert_tp")
+        wd = constrain(wd, "experts", "expert_tp", None)
+
+    def ein(a, b, spec):
+        out = jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+        return out.astype(x.dtype)
+
+    h = (jax.nn.silu(ein(xe, wg, "gecd,edf->gecf").astype(jnp.float32))
+         .astype(x.dtype)) * ein(xe, wu, "gecd,edf->gecf")
+    h = constrain(h, "exp_group", "experts", None, None)
+    ye = ein(h, wd, "gecf,efd->gecd")
+    ye = constrain(ye, "exp_group", "experts", None, None)
+
+    # combine: gather back and weight
+    ye_flat = jnp.concatenate(
+        [ye.reshape(g, e * cap, d), jnp.zeros((g, 1, d), ye.dtype)], axis=1)
+    yk = jax.vmap(lambda yf, sl: yf[sl])(ye_flat, slot).reshape(g, tg, k, d)
+    w = (top_w * keep.reshape(g, tg, k)).astype(yk.dtype)
+    y = jnp.einsum("gtkd,gtk->gtd", yk, w)
+    y = constrain(y, "exp_group", None, None)
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    vp = cfg.padded_vocab
+    sp = {"tok": ParamSpec((vp, cfg.d_model), ("vocab", "fsdp"),
+                           fan_in=cfg.d_model, scale=1.0)}
+    if not cfg.tie_embeddings:
+        sp["unembed"] = ParamSpec((cfg.d_model, vp),
+                                  ("fsdp", "vocab"), fan_in=cfg.d_model)
+    return sp
+
+
+def embed(cfg: ModelConfig, p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(cfg: ModelConfig, p, x):
+    logits = (x @ p["tok"].T) if cfg.tie_embeddings else (x @ p["unembed"])
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., :cfg.vocab_size]
+    return logits

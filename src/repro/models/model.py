@@ -1,0 +1,391 @@
+"""Unified model assembly for all assigned architectures.
+
+One spec tree + one forward covers: dense decoders (llama-style GQA),
+MoE (kimi/llama4/jamba), hybrid Mamba+attn (jamba), xLSTM (mLSTM/sLSTM),
+encoder-decoder (whisper, audio-stub frontend) and VLM (qwen2-vl, M-RoPE +
+vision-stub frontend).
+
+Layers are scanned over the *effective period* of the block pattern (stacked
+params) so the HLO stays compact for 61-88 layer models; reduced smoke
+configs unroll instead.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import constrain
+from . import layers as L
+from . import ssm as S
+from . import xlstm as X
+from .params import ParamSpec, SpecTree, tree_map_spec
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+def layer_kind(cfg: ModelConfig, li: int) -> str:
+    return cfg.block_pattern[li % len(cfg.block_pattern)]
+
+
+def layer_has_moe(cfg: ModelConfig, li: int) -> bool:
+    return cfg.is_moe and (li % cfg.moe_every == cfg.moe_every - 1)
+
+
+def layer_has_ffn(cfg: ModelConfig, li: int) -> bool:
+    if layer_kind(cfg, li) in ("mlstm", "slstm"):
+        return False  # xLSTM blocks carry their own projections
+    return cfg.d_ff > 0 or layer_has_moe(cfg, li)
+
+
+def effective_period(cfg: ModelConfig) -> int:
+    p = len(cfg.block_pattern)
+    if cfg.is_moe:
+        p = math.lcm(p, cfg.moe_every)
+    return p
+
+
+def scan_repeats(cfg: ModelConfig) -> int:
+    p = effective_period(cfg)
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    return cfg.num_layers // p
+
+
+# ---------------------------------------------------------------------------
+# spec trees
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig, li: int, cross: bool = False) -> SpecTree:
+    kind = layer_kind(cfg, li)
+    sp: Dict[str, Any] = {"norm1": L.norm_specs(cfg)}
+    if kind == "attn":
+        sp["attn"] = L.attn_specs(cfg)
+    elif kind == "mamba":
+        sp["mamba"] = S.mamba_specs(cfg)
+    elif kind == "mlstm":
+        sp["mlstm"] = X.mlstm_specs(cfg)
+    elif kind == "slstm":
+        sp["slstm"] = X.slstm_specs(cfg)
+    if cross:
+        sp["norm_x"] = L.norm_specs(cfg)
+        sp["cross"] = L.cross_attn_specs(cfg)
+    if layer_has_ffn(cfg, li):
+        sp["norm2"] = L.norm_specs(cfg)
+        sp["moe" if layer_has_moe(cfg, li) else "mlp"] = (
+            L.moe_specs(cfg) if layer_has_moe(cfg, li) else L.mlp_specs(cfg))
+    return sp
+
+
+def _stack(tree: SpecTree, n: int) -> SpecTree:
+    return tree_map_spec(
+        lambda s: ParamSpec((n,) + s.shape, (None,) + s.axes, init=s.init,
+                            scale=s.scale, fan_in=s.fan_in, dtype=s.dtype),
+        tree)
+
+
+def model_specs(cfg: ModelConfig) -> SpecTree:
+    sp: Dict[str, Any] = {
+        "embed": L.embed_specs(cfg),
+        "final_norm": L.norm_specs(cfg),
+    }
+    if cfg.scan_layers:
+        p = effective_period(cfg)
+        reps = scan_repeats(cfg)
+        sp["decoder"] = {f"pos_{i}": _stack(block_specs(cfg, i, cross=bool(cfg.encoder_layers)), reps)
+                         for i in range(p)}
+    else:
+        sp["decoder"] = {f"layer_{i}": block_specs(cfg, i, cross=bool(cfg.encoder_layers))
+                         for i in range(cfg.num_layers)}
+    if cfg.encoder_layers:
+        enc_cfg = cfg
+        sp["encoder"] = {f"layer_{i}": {
+            "norm1": L.norm_specs(enc_cfg),
+            "attn": L.attn_specs(enc_cfg),
+            "norm2": L.norm_specs(enc_cfg),
+            "mlp": L.mlp_specs(enc_cfg),
+        } for i in range(cfg.encoder_layers)}
+        sp["enc_final_norm"] = L.norm_specs(cfg)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def apply_block(cfg: ModelConfig, li_kind: str, has_ffn: bool, has_moe: bool,
+                p, x, *, positions=None, positions3=None, causal=True,
+                enc_out=None, state: Optional[Dict] = None,
+                cache_pos=None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    new_state: Dict[str, Any] = {}
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if li_kind == "attn":
+        kv_cache = state.get("kv") if state else None
+        want_kv = state is not None and kv_cache is None   # prefill
+        out, new_kv = L.attention(cfg, p["attn"], h, positions, causal=causal,
+                                  positions3=positions3, kv_cache=kv_cache,
+                                  cache_pos=cache_pos, return_kv=want_kv)
+        out = jax.ad_checkpoint.checkpoint_name(out, "attn_out")
+        if new_kv is not None:
+            new_state["kv"] = new_kv
+    elif li_kind == "mamba":
+        out, st = S.mamba_forward(cfg, p["mamba"], h,
+                                  state=(state.get("ssm") if state else None))
+        if state is not None:
+            new_state["ssm"] = st
+    elif li_kind == "mlstm":
+        out, st = X.mlstm_forward(cfg, p["mlstm"], h,
+                                  state=(state.get("xl") if state else None))
+        if state is not None:
+            new_state["xl"] = st
+    elif li_kind == "slstm":
+        out, st = X.slstm_forward(cfg, p["slstm"], h,
+                                  state=(state.get("xl") if state else None))
+        if state is not None:
+            new_state["xl"] = st
+    else:
+        raise ValueError(li_kind)
+    x = x + out
+    if "cross" in p and enc_out is not None:
+        hx = L.apply_norm(cfg, p["norm_x"], x)
+        ck, cv = L.cross_kv(cfg, p["cross"], enc_out)
+        out, _ = L.attention(cfg, p["cross"], hx, positions, causal=False,
+                             cross_kv=(ck, cv))
+        x = x + out
+    if has_ffn:
+        h2 = L.apply_norm(cfg, p["norm2"], x)
+        if has_moe:
+            x = x + L.apply_moe(cfg, p["moe"], h2)
+        else:
+            x = x + L.apply_mlp(cfg, p["mlp"], h2)
+    return x, (new_state if state is not None else None)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "save_attn":
+        # save only the attention block outputs: skips recomputing the
+        # quadratic attention in the backward pass while keeping the cheap
+        # (MLP/norm) recompute — a middle point between full and dots
+        policy = jax.checkpoint_policies.save_only_these_names("attn_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, Fe, d) precomputed stub embeddings (conv frontend is a
+    stub per the assignment brief)."""
+    b, fe, d = frames.shape
+    x = frames + L.sinusoidal_positions(fe, d).astype(frames.dtype)
+    positions = jnp.broadcast_to(jnp.arange(fe), (b, fe))
+    for i in range(cfg.encoder_layers):
+        p = params["encoder"][f"layer_{i}"]
+        h = L.apply_norm(cfg, p["norm1"], x)
+        out, _ = L.attention(cfg, p["attn"], h, positions, causal=False)
+        x = x + out
+        h = L.apply_norm(cfg, p["norm2"], x)
+        x = x + L.apply_mlp(cfg, p["mlp"], h)
+    return L.apply_norm(cfg, params["enc_final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# forward: train / prefill
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            mode: str = "train"):
+    """mode 'train' -> logits (B,S,V); mode 'prefill' -> (last_logits, state)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed(cfg, params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)           # (B, F, d)
+        fl = ve.shape[1]
+        x = jnp.concatenate([ve, x[:, fl:, :]], axis=1)       # replace prefix
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    positions3 = batch.get("positions3")
+    if cfg.mrope and positions3 is None:
+        positions3 = jnp.broadcast_to(positions[:, None, :], (b, 3, s))
+    if cfg.rope_theta == 0:  # whisper: sinusoidal absolute positions
+        x = x + L.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+
+    enc_out = None
+    if cfg.encoder_layers and "frames" in batch:
+        enc_out = encode(cfg, params, batch["frames"].astype(x.dtype))
+
+    x = constrain(x, "batch", "seq", None)
+    collect_state = (mode == "prefill")
+
+    if cfg.scan_layers:
+        period = effective_period(cfg)
+        kinds = [layer_kind(cfg, i) for i in range(period)]
+        ffns = [layer_has_ffn(cfg, i) for i in range(period)]
+        moes = [layer_has_moe(cfg, i) for i in range(period)]
+
+        def period_fn(x, per_params):
+            sts = {}
+            for i in range(period):
+                st_in = {} if collect_state else None
+                x, st = apply_block(cfg, kinds[i], ffns[i], moes[i],
+                                    per_params[f"pos_{i}"], x,
+                                    positions=positions, positions3=positions3,
+                                    enc_out=enc_out, state=st_in)
+                if collect_state:
+                    sts[f"pos_{i}"] = _prefill_state(cfg, kinds[i], st, x.shape[0], s)
+            x = constrain(x, "batch", "seq", None)
+            return x, sts
+
+        period_fn_r = _remat(cfg, period_fn)
+
+        def scan_body(carry, per_params):
+            y, sts = period_fn_r(carry, per_params)
+            return y, sts
+
+        x, states = jax.lax.scan(scan_body, x, params["decoder"])
+    else:
+        states = {}
+        for i in range(cfg.num_layers):
+            st_in = {} if collect_state else None
+            fn = _remat(cfg, partial(apply_block, cfg, layer_kind(cfg, i),
+                                     layer_has_ffn(cfg, i), layer_has_moe(cfg, i)))
+            x, st = fn(params["decoder"][f"layer_{i}"], x,
+                       positions=positions, positions3=positions3,
+                       enc_out=enc_out, state=st_in)
+            if collect_state:
+                states[f"layer_{i}"] = _prefill_state(cfg, layer_kind(cfg, i),
+                                                      st, b, s)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if mode == "prefill":
+        last = x[:, -1:, :]
+        logits = L.unembed(cfg, params["embed"], last)
+        state = {"pos": jnp.full((), s, jnp.int32), "layers": states}
+        if enc_out is not None:
+            state["enc_out"] = enc_out
+        return logits.astype(jnp.float32), state
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits
+
+
+def _prefill_state(cfg: ModelConfig, kind: str, st: Optional[Dict],
+                   b: int, s: int) -> Dict:
+    """Normalize per-layer state collected during prefill."""
+    st = st or {}
+    if kind == "attn":
+        # prefill ran without a cache: rebuild from scratch is handled by
+        # decode-state initialization; here we keep what attention returned
+        return st
+    return st
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int) -> SpecTree:
+    """Spec tree for the decode-time state (KV caches / SSM states)."""
+    def one(li: int) -> Dict[str, Any]:
+        kind = layer_kind(cfg, li)
+        if kind == "attn":
+            kv = {
+                "k": ParamSpec((batch, max_seq, cfg.num_kv_heads, cfg.head_dim),
+                               ("batch", "seq_kv", "kv_heads", None),
+                               init="zeros"),
+                "v": ParamSpec((batch, max_seq, cfg.num_kv_heads, cfg.head_dim),
+                               ("batch", "seq_kv", "kv_heads", None),
+                               init="zeros"),
+            }
+            return {"kv": kv}
+        if kind == "mamba":
+            return {"ssm": S.mamba_state_specs(cfg, batch)}
+        if kind in ("mlstm",):
+            return {"xl": X.mlstm_state_specs(cfg, batch)}
+        return {"xl": X.slstm_state_specs(cfg, batch)}
+
+    sp: Dict[str, Any] = {"pos": ParamSpec((), (), init="zeros", dtype=jnp.int32)}
+    if cfg.scan_layers:
+        p = effective_period(cfg)
+        reps = scan_repeats(cfg)
+        sp["layers"] = {f"pos_{i}": _stack(one(i), reps) for i in range(p)}
+    else:
+        sp["layers"] = {f"layer_{i}": one(i) for i in range(cfg.num_layers)}
+    if cfg.encoder_layers:
+        sp["enc_out"] = ParamSpec((batch, cfg.frontend_len, cfg.d_model),
+                                  ("batch", None, None), init="zeros")
+    return sp
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    """One decode step.  tokens: (B, 1) int32.  Returns (logits, new_state)."""
+    b = tokens.shape[0]
+    pos = state["pos"]
+    x = L.embed(cfg, params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    positions3 = None
+    if cfg.mrope:
+        positions3 = jnp.broadcast_to(pos[None, None, None], (b, 3, 1)).astype(jnp.int32)
+    if cfg.rope_theta == 0:
+        # absolute sinusoidal at current position
+        d = cfg.d_model
+        div = jnp.exp(-math.log(10000.0) *
+                      jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+        ang = pos.astype(jnp.float32) * div
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+        x = x + pe.astype(x.dtype)
+    enc_out = state.get("enc_out")
+
+    new_layer_states: Dict[str, Any] = {}
+    if cfg.scan_layers:
+        period = effective_period(cfg)
+        kinds = [layer_kind(cfg, i) for i in range(period)]
+        ffns = [layer_has_ffn(cfg, i) for i in range(period)]
+        moes = [layer_has_moe(cfg, i) for i in range(period)]
+
+        def scan_body(carry, inp):
+            x = carry
+            per_params, per_state = inp
+            new_states = {}
+            for i in range(period):
+                x, st = apply_block(cfg, kinds[i], ffns[i], moes[i],
+                                    per_params[f"pos_{i}"], x,
+                                    positions=positions, positions3=positions3,
+                                    enc_out=enc_out,
+                                    state=per_state[f"pos_{i}"], cache_pos=pos)
+                new_states[f"pos_{i}"] = st if st else per_state[f"pos_{i}"]
+            return x, new_states
+
+        x, new_layer_states = jax.lax.scan(
+            scan_body, x, (params["decoder"], state["layers"]))
+    else:
+        for i in range(cfg.num_layers):
+            key = f"layer_{i}"
+            x, st = apply_block(cfg, layer_kind(cfg, i), layer_has_ffn(cfg, i),
+                                layer_has_moe(cfg, i), params["decoder"][key],
+                                x, positions=positions, positions3=positions3,
+                                enc_out=enc_out, state=state["layers"][key],
+                                cache_pos=pos)
+            new_layer_states[key] = st if st else state["layers"][key]
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x).astype(jnp.float32)
+    new_state = dict(state)
+    new_state["pos"] = pos + 1
+    new_state["layers"] = new_layer_states
+    return logits, new_state

@@ -1,0 +1,77 @@
+"""Spec-first parameter system.
+
+Models are defined as *spec trees* — nested dicts whose leaves are
+``ParamSpec`` (shape + logical sharding axes + init law).  From one spec tree
+we derive: materialized params (smoke tests / training), abstract
+ShapeDtypeStructs (dry-run: no allocation), and PartitionSpecs (pjit
+shardings) via the logical-axis rules in ``repro.sharding.rules``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis names (len == ndim)
+    init: str = "normal"                 # normal | zeros | ones
+    scale: float = 1.0                   # stddev multiplier (normal)
+    fan_in: Optional[int] = None         # for 1/sqrt(fan_in) scaling
+    dtype: Optional[Any] = None          # override model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+SpecTree = Any  # nested dict with ParamSpec leaves
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_spec(fn, spec_tree: SpecTree):
+    return jax.tree_util.tree_map(fn, spec_tree, is_leaf=_is_leaf)
+
+
+def init_params(spec_tree: SpecTree, key: jax.Array, dtype=jnp.float32):
+    """Materialize parameters (CPU smoke tests, real training)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_leaf)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def mk(spec: ParamSpec, k):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        fan = spec.fan_in if spec.fan_in else (spec.shape[0] if spec.shape else 1)
+        std = spec.scale / math.sqrt(max(fan, 1))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dt)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(spec_tree: SpecTree, dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins — dry-run without any allocation."""
+    return tree_map_spec(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype), spec_tree)
+
+
+def param_logical_axes(spec_tree: SpecTree):
+    return tree_map_spec(lambda s: s.axes, spec_tree)
+
+
+def param_count(spec_tree: SpecTree) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(spec_tree, is_leaf=_is_leaf):
+        total += int(np.prod(leaf.shape)) if leaf.shape else 1
+    return total

@@ -1,0 +1,142 @@
+"""Mamba (selective SSM) block — chunked parallel scan (train/prefill) and
+single-step recurrence (decode).  [arXiv:2312.00752; Jamba arXiv:2403.19887]
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import constrain
+from .params import ParamSpec
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    st, cw = cfg.ssm_state, cfg.ssm_conv
+    dt_rank = max(1, math.ceil(d / 16))
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("fsdp", "ff"), fan_in=d),
+        "conv_w": ParamSpec((cw, di), ("conv", "ff"), fan_in=cw),
+        "conv_b": ParamSpec((di,), ("ff",), init="zeros"),
+        "x_proj": ParamSpec((di, dt_rank + 2 * st), ("ff", None), fan_in=di),
+        "dt_proj": ParamSpec((dt_rank, di), (None, "ff"), fan_in=dt_rank),
+        "dt_bias": ParamSpec((di,), ("ff",), init="zeros"),
+        "a_log": ParamSpec((di, st), ("ff", "state"), init="ones"),
+        "d_skip": ParamSpec((di,), ("ff",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ff", "fsdp"), fan_in=di),
+    }
+
+
+def _causal_conv(x, w, b, carry: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over seq.  x: (B,S,di); w: (cw,di).
+    carry: (B, cw-1, di) previous context (decode).  Returns (y, new_carry)."""
+    cw = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xe = jnp.concatenate([carry, x], axis=1)
+    y = sum(xe[:, i:i + x.shape[1], :] * w[i] for i in range(cw)) + b
+    new_carry = xe[:, -(cw - 1):, :] if cw > 1 else carry
+    return y, new_carry
+
+
+def _ssm_params(cfg: ModelConfig, p, u):
+    """u: (B,L,di) -> delta (B,L,di), B_ssm/C_ssm (B,L,st)."""
+    st = cfg.ssm_state
+    d_model = cfg.d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    proj = u @ p["x_proj"]
+    dt, b_ssm, c_ssm = jnp.split(proj, [dt_rank, dt_rank + st], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    return delta, b_ssm, c_ssm
+
+
+def mamba_forward(cfg: ModelConfig, p, x, *, chunk: int = 256,
+                  state: Optional[Dict] = None):
+    """x: (B,S,d).  state (decode): {"h": (B,di,st), "conv": (B,cw-1,di)}.
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    st = cfg.ssm_state
+
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "batch", "seq", "ff")
+
+    conv_carry = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_carry)
+    u = jax.nn.silu(xc)
+
+    delta, b_ssm, c_ssm = _ssm_params(cfg, p, u)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (di, st)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((b, di, st), jnp.float32))
+
+    if s == 1:
+        # decode: single recurrence step
+        abar = jnp.exp(delta[:, 0, :, None].astype(jnp.float32) * a)
+        bx = (delta[:, 0] * u[:, 0]).astype(jnp.float32)[:, :, None] \
+            * b_ssm[:, 0, None, :].astype(jnp.float32)
+        h = abar * h0 + bx
+        y = jnp.einsum("bds,bs->bd", h, c_ssm[:, 0].astype(jnp.float32))
+        y = y[:, None, :] + p["d_skip"] * u
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        # chunked parallel scan
+        nchunks = (s + chunk - 1) // chunk
+        pad = nchunks * chunk - s
+        if pad:
+            delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+            u_p = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            u_p, b_p, c_p = u, b_ssm, c_ssm
+        dl = delta.reshape(b, nchunks, chunk, di)
+        ul = u_p.reshape(b, nchunks, chunk, di)
+        bl = b_p.reshape(b, nchunks, chunk, st)
+        cl = c_p.reshape(b, nchunks, chunk, st)
+
+        def scan_body(h_carry, inp):
+            nonlocal_cl = inp[3]
+            dck, uck, bck = inp[0], inp[1], inp[2]
+            abar = jnp.exp(dck.astype(jnp.float32)[..., None] * a)
+            bx = (dck * uck).astype(jnp.float32)[..., None] * \
+                bck.astype(jnp.float32)[:, :, None, :]
+
+            def op(e1, e2):
+                a1, b1 = e1
+                a2, b2 = e2
+                return (a1 * a2, b1 * a2 + b2)
+
+            cum_a, h_inner = jax.lax.associative_scan(op, (abar, bx), axis=1)
+            h_all = h_inner + cum_a * h_carry[:, None]
+            y = jnp.einsum("blds,bls->bld", h_all,
+                           nonlocal_cl.astype(jnp.float32))
+            return h_all[:, -1], y
+
+        xs = (jnp.moveaxis(dl, 1, 0), jnp.moveaxis(ul, 1, 0),
+              jnp.moveaxis(bl, 1, 0), jnp.moveaxis(cl, 1, 0))
+        h_last, ys = jax.lax.scan(scan_body, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, nchunks * chunk, di)[:, :s]
+        y = y + p["d_skip"] * u
+        new_state = {"h": h_last, "conv": new_conv}
+
+    y = (y * jax.nn.silu(z)).astype(x.dtype)
+    y = constrain(y, "batch", "seq", "ff")
+    return (y @ p["out_proj"]).astype(x.dtype), new_state
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": ParamSpec((batch, di, cfg.ssm_state), ("batch", "state", None),
+                       init="zeros", dtype=jnp.float32),
+        "conv": ParamSpec((batch, cfg.ssm_conv - 1, di), ("batch", None, "state"),
+                          init="zeros"),
+    }

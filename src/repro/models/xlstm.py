@@ -1,0 +1,187 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+exponential gating + stabilizer).  [arXiv:2405.04517]
+
+Train/prefill run a sequence recurrence via ``lax.scan`` (the Pallas
+``mlstm_chunk`` kernel is the TPU-optimized chunkwise path); decode is a
+single recurrence step reusing the same cell functions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import constrain
+from .params import ParamSpec
+
+
+def _dp(cfg: ModelConfig) -> int:
+    return int(cfg.xlstm_proj_factor * cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, nh = cfg.d_model, cfg.num_heads
+    dp = _dp(cfg)
+    dh = dp // nh
+    return {
+        "w_up": ParamSpec((d, 2 * dp), ("fsdp", "ff"), fan_in=d),
+        "wq": ParamSpec((dp, dp), ("ff", "heads"), fan_in=dp),
+        "wk": ParamSpec((dp, dp), ("ff", "heads"), fan_in=dp),
+        "wv": ParamSpec((dp, dp), ("ff", "heads"), fan_in=dp),
+        "w_igate": ParamSpec((dp, nh), ("ff", None), fan_in=dp, scale=0.1),
+        "w_fgate": ParamSpec((dp, nh), ("ff", None), fan_in=dp, scale=0.1),
+        "b_igate": ParamSpec((nh,), (None,), init="zeros"),
+        "b_fgate": ParamSpec((nh,), (None,), init="ones"),
+        "out_norm": ParamSpec((dp,), ("ff",), init="ones"),
+        "w_down": ParamSpec((dp, d), ("ff", "fsdp"), fan_in=dp),
+    }
+
+
+def _mlstm_cell(carry, inp):
+    """One step.  carry: (C (B,nh,dh,dh), n (B,nh,dh), m (B,nh)).
+    inp: q,k,v (B,nh,dh), ig/fg (B,nh)."""
+    C, n, m = carry
+    q, k, v, ig, fg = inp
+    m_new = jnp.maximum(fg + m, ig)
+    i = jnp.exp(ig - m_new)
+    f = jnp.exp(fg + m - m_new)
+    C = f[..., None, None] * C + i[..., None, None] * \
+        (k[..., :, None] * v[..., None, :])
+    n = f[..., None] * n + i[..., None] * k
+    num = jnp.einsum("bhij,bhi->bhj", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_forward(cfg: ModelConfig, p, x, state: Optional[Dict] = None):
+    """x: (B,S,d) -> (y, new_state)."""
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    dp = _dp(cfg)
+    dh = dp // nh
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    xm = constrain(xm, "batch", "seq", "ff")
+    q = (xm @ p["wq"]).reshape(b, s, nh, dh) / (dh ** 0.5)
+    k = (xm @ p["wk"]).reshape(b, s, nh, dh) / (dh ** 0.5)
+    v = (xm @ p["wv"]).reshape(b, s, nh, dh)
+    ig = (xm @ p["w_igate"] + p["b_igate"]).astype(jnp.float32)  # (B,S,nh)
+    fg = jax.nn.log_sigmoid(
+        (xm @ p["w_fgate"] + p["b_fgate"]).astype(jnp.float32))
+
+    if state is not None:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    else:
+        C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.zeros((b, nh), jnp.float32)
+
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    xs = (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(ig, 1, 0),
+          jnp.moveaxis(fg, 1, 0))
+    (C, n, m), hs = jax.lax.scan(_mlstm_cell, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, dp)
+
+    # per-feature group norm then output gate
+    hf = h - jnp.mean(h.reshape(b, s, nh, dh), axis=-1, keepdims=True).repeat(dh, -1).reshape(b, s, dp)
+    var = jnp.mean(jnp.square(hf.reshape(b, s, nh, dh)), axis=-1,
+                   keepdims=True).repeat(dh, -1).reshape(b, s, dp)
+    hn = hf * jax.lax.rsqrt(var + 1e-6) * p["out_norm"]
+    y = (hn * jax.nn.silu(z)).astype(x.dtype)
+    new_state = {"C": C, "n": n, "m": m}
+    return (y @ p["w_down"]).astype(x.dtype), new_state
+
+
+def mlstm_state_specs(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    nh = cfg.num_heads
+    dh = _dp(cfg) // nh
+    return {
+        "C": ParamSpec((batch, nh, dh, dh), ("batch", None, "state", None),
+                       init="zeros", dtype=jnp.float32),
+        "n": ParamSpec((batch, nh, dh), ("batch", None, "state"),
+                       init="zeros", dtype=jnp.float32),
+        "m": ParamSpec((batch, nh), ("batch", None), init="zeros",
+                       dtype=jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, nh = cfg.d_model, cfg.num_heads
+    dp = _dp(cfg)
+    dh = dp // nh
+    return {
+        "w_in": ParamSpec((d, 4 * dp), ("fsdp", "ff"), fan_in=d),
+        "r_gates": ParamSpec((nh, dh, 4 * dh), (None, "state", None),
+                             fan_in=dh, scale=0.5),
+        "b_gates": ParamSpec((4 * dp,), ("ff",), init="zeros"),
+        "out_norm": ParamSpec((dp,), ("ff",), init="ones"),
+        "w_down": ParamSpec((dp, d), ("ff", "fsdp"), fan_in=dp),
+    }
+
+
+def _slstm_cell(p_r, carry, wx):
+    """carry: c,n,h,m each (B,nh,dh); wx: (B, 4*dp) input pre-activations."""
+    c, n, h, m = carry
+    b, nh, dh = h.shape
+    rec = jnp.einsum("bhi,hio->bho", h, p_r).reshape(b, nh, 4, dh)
+    wx = wx.reshape(b, nh, 4, dh) + rec
+    zt = jnp.tanh(wx[:, :, 0])
+    it = wx[:, :, 1]
+    ft = wx[:, :, 2]
+    ot = jax.nn.sigmoid(wx[:, :, 3])
+    ft = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(ft + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(ft + m - m_new)
+    c_new = f * c + i * zt
+    n_new = f * n + i
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(cfg: ModelConfig, p, x, state: Optional[Dict] = None):
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    dp = _dp(cfg)
+    dh = dp // nh
+    wx = (x @ p["w_in"] + p["b_gates"]).astype(jnp.float32)  # (B,S,4dp)
+
+    if state is not None:
+        carry0 = (state["c"], state["n"], state["h"], state["m"])
+    else:
+        zero = jnp.zeros((b, nh, dh), jnp.float32)
+        carry0 = (zero, zero, zero, zero)
+
+    p_r = p["r_gates"].astype(jnp.float32).reshape(nh, dh, 4 * dh)
+
+    def step(carry, wxt):
+        new = _slstm_cell(p_r, carry, wxt)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, dp)
+    hn = h * jax.lax.rsqrt(jnp.mean(jnp.square(h), -1, keepdims=True) + 1e-6)
+    hn = hn * p["out_norm"]
+    y = (hn.astype(x.dtype) @ p["w_down"])
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y.astype(x.dtype), new_state
+
+
+def slstm_state_specs(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    nh = cfg.num_heads
+    dh = _dp(cfg) // nh
+    mk = lambda: ParamSpec((batch, nh, dh), ("batch", None, "state"),
+                           init="zeros", dtype=jnp.float32)
+    return {"c": mk(), "n": mk(), "h": mk(), "m": mk()}

@@ -1,0 +1,211 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs / (chips x peak_FLOPs)
+  memory     = HLO_bytes / (chips x HBM_bw)
+  collective = collective_wire_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-device for
+SPMD modules — we calibrate and record which convention holds).  Collective
+bytes are parsed from the HLO text: we sum operand sizes of every all-gather
+/ all-reduce / reduce-scatter / all-to-all / collective-permute and convert
+to *wire* bytes with standard ring-algorithm factors over the replica-group
+size N: AG/RS/A2A: (N-1)/N, AR: 2(N-1)/N, permute: 1.
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_SHAPE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def parse_collectives(hlo_text: str) -> List[Dict[str, Any]]:
+    """Extract every collective op with operand bytes and group size."""
+    out: List[Dict[str, Any]] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(1)
+        # operand shapes: everything after the op-name open-paren
+        after = line[m.end():]
+        depth = 1
+        args = []
+        buf = ""
+        for ch in after:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args.append(buf)
+                    break
+            if depth >= 1:
+                buf += ch
+        operand_bytes = 0
+        for dm in _SHAPE_RE.finditer(args[0] if args else ""):
+            operand_bytes += _shape_bytes(dm.group(1), dm.group(2))
+        # host-backend artifact: CPU legalizes bf16 dots by upconverting
+        # operands to f32 *before* the collective; on TPU the MXU consumes
+        # bf16 directly, so these collectives carry half the bytes.
+        legalized = ("convert" in (args[0] if args else "")
+                     and " f32[" in line.split("=", 1)[1][:40])
+        # result bytes from the lhs
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1][:160]
+        res = _SHAPE_RE.search(line.split("=", 1)[1])
+        result_bytes = _shape_bytes(res.group(1), res.group(2)) if res else 0
+        # group size
+        gsize = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            first = gm.group(1).split("}")[0].strip("{ ")
+            gsize = max(len([t for t in first.split(",") if t.strip() != ""]), 1)
+        else:
+            gm2 = _GROUPS_SHAPE_RE.search(line)
+            if gm2:
+                gsize = int(gm2.group(2))
+        out.append({"kind": kind, "operand_bytes": operand_bytes,
+                    "result_bytes": result_bytes, "group_size": gsize,
+                    "legalized_f32": legalized})
+    return out
+
+
+def wire_bytes(colls: List[Dict[str, Any]],
+               correct_legalization: bool = True) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (ring-algorithm factors).
+    ``correct_legalization`` halves collectives that the CPU host backend
+    upcast to f32 purely to legalize bf16 dots (TPU keeps them bf16)."""
+    by_kind: Dict[str, float] = {}
+    for c in colls:
+        n = max(c["group_size"], 1)
+        fac = (n - 1) / n if n > 1 else 0.0
+        if c["kind"] == "all-gather":
+            b = fac * c["result_bytes"]
+        elif c["kind"] == "reduce-scatter":
+            b = fac * c["operand_bytes"]
+        elif c["kind"] == "all-reduce":
+            b = 2 * fac * c["operand_bytes"]
+        elif c["kind"] == "all-to-all":
+            b = fac * c["operand_bytes"]
+        else:  # collective-permute
+            b = 1.0 * c["operand_bytes"]
+        if correct_legalization and c.get("legalized_f32"):
+            b *= 0.5
+        by_kind[c["kind"]] = by_kind.get(c["kind"], 0.0) + b
+    return by_kind
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: Dict[str, float]
+    model_flops: float
+    per_device_memory_bytes: float = 0.0
+    n_collectives: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — remat/redundancy waste."""
+        total = self.hlo_flops_per_chip * self.chips
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the *useful* model FLOPs achieve if
+        execution takes the dominant-term time (our MFU-at-bound proxy)."""
+        if self.bound_time <= 0:
+            return float("nan")
+        return (self.model_flops / self.chips / self.bound_time) / PEAK_FLOPS
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_bytes_per_chip": self.hlo_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "collective_breakdown": self.collective_breakdown,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "per_device_memory_bytes": self.per_device_memory_bytes,
+            "n_collectives": self.n_collectives,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference); N = active params."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens

@@ -1,0 +1,245 @@
+"""Analytic FLOPs / HBM-bytes model per (arch x shape).
+
+XLA's ``cost_analysis()`` counts ``while``/``scan`` bodies ONCE (layer scans,
+microbatch loops, per-sequence recurrences), so its raw numbers undercount by
+large, shape-dependent factors.  The roofline table therefore uses this
+analytic model — exact for every matmul in the architectures we implement —
+and keeps the raw HLO numbers alongside for reference.  Collective bytes are
+still HLO-derived (they cannot be modeled reliably) via 1-period/2-period
+calibration lowerings in repro.launch.dryrun.
+
+Conventions:
+  fwd matmul (m,k)x(k,n) = 2*m*k*n FLOPs
+  train = 3x fwd (bwd = 2x fwd) + remat recompute (full: +1x fwd of the
+          scanned blocks; dots: +0.5x; none: +0)
+  causal attention scores use the effective (S+1)/2 KV length
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.model import layer_has_ffn, layer_has_moe, layer_kind
+
+
+@dataclass
+class CostBreakdown:
+    flops_fwd: float = 0.0           # one forward pass, whole model
+    flops_total: float = 0.0         # incl. backward + remat (train)
+    bytes_total: float = 0.0         # HBM traffic estimate
+    act_bytes_one_pass: float = 0.0  # sum of major intermediates (one fwd)
+    param_bytes: float = 0.0
+    kv_bytes: float = 0.0
+    bytes_nonparam: float = 0.0      # bytes_total minus parameter traffic
+    param_read_mult: float = 1.0     # param-bytes read/write factor per step
+    detail: Dict[str, float] = None
+
+
+def _attn_flops(cfg: ModelConfig, b: int, s: int, kv: float, causal: bool) -> float:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    t = b * s
+    proj = 2 * t * d * (nh * hd) + 2 * 2 * t * d * (nkv * hd) + 2 * t * (nh * hd) * d
+    kv_eff = (kv + 1) / 2 if causal and s > 1 else kv
+    scores = 2 * 2 * t * nh * hd * kv_eff  # qk^T and p*v
+    return proj + scores
+
+
+def _attn_act_bytes(cfg: ModelConfig, b: int, s: int, bpe: int) -> float:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    t = b * s
+    # q,k,v, attn-out, proj-out (flash: scores never materialize)
+    return bpe * t * (nh * hd + 2 * nkv * hd + nh * hd + d)
+
+
+def _mlp_flops(cfg: ModelConfig, t: int, ff: int) -> float:
+    mults = 3 if cfg.act == "swiglu" else 2
+    return 2 * t * cfg.d_model * ff * mults
+
+
+def _moe_flops(cfg: ModelConfig, t: int) -> float:
+    e, k, ff = cfg.num_experts, cfg.num_experts_per_tok, cfg.expert_ff
+    router = 2 * t * cfg.d_model * e
+    expert = 2 * t * k * cfg.capacity_factor * cfg.d_model * ff * 3
+    return router + expert
+
+
+def _mamba_flops(cfg: ModelConfig, t: int) -> float:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    st, cw = cfg.ssm_state, cfg.ssm_conv
+    dtr = max(1, math.ceil(d / 16))
+    f = 2 * t * d * 2 * di                    # in_proj
+    f += 2 * t * di * cw                      # depthwise conv
+    f += 2 * t * di * (dtr + 2 * st)          # x_proj
+    f += 2 * t * dtr * di                     # dt_proj
+    f += t * di * st * 8                      # selective scan (elementwise)
+    f += 2 * t * di * st                      # C contraction
+    f += 2 * t * di * d                       # out_proj
+    return f
+
+
+def _xlstm_flops(cfg: ModelConfig, t: int, kind: str) -> float:
+    d = cfg.d_model
+    dp = int(cfg.xlstm_proj_factor * d)
+    nh = cfg.num_heads
+    dh = dp // nh
+    if kind == "mlstm":
+        f = 2 * t * d * 2 * dp                # up
+        f += 3 * 2 * t * dp * dp              # q,k,v
+        f += 2 * 2 * t * dp * nh              # gates
+        f += t * nh * dh * dh * 6             # C update + read per step
+        f += 2 * t * dp * d                   # down
+    else:  # slstm
+        f = 2 * t * d * 4 * dp                # input gates
+        f += 2 * t * dp * 4 * dh              # block-diag recurrence
+        f += t * dp * 12                      # pointwise
+        f += 2 * t * dp * d
+    return f
+
+
+def _layer_flops(cfg: ModelConfig, li: int, b: int, s: int, kv: float,
+                 causal: bool) -> float:
+    kind = layer_kind(cfg, li)
+    t = b * s
+    if kind == "attn":
+        f = _attn_flops(cfg, b, s, kv, causal)
+    elif kind == "mamba":
+        f = _mamba_flops(cfg, t)
+    else:
+        f = _xlstm_flops(cfg, t, kind)
+    if layer_has_ffn(cfg, li):
+        f += _moe_flops(cfg, t) if layer_has_moe(cfg, li) else _mlp_flops(cfg, t, cfg.d_ff)
+    if cfg.encoder_layers:  # decoder cross-attention
+        fe = cfg.frontend_len
+        d, hd, nh, nkv = cfg.d_model, cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+        f += 2 * t * d * nh * hd + 2 * t * nh * hd * d          # q,o
+        f += 2 * 2 * b * fe * d * nkv * hd                       # k,v of enc
+        f += 2 * 2 * t * nh * hd * fe                            # scores
+    return f
+
+
+def _layer_act_bytes(cfg: ModelConfig, li: int, b: int, s: int, bpe: int) -> float:
+    kind = layer_kind(cfg, li)
+    t = b * s
+    d = cfg.d_model
+    if kind == "attn":
+        a = _attn_act_bytes(cfg, b, s, bpe)
+    elif kind == "mamba":
+        di = cfg.ssm_expand * d
+        a = bpe * t * (2 * di + di + di + di)   # xz, conv, u, y
+    else:
+        dp = int(cfg.xlstm_proj_factor * d)
+        a = bpe * t * (2 * dp + 3 * dp + dp)
+    if layer_has_ffn(cfg, li):
+        if layer_has_moe(cfg, li):
+            ff = cfg.expert_ff
+            k = cfg.num_experts_per_tok
+            a += bpe * t * k * cfg.capacity_factor * (d + ff + d)
+        else:
+            mults = 2 if cfg.act == "swiglu" else 1
+            a += bpe * t * (mults * cfg.d_ff + d)
+    a += bpe * t * 2 * d  # residual + norm
+    return a
+
+
+def cost_model(cfg: ModelConfig, shape: ShapeConfig) -> CostBreakdown:
+    b, s = shape.global_batch, shape.seq_len
+    bpe = 2  # bf16
+    cb = CostBreakdown(detail={})
+
+    if shape.kind == "decode":
+        sq, kv = 1, s
+    elif shape.kind == "prefill":
+        sq, kv = s, s
+    else:
+        sq, kv = s, s
+
+    # layers
+    f_layers = 0.0
+    a_layers = 0.0
+    for li in range(cfg.num_layers):
+        f_layers += _layer_flops(cfg, li, b, sq, kv, causal=True)
+        a_layers += _layer_act_bytes(cfg, li, b, sq, bpe)
+    # encoder (whisper): runs at prefill/train only
+    f_enc = 0.0
+    if cfg.encoder_layers and shape.kind != "decode":
+        fe = cfg.frontend_len
+        for li in range(cfg.encoder_layers):
+            f_enc += _attn_flops(cfg, b, fe, fe, causal=False)
+            f_enc += _mlp_flops(cfg, b * fe, cfg.d_ff)
+    # unembed (+ final norm negligible)
+    t_out = b * sq if shape.kind == "train" else b
+    f_unembed = 2 * t_out * cfg.d_model * cfg.vocab_size
+
+    fwd = f_layers + f_enc + f_unembed
+    cb.flops_fwd = fwd
+    cb.detail.update({"layers": f_layers, "encoder": f_enc,
+                      "unembed": f_unembed})
+
+    params = cfg.param_count()
+    active = cfg.active_param_count()
+    cb.param_bytes = params * bpe
+    cb.act_bytes_one_pass = a_layers
+
+    if shape.kind == "train":
+        # full: recompute the whole fwd in bwd; dots: matmul outputs saved,
+        # only elementwise recompute (~0 extra matmul FLOPs)
+        remat_extra = {"full": 1.0, "dots": 0.0, "none": 0.0,
+                       "save_attn": 0.7}[cfg.remat]
+        cb.flops_total = fwd * (3.0 + remat_extra)
+        # logits traffic (B,S,V) fwd write + bwd read, bf16 + fp32 softmax
+        logits_bytes = b * s * cfg.vocab_size * (bpe * 2 + 4)
+        opt_mult = {"adamw": 16 + 4, "adafactor": 4 + 2}[cfg.optimizer]
+        # params: read fwd + read recompute + read bwd + grad write/read
+        cb.param_read_mult = bpe * 5 + opt_mult
+        param_traffic = params * cb.param_read_mult
+        act_traffic = a_layers * (2 + 2 * remat_extra)  # write+read (+remat)
+        if cfg.remat in ("dots", "save_attn"):
+            act_traffic = a_layers * 4  # saved to HBM: write+read twice
+        cb.bytes_nonparam = act_traffic + logits_bytes
+        cb.bytes_total = param_traffic + cb.bytes_nonparam
+    elif shape.kind == "prefill":
+        cb.flops_total = fwd
+        kv_write = _kv_cache_bytes(cfg, b, s, bpe)
+        cb.kv_bytes = kv_write
+        cb.param_read_mult = bpe * (active / max(params, 1))
+        cb.bytes_nonparam = a_layers * 2 + kv_write
+        cb.bytes_total = params * cb.param_read_mult + cb.bytes_nonparam
+    else:  # decode
+        cb.flops_total = fwd
+        kv_read = _kv_cache_bytes(cfg, b, s, bpe)
+        cb.kv_bytes = kv_read
+        logits_bytes = b * cfg.vocab_size * 4
+        cb.param_read_mult = bpe * (active / max(params, 1))
+        cb.bytes_nonparam = kv_read + logits_bytes
+        cb.bytes_total = params * cb.param_read_mult + cb.bytes_nonparam
+    return cb
+
+
+def _kv_cache_bytes(cfg: ModelConfig, b: int, s: int, bpe: int) -> float:
+    """Bytes of per-step cache/state traffic (read for decode, write for
+    prefill)."""
+    total = 0.0
+    d = cfg.d_model
+    for li in range(cfg.num_layers):
+        kind = layer_kind(cfg, li)
+        if kind == "attn":
+            total += b * s * 2 * cfg.num_kv_heads * cfg.head_dim * bpe
+        elif kind == "mamba":
+            di = cfg.ssm_expand * d
+            total += b * di * cfg.ssm_state * 4 * 2     # state r/w fp32
+        elif kind == "mlstm":
+            dp = int(cfg.xlstm_proj_factor * d)
+            nh = cfg.num_heads
+            dh = dp // nh
+            total += b * nh * dh * dh * 4 * 2
+        else:
+            dp = int(cfg.xlstm_proj_factor * d)
+            total += b * dp * 4 * 4 * 2
+    if cfg.encoder_layers:
+        total += b * cfg.frontend_len * d * bpe  # enc_out read
+    return total

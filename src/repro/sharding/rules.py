@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules (MaxText-style), resolved per mesh.
+
+Meshes (repro.launch.mesh):
+  single-pod:  (16, 16)        axes ("data", "model")
+  multi-pod:   (2, 16, 16)     axes ("pod", "data", "model")
+
+Parallelism mapping:
+  DP   — batch over ("pod", "data")
+  FSDP — parameter d_model-ish dims over "data" (within-pod; pods keep a
+         replica each so cross-pod traffic is gradient-only)
+  TP   — vocab / heads / ff dims over "model"
+  EP   — experts over "model"; dispatch groups (token side) over "data",
+         so dispatch is a data<->model all-to-all
+  SP   — long-context KV/state sequence over "model" (decode/serve)
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, Axis]
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+def train_rules(multi_pod: bool) -> Rules:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,
+        "d_model": None,
+        "fsdp": "data",
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",     # EP: experts over the model axis
+        "exp_group": "data",    # dispatch groups = data shards
+        "expert_tp": "data",    # ep_tp weight-stationary variant
+        "seq_kv": None,
+        "state": None,
+        "conv": None,
+    }
+
+
+def decode_rules(multi_pod: bool, long_context: bool = False) -> Rules:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    r = train_rules(multi_pod)
+    r.update({
+        "batch": None if long_context else batch,
+        "seq_kv": "model",          # KV-cache sequence parallel (flash-decode)
+        "state": "model",           # SSM/mLSTM state feature dim
+    })
+    if long_context:
+        # global_batch == 1: all parallelism must come from seq/heads/state
+        r["seq_kv"] = ("data", "model") if not multi_pod else ("pod", "data", "model")
+        r["state"] = "model"
+        r["heads"] = "model"
+    return r
+
+
+# ---------------------------------------------------------------------------
+# resolution + constraint helpers
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Dict[str, Any] = {"rules": None, "mesh": None}
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules], mesh: Optional[Mesh] = None):
+    old = dict(_ACTIVE)
+    _ACTIVE["rules"] = rules
+    _ACTIVE["mesh"] = mesh
+    try:
+        yield
+    finally:
+        _ACTIVE.update(old)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def _resolve_axis(rules: Rules, name: Optional[str], used: set) -> Axis:
+    if name is None:
+        return None
+    ax = rules.get(name)
+    if ax is None:
+        return None
+    if isinstance(ax, str):
+        ax = (ax,)
+    picked = tuple(a for a in ax if a not in used)
+    used.update(picked)
+    if not picked:
+        return None
+    return picked if len(picked) > 1 else picked[0]
+
+
+def to_pspec(axes: Sequence[Optional[str]], rules: Optional[Rules] = None) -> P:
+    """Logical axes -> PartitionSpec (each mesh axis used at most once)."""
+    rules = rules if rules is not None else _ACTIVE["rules"]
+    if rules is None:
+        return P()
+    used: set = set()
+    return P(*[_resolve_axis(rules, a, used) for a in axes])
+
+
+def constrain(x, *axes: Optional[str]):
+    """with_sharding_constraint on logical axes; no-op without active rules."""
+    rules = _ACTIVE["rules"]
+    if rules is None:
+        return x
+    spec = to_pspec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tree_pspecs(logical_tree, rules: Rules):
+    """Map a tree of logical-axes tuples to PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda axes: to_pspec(axes, rules), logical_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            a is None or isinstance(a, str) for a in v))
+
+
+def tree_shardings(mesh: Mesh, logical_tree, rules: Rules):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), tree_pspecs(logical_tree, rules))

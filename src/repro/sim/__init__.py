@@ -1,0 +1,9 @@
+from .network import FatTreeSDC, MultiDC, NetworkModel, UniformNetwork, make_network
+from .runner import Metrics, Simulation, build_simulation, wire_size
+from .baselines import LCRServer, LibpaxosNode
+
+__all__ = [
+    "FatTreeSDC", "LCRServer", "LibpaxosNode", "Metrics", "MultiDC",
+    "NetworkModel", "Simulation", "UniformNetwork", "build_simulation",
+    "make_network", "wire_size",
+]

@@ -1,0 +1,138 @@
+"""Round-based simulation models of LCR and Libpaxos (paper §IV baselines).
+
+Both expose the same minimal interface as ``AllConcurServer``:
+``start()``, ``on_message(msg)``, ``outbox`` (list of (dst, wire_msg)),
+``halted``.  Wire messages are tagged tuples so the runner can size them:
+
+LCR      — ring topology + vector clocks [26].  Message ('lcr_m', src, round,
+           hops, batch) travels the ring (n-1 hops); the last receiver (the
+           source's ring predecessor) initiates ('lcr_ack', src, round, hops)
+           which also travels the ring; a server A-delivers a round when all
+           n messages of the round are stable (ack seen).  Vector clocks add
+           8n bytes to every message.
+Libpaxos — 1 proposer, 5 acceptors, n learners [57].  Per round, every server
+           forwards its message to the proposer ('pax_client'); the proposer
+           sends ('pax_accept') to the acceptors; acceptors send
+           ('pax_accepted') to all learners; a learner decides an instance on
+           a majority (3) of accepted messages and A-delivers a round when
+           all n instances of the round are decided.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+
+class LCRServer:
+    def __init__(self, sid: int, members: List[int], batch: int = 4,
+                 on_deliver: Optional[Callable[[int, int, int], None]] = None,
+                 on_abcast: Optional[Callable[[int, int], None]] = None):
+        self.sid = sid
+        self.members = sorted(members)
+        self.n = len(self.members)
+        self.pos = self.members.index(sid)
+        self.succ = self.members[(self.pos + 1) % self.n]
+        self.batch = batch
+        self.on_deliver = on_deliver or (lambda sid, src, rnd: None)
+        self.on_abcast = on_abcast or (lambda sid, rnd: None)
+        self.round = 0
+        self.stable: Dict[int, Set[int]] = {}   # round -> stable sources
+        self.seen: Dict[int, Set[int]] = {}     # round -> received sources
+        self.outbox: List[Tuple[int, Any]] = []
+        self.halted = False
+        self.delivered_rounds = 0
+
+    def start(self) -> None:
+        self.round = 1
+        self._abcast()
+
+    def _abcast(self) -> None:
+        self.on_abcast(self.sid, self.round)
+        self.seen.setdefault(self.round, set()).add(self.sid)
+        self.outbox.append((self.succ, ("lcr_m", self.sid, self.round, 0, self.batch)))
+
+    def on_message(self, msg: Tuple) -> None:
+        kind = msg[0]
+        if kind == "lcr_m":
+            _, src, rnd, hops, batch = msg
+            self.seen.setdefault(rnd, set()).add(src)
+            if hops < self.n - 2:
+                self.outbox.append((self.succ, ("lcr_m", src, rnd, hops + 1, batch)))
+            else:
+                # I'm the source's predecessor: message is fully disseminated
+                self.stable.setdefault(rnd, set()).add(src)
+                self.outbox.append((self.succ, ("lcr_ack", src, rnd, 0)))
+            self._try_deliver()
+        elif kind == "lcr_ack":
+            _, src, rnd, hops = msg
+            self.stable.setdefault(rnd, set()).add(src)
+            if hops < self.n - 2:
+                self.outbox.append((self.succ, ("lcr_ack", src, rnd, hops + 1)))
+            self._try_deliver()
+
+    def _try_deliver(self) -> None:
+        while len(self.stable.get(self.round, ())) == self.n:
+            for src in sorted(self.stable[self.round]):
+                self.on_deliver(self.sid, src, self.round)
+            self.delivered_rounds += 1
+            self.stable.pop(self.round, None)
+            self.seen.pop(self.round, None)
+            self.round += 1
+            self._abcast()
+
+
+class LibpaxosNode:
+    N_ACCEPTORS = 5
+    MAJORITY = 3
+
+    def __init__(self, sid: int, members: List[int], batch: int = 4,
+                 on_deliver: Optional[Callable[[int, int, int], None]] = None,
+                 on_abcast: Optional[Callable[[int, int], None]] = None):
+        self.sid = sid
+        self.members = sorted(members)
+        self.n = len(self.members)
+        self.batch = batch
+        self.proposer = self.members[0]
+        self.acceptors = self.members[1:1 + self.N_ACCEPTORS]
+        self.on_deliver = on_deliver or (lambda sid, src, rnd: None)
+        self.on_abcast = on_abcast or (lambda sid, rnd: None)
+        self.round = 1
+        self.decided: Dict[int, Set[int]] = {}          # round -> decided srcs
+        self.votes: Dict[Tuple[int, int], int] = {}     # (round, src) -> votes
+        self.outbox: List[Tuple[int, Any]] = []
+        self.halted = False
+        self.delivered_rounds = 0
+
+    def start(self) -> None:
+        self._abcast()
+
+    def _abcast(self) -> None:
+        self.on_abcast(self.sid, self.round)
+        self.outbox.append(
+            (self.proposer, ("pax_client", self.sid, self.round, self.batch)))
+
+    def on_message(self, msg: Tuple) -> None:
+        kind = msg[0]
+        if kind == "pax_client" and self.sid == self.proposer:
+            _, src, rnd, batch = msg
+            for a in self.acceptors:
+                self.outbox.append((a, ("pax_accept", src, rnd, batch)))
+        elif kind == "pax_accept" and self.sid in self.acceptors:
+            _, src, rnd, batch = msg
+            for l in self.members:
+                self.outbox.append((l, ("pax_accepted", src, rnd, batch, self.sid)))
+        elif kind == "pax_accepted":
+            _, src, rnd, batch, _acc = msg
+            key = (rnd, src)
+            self.votes[key] = self.votes.get(key, 0) + 1
+            if self.votes[key] == self.MAJORITY:
+                self.decided.setdefault(rnd, set()).add(src)
+                self._try_deliver()
+
+    def _try_deliver(self) -> None:
+        while len(self.decided.get(self.round, ())) == self.n:
+            for src in sorted(self.decided[self.round]):
+                self.on_deliver(self.sid, src, self.round)
+            self.delivered_rounds += 1
+            self.decided.pop(self.round, None)
+            self.round += 1
+            self._abcast()

@@ -1,0 +1,134 @@
+"""Network models for the discrete-event simulator (paper §IV).
+
+Two deployments, matching the paper's OMNeT++/INET setup:
+
+- **SDC** — one datacenter, 3-layer fat-tree of k-port switches, one server
+  per k/2-host subnet (n = k^2/2).  1 GigE links; host-switch cables 10 m
+  (0.05 us), switch-switch 100 m (0.5 us).
+- **MDC** — five datacenters (Dublin, London, Paris, Frankfurt, Stockholm),
+  each a fat-tree with k-1 pods (one core-switch port streams inter-DC
+  traffic); fiber latency 5 us/km over 1.1x the geographic distance
+  (2.5–8.9 ms), 10 Gbps inter-DC bandwidth.
+
+The dominant cost the paper measures is per-server *work* — sending/receiving
+messages — so each server's NIC serializes outgoing messages at link
+bandwidth; propagation adds path latency.  We model store-and-forward only at
+the sender (cut-through switching), plus a fixed per-message software
+overhead.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+GIGE_BW = 125e6            # 1 GigE payload bandwidth, bytes/s
+INTER_DC_BW = 1.25e9       # 10 Gbps
+HOST_CABLE_DELAY = 0.05e-6  # 10 m
+SWITCH_CABLE_DELAY = 0.5e-6  # 100 m
+SW_HOP_DELAY = 1.0e-6      # per-switch processing (typical 1 GigE cut-through)
+SW_OVERHEAD = 5.0e-6       # per-message software/TCP overhead at the sender
+
+
+@dataclass
+class NetworkModel:
+    n: int
+
+    def serialization(self, nbytes: int, src: int, dst: int) -> float:
+        return nbytes / GIGE_BW + SW_OVERHEAD
+
+    def propagation(self, src: int, dst: int) -> float:
+        raise NotImplementedError
+
+
+class UniformNetwork(NetworkModel):
+    """Constant-latency network (unit tests / quick studies)."""
+
+    def __init__(self, n: int, latency: float = 10e-6):
+        super().__init__(n)
+        self.lat = latency
+
+    def propagation(self, src: int, dst: int) -> float:
+        return self.lat
+
+
+class FatTreeSDC(NetworkModel):
+    """Single datacenter: n = k^2/2 servers, one per subnet.
+
+    Paths (one server per subnet, so no same-subnet pairs):
+      same pod:      host - edge - aggr - edge - host    (2 host + 2 sw links, 3 switches)
+      different pod: host - edge - aggr - core - aggr - edge - host
+                                                          (2 host + 4 sw links, 5 switches)
+    """
+
+    def __init__(self, n: int):
+        super().__init__(n)
+        # smallest even k with k^2/2 >= n
+        k = 2
+        while k * k // 2 < n:
+            k += 2
+        self.k = k
+        self.subnets_per_pod = k // 2
+
+    def pod_of(self, s: int) -> int:
+        return s // self.subnets_per_pod
+
+    def propagation(self, src: int, dst: int) -> float:
+        if src == dst:
+            return 0.0
+        if self.pod_of(src) == self.pod_of(dst):
+            return (2 * HOST_CABLE_DELAY + 2 * SWITCH_CABLE_DELAY + 3 * SW_HOP_DELAY)
+        return (2 * HOST_CABLE_DELAY + 4 * SWITCH_CABLE_DELAY + 5 * SW_HOP_DELAY)
+
+
+# inter-DC one-way latencies (seconds): 1.1 x geographic km x 5 us/km.
+_DCS = ["dublin", "london", "paris", "frankfurt", "stockholm"]
+_KM = {
+    ("dublin", "london"): 464, ("dublin", "paris"): 780,
+    ("dublin", "frankfurt"): 1090, ("dublin", "stockholm"): 1625,
+    ("london", "paris"): 455, ("london", "frankfurt"): 640,
+    ("london", "stockholm"): 1440, ("paris", "frankfurt"): 480,
+    ("paris", "stockholm"): 1545, ("frankfurt", "stockholm"): 1180,
+}
+
+
+def _dc_latency(a: str, b: str) -> float:
+    if a == b:
+        return 0.0
+    km = _KM.get((a, b)) or _KM.get((b, a))
+    return 1.1 * km * 5e-6
+
+
+class MultiDC(NetworkModel):
+    """Five DCs across Europe; servers are round-robin over DCs.
+    n = 5 (k-1) k / 2 in the paper; we simply place server s in DC s%5."""
+
+    def __init__(self, n: int):
+        super().__init__(n)
+        per_dc = (n + 4) // 5
+        self.local = FatTreeSDC(max(per_dc, 2))
+
+    def dc_of(self, s: int) -> int:
+        return s % 5
+
+    def serialization(self, nbytes: int, src: int, dst: int) -> float:
+        # sender NIC is 1 GigE either way; inter-DC trunk is 10 Gbps and
+        # shared, but the per-server bottleneck stays the NIC.
+        return nbytes / GIGE_BW + SW_OVERHEAD
+
+    def propagation(self, src: int, dst: int) -> float:
+        a, b = self.dc_of(src), self.dc_of(dst)
+        if a == b:
+            return self.local.propagation(src // 5, dst // 5)
+        return (self.local.propagation(0, self.local.n - 1)
+                + _dc_latency(_DCS[a], _DCS[b]))
+
+
+def make_network(kind: str, n: int) -> NetworkModel:
+    if kind == "sdc":
+        return FatTreeSDC(n)
+    if kind == "mdc":
+        return MultiDC(n)
+    if kind == "uniform":
+        return UniformNetwork(n)
+    raise ValueError(kind)

@@ -1,0 +1,291 @@
+"""Discrete-event simulation runner (the paper's OMNeT++ analogue).
+
+Drives any protocol object exposing ``start() / on_message() / outbox``:
+``AllConcurServer`` (modes DUAL, RELIABLE_ONLY, UNRELIABLE_ONLY), ``LCRServer``
+and ``LibpaxosNode``.  Each server's NIC serializes outgoing messages at link
+bandwidth; arrivals add path propagation; FIFO per-channel ordering is
+preserved by construction (serialization order + constant per-pair latency).
+
+Failure model: a crash at time t drops the server's unflushed outbox (except
+an optional ``partial_sends`` prefix) and schedules failure-detection events
+at t + delta_to on every alive G_R successor (heartbeat FD, §II).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from ..core.digraph import Digraph, gs_digraph, resilience_degree
+from ..core.messages import FailNotification, Message, MsgKind, PartitionMarker
+from ..core.overlay import make_overlay
+from ..core.server import AllConcurServer, DeliveryRecord, Mode
+from .baselines import LCRServer, LibpaxosNode
+from .network import NetworkModel, make_network
+
+TXN_BYTES = 250
+HDR_BYTES = 64
+FT_HDR_EXTRA = 32   # fault-tolerant header overhead (epoch/round/eon ids)
+
+
+def wire_size(msg: Any, n: int) -> int:
+    """Bytes on the wire for a message (paper: 250 B per transaction)."""
+    if isinstance(msg, Message):
+        batch = msg.payload.get("batch", 0) if isinstance(msg.payload, dict) else 0
+        extra = FT_HDR_EXTRA if msg.kind == MsgKind.RBCAST else 0
+        return HDR_BYTES + extra + batch * TXN_BYTES
+    if isinstance(msg, FailNotification):
+        return HDR_BYTES
+    if isinstance(msg, PartitionMarker):
+        return HDR_BYTES
+    if isinstance(msg, tuple):
+        kind = msg[0]
+        if kind == "lcr_m":
+            return HDR_BYTES + 8 * n + msg[4] * TXN_BYTES  # vector clock: 8n
+        if kind == "lcr_ack":
+            return HDR_BYTES + 8 * n
+        if kind == "pax_client" or kind == "pax_accept":
+            return HDR_BYTES + msg[3] * TXN_BYTES
+        if kind == "pax_accepted":
+            return HDR_BYTES + msg[3] * TXN_BYTES
+    return HDR_BYTES
+
+
+@dataclass
+class Metrics:
+    n: int
+    batch: int
+    abcast_t: Dict[Tuple[int, int], float] = field(default_factory=dict)
+    latencies: Dict[int, List[float]] = field(default_factory=dict)
+    deliver_events: Dict[int, List[Tuple[float, int]]] = field(default_factory=dict)
+    delivered_msgs: Dict[int, int] = field(default_factory=dict)
+
+    def on_abcast(self, sid: int, rnd: int, t: float) -> None:
+        self.abcast_t.setdefault((sid, rnd), t)
+
+    def on_deliver_msg(self, sid: int, src: int, rnd: int, t: float) -> None:
+        self.delivered_msgs[sid] = self.delivered_msgs.get(sid, 0) + 1
+        if src == sid and (sid, rnd) in self.abcast_t:
+            self.latencies.setdefault(sid, []).append(t - self.abcast_t[(sid, rnd)])
+
+    def on_deliver_round(self, sid: int, t: float, nmsgs: int) -> None:
+        self.deliver_events.setdefault(sid, []).append((t, nmsgs))
+
+    # -- paper-style summaries (window between 10n and 110n delivered) -------
+    def window(self, lo_mult: int = 10, hi_mult: int = 110) -> Tuple[float, float]:
+        lo_needed, hi_needed = lo_mult * self.n, hi_mult * self.n
+        t1 = t2 = 0.0
+        for sid, evs in self.deliver_events.items():
+            acc = 0
+            got1 = got2 = False
+            for t, k in evs:
+                acc += k
+                if not got1 and acc >= lo_needed:
+                    t1 = max(t1, t)
+                    got1 = True
+                if not got2 and acc >= hi_needed:
+                    t2 = max(t2, t)
+                    got2 = True
+            if not got2:
+                t2 = max(t2, evs[-1][0] if evs else 0.0)
+        return t1, t2
+
+    def median_latency(self) -> float:
+        all_l = sorted(l for ls in self.latencies.values() for l in ls)
+        if not all_l:
+            return float("nan")
+        return all_l[len(all_l) // 2]
+
+    def throughput(self, lo_mult: int = 10, hi_mult: int = 110) -> float:
+        """Transactions A-delivered per server per second over the window."""
+        t1, t2 = self.window(lo_mult, hi_mult)
+        if t2 <= t1:
+            return float("nan")
+        per_server = []
+        for sid, evs in self.deliver_events.items():
+            msgs = sum(k for t, k in evs if t1 < t <= t2)
+            per_server.append(msgs * self.batch / (t2 - t1))
+        return sum(per_server) / max(len(per_server), 1)
+
+
+class Simulation:
+    def __init__(self, servers: Dict[int, Any], net: NetworkModel,
+                 metrics: Metrics, *, fd_timeout: float = 10e-3):
+        self.servers = servers
+        self.net = net
+        self.metrics = metrics
+        self.fd_timeout = fd_timeout
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, str, Any]] = []
+        self._seq = itertools.count()
+        self.tx_free: Dict[int, float] = {sid: 0.0 for sid in servers}
+        self.crashed: Set[int] = set()
+        self.events_processed = 0
+
+    def post(self, t: float, kind: str, data: Any) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    def drain(self, sid: int, limit: Optional[int] = None) -> None:
+        srv = self.servers[sid]
+        out, srv.outbox = srv.outbox, []
+        if limit is not None:
+            out = out[:limit]
+        t = max(self.now, self.tx_free[sid])
+        for dst, msg in out:
+            if dst == sid:
+                # loopback (e.g., the Libpaxos proposer proposing its own
+                # message): deliver without NIC serialization
+                self.post(self.now, "recv", (dst, msg))
+                continue
+            ser = self.net.serialization(wire_size(msg, self.metrics.n), sid, dst)
+            t += ser
+            arrive = t + self.net.propagation(sid, dst)
+            self.post(arrive, "recv", (dst, msg))
+        self.tx_free[sid] = t
+
+    def start(self) -> None:
+        for sid, srv in self.servers.items():
+            srv.start()
+            self.drain(sid)
+
+    def schedule_crash(self, sid: int, t: float,
+                       partial_sends: Optional[int] = None) -> None:
+        self.post(t, "crash", (sid, partial_sends))
+
+    def run(self, *, max_time: float = 1e9, max_events: int = 50_000_000,
+            until: Optional[Callable[[], bool]] = None) -> None:
+        check_every = 256
+        since_check = 0
+        while self._heap:
+            t, _, kind, data = heapq.heappop(self._heap)
+            if t > max_time or self.events_processed >= max_events:
+                return
+            self.now = t
+            self.events_processed += 1
+            if kind == "recv":
+                dst, msg = data
+                if dst in self.crashed:
+                    continue
+                srv = self.servers[dst]
+                if getattr(srv, "halted", False):
+                    continue
+                srv.on_message(msg)
+                self.drain(dst)
+            elif kind == "crash":
+                sid, partial = data
+                if sid in self.crashed:
+                    continue
+                self.drain(sid, limit=partial)
+                self.crashed.add(sid)
+                srv = self.servers[sid]
+                g_r = getattr(srv, "g_r", None)
+                if g_r is not None and sid in g_r:
+                    # heartbeats share the FIFO channel: detection can only
+                    # fire after everything sid sent is delivered
+                    last_inflight = max(
+                        [tt for (tt, _, kk, dd) in self._heap
+                         if kk == "recv" and dd[0] in g_r.successors(sid)]
+                        or [t])
+                    for det in g_r.successors(sid):
+                        if det not in self.crashed:
+                            self.post(max(t + self.fd_timeout,
+                                          last_inflight + 1e-9),
+                                      "fd", (det, sid))
+            elif kind == "fd":
+                det, target = data
+                if det in self.crashed:
+                    continue
+                srv = self.servers[det]
+                if getattr(srv, "halted", False):
+                    continue
+                srv.on_failure_detected(target)
+                self.drain(det)
+            since_check += 1
+            if until is not None and since_check >= check_every:
+                since_check = 0
+                if until():
+                    return
+        return
+
+
+# ---------------------------------------------------------------------------
+# factory: build a simulation for one algorithm
+# ---------------------------------------------------------------------------
+
+def build_simulation(
+    algo: str,
+    n: int,
+    *,
+    batch: int = 4,
+    network: str = "sdc",
+    d: Optional[int] = None,
+    fd_timeout: float = 10e-3,
+    uniform: bool = False,
+    primary_partition: bool = False,
+) -> Tuple[Simulation, Metrics]:
+    """algo in {allconcur+, allconcur, allconcur-ea, allgather, lcr, libpaxos}."""
+    members = list(range(n))
+    net = make_network(network, n)
+    metrics = Metrics(n=n, batch=batch)
+    servers: Dict[int, Any] = {}
+
+    if algo in ("allconcur+", "allconcur", "allconcur-ea", "allgather"):
+        mode = {"allconcur+": Mode.DUAL, "allconcur": Mode.RELIABLE_ONLY,
+                "allconcur-ea": Mode.RELIABLE_ONLY,
+                "allgather": Mode.UNRELIABLE_ONLY}[algo]
+        dd = d if d is not None else resilience_degree(n)
+        sim_holder: List[Simulation] = []
+
+        def mk_payload(sid):
+            def payload(rnd):
+                simn = sim_holder[0]
+                metrics.on_abcast(sid, rnd, simn.now)
+                return {"batch": batch, "src": sid, "round": rnd}
+            return payload
+
+        def mk_deliver(sid):
+            def onrec(rec: DeliveryRecord):
+                simn = sim_holder[0]
+                for m in rec.msgs:
+                    metrics.on_deliver_msg(sid, m.src, m.round, simn.now)
+                metrics.on_deliver_round(sid, simn.now, len(rec.msgs))
+            return onrec
+
+        for sid in members:
+            servers[sid] = AllConcurServer(
+                sid, members,
+                overlay_u=make_overlay("binomial", members),
+                g_r=gs_digraph(members, dd),
+                mode=mode,
+                payload_for=mk_payload(sid),
+                on_deliver=mk_deliver(sid),
+                uniform=uniform,
+                f=max(dd - 1, 0),
+                primary_partition=(primary_partition or algo == "allconcur-ea"),
+            )
+        sim = Simulation(servers, net, metrics, fd_timeout=fd_timeout)
+        sim_holder.append(sim)
+        return sim, metrics
+
+    if algo in ("lcr", "libpaxos"):
+        cls = LCRServer if algo == "lcr" else LibpaxosNode
+        sim_holder2: List[Simulation] = []
+
+        def on_deliver(sid, src, rnd):
+            simn = sim_holder2[0]
+            metrics.on_deliver_msg(sid, src, rnd, simn.now)
+            metrics.on_deliver_round(sid, simn.now, 1)
+
+        def on_abcast(sid, rnd):
+            simn = sim_holder2[0]
+            metrics.on_abcast(sid, rnd, simn.now)
+
+        for sid in members:
+            servers[sid] = cls(sid, members, batch=batch,
+                               on_deliver=on_deliver, on_abcast=on_abcast)
+        sim = Simulation(servers, net, metrics, fd_timeout=fd_timeout)
+        sim_holder2.append(sim)
+        return sim, metrics
+
+    raise ValueError(f"unknown algorithm: {algo}")

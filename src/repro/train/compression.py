@@ -1,0 +1,139 @@
+"""Gradient compression for cross-pod synchronization.
+
+Cross-pod links (DCN) are ~an order of magnitude slower than ICI, so the
+coordinator's gradient exchange supports:
+
+- **int8 quantization** (per-tensor absmax scale): 4x vs fp32, unbiased
+  within rounding;
+- **top-k sparsification with error feedback** [Stich et al., 2018]: ships
+  the k largest-|g| entries, accumulates the residual locally and adds it to
+  the next round's gradient, preserving convergence;
+- both composed (topk indices + int8 values).
+
+All codecs are deterministic (same input -> same bytes), which the AllConcur+
+commit path requires: a rerun round re-broadcasts the identical payload.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"         # none | int8 | topk | topk_int8
+    topk_ratio: float = 0.05   # fraction of entries shipped
+    error_feedback: bool = True
+
+
+# ---------------------------------------------------------------------------
+# int8 absmax
+# ---------------------------------------------------------------------------
+
+def _quantize_int8(x: np.ndarray) -> Dict[str, Any]:
+    scale = float(np.max(np.abs(x))) or 1.0
+    q = np.clip(np.round(x / scale * 127.0), -127, 127).astype(np.int8)
+    return {"kind": "int8", "q": q, "scale": scale, "shape": x.shape}
+
+
+def _dequantize_int8(enc: Dict[str, Any]) -> np.ndarray:
+    return (enc["q"].astype(np.float32) * (enc["scale"] / 127.0)).reshape(
+        enc["shape"])
+
+
+# ---------------------------------------------------------------------------
+# top-k with error feedback
+# ---------------------------------------------------------------------------
+
+def _topk(x: np.ndarray, ratio: float) -> Tuple[np.ndarray, np.ndarray]:
+    flat = x.reshape(-1)
+    k = max(1, int(np.ceil(flat.size * ratio)))
+    idx = np.argpartition(np.abs(flat), -k)[-k:]
+    idx = np.sort(idx)  # determinism
+    return idx.astype(np.int32), flat[idx]
+
+
+def _encode_topk(x: np.ndarray, ratio: float, int8: bool) -> Dict[str, Any]:
+    idx, vals = _topk(x, ratio)
+    enc: Dict[str, Any] = {"kind": "topk", "idx": idx, "shape": x.shape,
+                           "int8": int8}
+    if int8:
+        enc["vals"] = _quantize_int8(vals)
+    else:
+        enc["vals"] = vals.astype(np.float32)
+    return enc
+
+
+def _decode_topk(enc: Dict[str, Any]) -> np.ndarray:
+    out = np.zeros(int(np.prod(enc["shape"])), np.float32)
+    vals = (_dequantize_int8(enc["vals"]).reshape(-1) if enc["int8"]
+            else enc["vals"])
+    out[enc["idx"]] = vals
+    return out.reshape(enc["shape"])
+
+
+# ---------------------------------------------------------------------------
+# tree codec
+# ---------------------------------------------------------------------------
+
+class GradCompressor:
+    """Stateful per-pod compressor (holds the error-feedback residual)."""
+
+    def __init__(self, cc: CompressionConfig):
+        self.cc = cc
+        self._residual: Optional[Any] = None
+
+    def compress(self, grads) -> Any:
+        cc = self.cc
+        if cc.kind == "none":
+            return jax.tree_util.tree_map(np.asarray, grads)
+        host = jax.tree_util.tree_map(
+            lambda g: np.asarray(g, np.float32), grads)
+        if cc.error_feedback and cc.kind.startswith("topk"):
+            if self._residual is not None:
+                host = jax.tree_util.tree_map(np.add, host, self._residual)
+        if cc.kind == "int8":
+            enc = jax.tree_util.tree_map(_quantize_int8, host,
+                                         is_leaf=lambda x: isinstance(x, np.ndarray))
+            return enc
+        int8 = cc.kind == "topk_int8"
+        enc = jax.tree_util.tree_map(
+            lambda x: _encode_topk(x, cc.topk_ratio, int8), host,
+            is_leaf=lambda x: isinstance(x, np.ndarray))
+        if cc.error_feedback:
+            dec = decompress(enc)
+            self._residual = jax.tree_util.tree_map(np.subtract, host, dec)
+        return enc
+
+    def reset(self) -> None:
+        self._residual = None
+
+
+def _is_enc(x) -> bool:
+    return isinstance(x, dict) and "kind" in x and x["kind"] in ("int8", "topk")
+
+
+def decompress(enc_tree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda e: (_dequantize_int8(e) if e["kind"] == "int8"
+                   else _decode_topk(e)) if _is_enc(e) else e,
+        enc_tree, is_leaf=_is_enc)
+
+
+def compressed_bytes(enc_tree) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(enc_tree, is_leaf=_is_enc):
+        if _is_enc(leaf):
+            if leaf["kind"] == "int8":
+                total += leaf["q"].nbytes + 8
+            else:
+                total += leaf["idx"].nbytes
+                v = leaf["vals"]
+                total += (v["q"].nbytes + 8) if isinstance(v, dict) else v.nbytes
+        elif isinstance(leaf, np.ndarray):
+            total += leaf.nbytes
+    return total

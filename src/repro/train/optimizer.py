@@ -1,0 +1,178 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment —
+the default for the >=398B configs so optimizer state fits pod HBM budgets).
+
+Spec-first like the models: ``opt_state_specs`` yields the state's ParamSpec
+tree (shapes + logical sharding axes) so the dry-run can build shardings for
+the optimizer state without allocating it.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.params import ParamSpec, SpecTree, tree_map_spec
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(oc: OptConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = oc.lr * step / max(oc.warmup_steps, 1)
+    prog = jnp.clip((step - oc.warmup_steps) /
+                    max(oc.decay_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.lr * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) *
+                   0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_state_specs(param_specs: SpecTree) -> Dict[str, Any]:
+    f32 = lambda s: ParamSpec(s.shape, s.axes, init="zeros", dtype=jnp.float32)
+    return {
+        "m": tree_map_spec(f32, param_specs),
+        "v": tree_map_spec(f32, param_specs),
+        "count": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def adamw_update(oc: OptConfig, grads, state, params):
+    c = state["count"] + 1
+    b1, b2 = oc.b1, oc.b2
+    m = jax.tree_util.tree_map(
+        lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+        state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    cf = c.astype(jnp.float32)
+    bc1 = 1 - b1 ** cf
+    bc2 = 1 - b2 ** cf
+    lr = lr_at(oc, c)
+
+    def upd(p, mm, vv):
+        u = (mm / bc1) / (jnp.sqrt(vv / bc2) + oc.eps)
+        if p.ndim >= 2:
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_state_specs(param_specs: SpecTree) -> Dict[str, Any]:
+    def vrow(s: ParamSpec) -> ParamSpec:
+        if _factored(s.shape):
+            return ParamSpec(s.shape[:-1], s.axes[:-1], init="zeros",
+                             dtype=jnp.float32)
+        return ParamSpec(s.shape, s.axes, init="zeros", dtype=jnp.float32)
+
+    def vcol(s: ParamSpec) -> ParamSpec:
+        if _factored(s.shape):
+            return ParamSpec(s.shape[:-2] + s.shape[-1:],
+                             s.axes[:-2] + s.axes[-1:], init="zeros",
+                             dtype=jnp.float32)
+        return ParamSpec((1,), (None,), init="zeros", dtype=jnp.float32)
+
+    return {
+        "v_row": tree_map_spec(vrow, param_specs),
+        "v_col": tree_map_spec(vcol, param_specs),
+        "count": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def adafactor_update(oc: OptConfig, grads, state, params):
+    c = state["count"] + 1
+    cf = c.astype(jnp.float32)
+    beta2 = 1.0 - cf ** (-0.8)
+    lr = lr_at(oc, c)
+    eps = 1e-30
+
+    def upd(p, g, vr, vc):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + eps
+        if _factored(p.shape):
+            vr_n = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc_n = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr_n / jnp.maximum(jnp.mean(vr_n, axis=-1, keepdims=True), eps)
+                + eps)
+            cfac = jax.lax.rsqrt(vc_n + eps)
+            u = gf * rfac[..., None] * cfac[..., None, :]
+        else:
+            vr_n = beta2 * vr + (1 - beta2) * g2
+            vc_n = vc
+            u = gf * jax.lax.rsqrt(vr_n + eps)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr_n, vc_n
+
+    flat_p, td = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_vr = jax.tree_util.tree_leaves(state["v_row"])
+    flat_vc = jax.tree_util.tree_leaves(state["v_col"])
+    out = [upd(p, g, vr, vc) for p, g, vr, vc
+           in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_params = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    vr_t = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(state["v_row"]), [o[1] for o in out])
+    vc_t = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(state["v_col"]), [o[2] for o in out])
+    return new_params, {"v_row": vr_t, "v_col": vc_t, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# unified
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(oc: OptConfig, param_specs: SpecTree):
+    if oc.name == "adamw":
+        return adamw_state_specs(param_specs)
+    if oc.name == "adafactor":
+        return adafactor_state_specs(param_specs)
+    raise ValueError(oc.name)
+
+
+def apply_updates(oc: OptConfig, grads, opt_state, params):
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    if oc.name == "adamw":
+        new_params, new_state = adamw_update(oc, grads, opt_state, params)
+    else:
+        new_params, new_state = adafactor_update(oc, grads, opt_state, params)
+    return new_params, new_state, gnorm

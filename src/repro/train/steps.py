@@ -1,0 +1,106 @@
+"""Step builders: train_step (loss + grad + optimizer), prefill and decode
+serve steps.  These are the functions the launcher jits/lowers; sharding is
+supplied externally via in_shardings/out_shardings + the logical-axis rules
+active during tracing (repro.sharding.rules.use_rules).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import decode_step as model_decode
+from ..models import forward
+from ..sharding.rules import constrain
+from .optimizer import OptConfig, apply_updates
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Token cross-entropy with optional z-loss; logits (B,S,V) any dtype."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = lse - ll
+    loss = jnp.mean(ce)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        logits = forward(cfg, params, batch, mode="train")
+        loss = cross_entropy(logits, batch["labels"])
+        return loss, {"loss": loss}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig,
+                    grad_accum: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, aux), grads = grad_fn(params, batch)
+        return grads, loss
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            b = batch["tokens"].shape[0]
+            mb = b // grad_accum
+
+            def micro(carry, i):
+                gacc, lacc = carry
+                sl = {k: jax.lax.dynamic_slice_in_dim(v, i * mb, mb, axis=0)
+                      if v.ndim and v.shape[0] == b else v
+                      for k, v in batch.items()}
+                g, l = single(params, sl)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                return (gacc, lacc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(grad_accum))
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+        else:
+            grads, loss = single(params, batch)
+        new_params, new_opt, gnorm = apply_updates(oc, grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, state = forward(cfg, params, batch, mode="prefill")
+        return logits, state
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_fn(params, state, tokens):
+        logits, new_state = model_decode(cfg, params, state, tokens)
+        return logits, new_state
+    return decode_fn
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step used by the decode dry-run shapes: one new token against a
+    KV cache / recurrent state of seq_len (the assignment's decode_* cells).
+    Greedy-samples the next token so the lowering includes sampling."""
+    dec = make_decode_step(cfg)
+
+    def serve_step(params, state, tokens):
+        logits, new_state = dec(params, state, tokens)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, new_state
+    return serve_step

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Smoke tests and benches must see ONE device; only launch/dryrun (its own
+# process) forces 512 placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,90 @@
+"""Elastic multi-pod runtime: commit-through-agreement, crash recovery,
+checkpoint commit, straggler policy."""
+import tempfile
+
+import pytest
+
+from repro.configs import get_config, ShapeConfig
+from repro.coordinator.runtime import ElasticTrainer
+
+CFG = get_config("qwen3-1.7b", reduced=True).replace(dtype="float32",
+                                                     remat="none")
+SHAPE = ShapeConfig("tiny", 16, 8, "train")
+
+
+def test_pods_stay_identical_without_failures():
+    tr = ElasticTrainer(CFG, SHAPE, n_pods=4, d_reliable=2, seed=0)
+    tr.start()
+    assert tr.run_rounds(5)
+    assert tr.all_pods_identical()
+    assert all(tr.pods[p].committed_step >= 5 for p in tr.alive())
+
+
+def test_crash_recovery_and_elastic_shrink():
+    tr = ElasticTrainer(CFG, SHAPE, n_pods=5, d_reliable=2, seed=1)
+    tr.start()
+    assert tr.run_rounds(3)
+    tr.crash_pod(2)
+    assert tr.run_rounds(8)
+    tr.repartition_all()
+    assert tr.run_rounds(11)
+    assert tr.alive() == [0, 1, 3, 4]
+    assert tr.all_pods_identical()
+    # survivors agree pod 2 is gone
+    for p in tr.alive():
+        assert 2 not in tr.cluster.servers[p].members
+    # pipelines repartitioned over 4 survivors
+    for p in tr.alive():
+        assert tr.pods[p].pipeline.n_shards == 4
+
+
+def test_two_crashes_with_d3():
+    tr = ElasticTrainer(CFG, SHAPE, n_pods=6, d_reliable=3, seed=2)
+    tr.start()
+    assert tr.run_rounds(2)
+    tr.crash_pod(0)
+    assert tr.run_rounds(5)
+    tr.crash_pod(5, partial_sends=1)
+    assert tr.run_rounds(9)
+    assert tr.all_pods_identical()
+    assert len(tr.alive()) == 4
+
+
+def test_checkpoint_commit_through_agreement():
+    with tempfile.TemporaryDirectory() as root:
+        dirs = [f"{root}/pod{i}" for i in range(4)]
+        tr = ElasticTrainer(CFG, SHAPE, n_pods=4, d_reliable=2, seed=3,
+                            ckpt_dirs=dirs, ckpt_every=3)
+        tr.start()
+        assert tr.run_rounds(7)
+        # every pod committed the same checkpoint rounds, with equal hashes
+        steps = {p: tr.pods[p].ckpt.steps() for p in tr.alive()}
+        assert all(3 in s and 6 in s for s in steps.values())
+        hashes = {tr.pods[p].ckpt.manifest(6)["hash"] for p in tr.alive()}
+        assert len(hashes) == 1
+
+
+def test_restart_from_committed_checkpoint():
+    with tempfile.TemporaryDirectory() as root:
+        dirs = [f"{root}/pod{i}" for i in range(4)]
+        tr = ElasticTrainer(CFG, SHAPE, n_pods=4, d_reliable=2, seed=4,
+                            ckpt_dirs=dirs, ckpt_every=2)
+        tr.start()
+        assert tr.run_rounds(6)
+        pod = tr.pods[tr.alive()[0]]
+        latest = pod.ckpt.latest_step()
+        restored = pod.ckpt.restore(latest, {"params": pod.params})
+        assert pod.hash_history[latest] == pod.ckpt.manifest(latest)["hash"]
+
+
+def test_straggler_contributes_empty_rounds():
+    """Slow pod ships empty payloads for its first rounds; training proceeds
+    and stays consistent (deterministic-merge skip policy)."""
+    tr = ElasticTrainer(CFG, SHAPE, n_pods=4, d_reliable=2, seed=5,
+                        straggler_skip={3: 3})
+    tr.start()
+    assert tr.run_rounds(6)
+    assert tr.all_pods_identical()
+    rec = tr.cluster.servers[0].delivered[0]
+    empties = [m for m in rec.msgs if m.payload.get("empty")]
+    assert len(empties) == 1 and empties[0].src == 3

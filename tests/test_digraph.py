@@ -1,0 +1,104 @@
+"""Digraph library: G_S(n,d) optimal connectivity, overlays, schedules."""
+import pytest
+
+from repro.core.digraph import (Digraph, binomial_digraph, binomial_schedule,
+                                circulant_digraph, gs_digraph,
+                                resilience_degree, ring_digraph)
+from repro.core.overlay import BinomialOverlay, RingOverlay
+
+
+@pytest.mark.parametrize("n,d", [(6, 2), (9, 3), (12, 3), (16, 4), (24, 4),
+                                 (32, 5), (45, 4)])
+def test_gs_digraph_optimally_connected(n, d):
+    """kappa(G_S) == d — the paper's Table III property (reduced sizes)."""
+    g = gs_digraph(list(range(n)), d)
+    assert g.degree() == d
+    assert g.is_strongly_connected()
+    kappa = g.vertex_connectivity(vertex_transitive=True)
+    assert kappa == d, f"kappa={kappa} != d={d}"
+
+
+def test_gs_digraph_quasiminimal_diameter():
+    g = gs_digraph(list(range(64)), 4)
+    # geometric offsets: diameter well below the ring's n-1
+    assert 0 < g.diameter() <= 16
+
+
+def test_fault_diameter_connected_under_f_failures():
+    n, d = 16, 4
+    g = gs_digraph(list(range(n)), d)
+    df = g.fault_diameter(d - 1, trials=50)
+    assert df > 0, "graph disconnected under f = d-1 failures"
+
+
+def test_ring_and_binomial_digraphs():
+    r = ring_digraph(list(range(8)))
+    assert r.degree() == 1 and r.diameter() == 7
+    b = binomial_digraph(list(range(8)))
+    assert b.is_strongly_connected()
+
+
+def test_binomial_schedule_minimal_work():
+    """n-1 total sends, every vertex receives exactly once, log2(n) steps."""
+    members = list(range(16))
+    sched = binomial_schedule(members, root_pos=3)
+    assert len(sched) == 15
+    receivers = [dst for _, _, dst in sched]
+    assert len(set(receivers)) == 15 and members[3] not in receivers
+    assert max(s for s, _, _ in sched) + 1 == 4  # ceil(log2 16)
+
+
+def test_binomial_overlay_each_receives_once():
+    ov = BinomialOverlay(list(range(13)))
+    for src in range(13):
+        # simulate dissemination: count how many times each vertex receives
+        recv_count = {v: 0 for v in range(13)}
+        frontier = [src]
+        seen = {src}
+        while frontier:
+            nxt = []
+            for v in frontier:
+                for w in ov.next_hops(src, v):
+                    recv_count[w] += 1
+                    if w not in seen:
+                        seen.add(w)
+                        nxt.append(w)
+            frontier = nxt
+        assert seen == set(range(13)), f"src {src}: not all reached"
+        assert all(c == 1 for v, c in recv_count.items() if v != src), \
+            f"src {src}: duplicate receives {recv_count}"
+
+
+def test_ring_overlay():
+    ov = RingOverlay(list(range(7)))
+    # message from 2 travels 2->3->4->5->6->0->1, stops at 1
+    path = [2]
+    cur = 2
+    for _ in range(10):
+        hops = ov.next_hops(2, cur)
+        if not hops:
+            break
+        cur = hops[0]
+        path.append(cur)
+    assert path == [2, 3, 4, 5, 6, 0, 1]
+
+
+def test_resilience_degree_6_nines():
+    """Paper Table III regime: d grows slowly with n."""
+    d_small = resilience_degree(8)
+    d_large = resilience_degree(455)
+    assert 1 <= d_small <= d_large <= 10
+
+
+def test_vertex_connectivity_of_known_graphs():
+    ring = ring_digraph(list(range(6)))
+    assert ring.vertex_connectivity(vertex_transitive=True) == 1
+    full = Digraph(range(5), [(i, j) for i in range(5) for j in range(5) if i != j])
+    assert full.vertex_connectivity() == 4
+
+
+def test_kosaraju_scc():
+    g = Digraph(range(6), [(0, 1), (1, 2), (2, 0), (3, 4), (4, 3), (2, 3)])
+    comps = sorted(g.strongly_connected_components(), key=len)
+    sizes = sorted(len(c) for c in comps)
+    assert sizes == [1, 2, 3]

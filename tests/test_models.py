@@ -1,0 +1,180 @@
+"""Per-architecture smoke tests (reduced configs): one forward + one train
+step on CPU asserting output shapes + no NaNs; decode-state round trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, ShapeConfig
+from repro.models import (decode_state_specs, decode_step, forward,
+                          init_params, model_specs)
+from repro.models.params import init_params as init_tree, param_count
+from repro.train import OptConfig, make_train_step, opt_state_specs, synthetic_batch
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def make(arch, **over):
+    cfg = get_config(arch, reduced=True).replace(
+        dtype="float32", remat="none", **over)
+    params = init_params(model_specs(cfg), KEY, dtype=jnp.float32)
+    return cfg, params
+
+
+def batch_for(cfg, train=True):
+    shape = ShapeConfig("t", S, B, "train" if train else "prefill")
+    return synthetic_batch(cfg, shape, 0)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward(arch):
+    cfg, params = make(arch)
+    logits = forward(cfg, params, batch_for(cfg, train=False))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN/inf logits"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg, params = make(arch)
+    oc = OptConfig(lr=1e-3, warmup_steps=2, decay_steps=20)
+    opt = init_tree(opt_state_specs(oc, model_specs(cfg)), KEY, jnp.float32)
+    step = jax.jit(make_train_step(cfg, oc))
+    p2, o2, m = step(params, opt, batch_for(cfg))
+    assert bool(jnp.isfinite(m["loss"])), f"{arch}: NaN loss"
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    # params changed
+    a = jax.tree_util.tree_leaves(params)[0]
+    b = jax.tree_util.tree_leaves(p2)[0]
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode(arch):
+    cfg, params = make(arch)
+    state = init_tree(decode_state_specs(cfg, B, 16), KEY, jnp.float32)
+    if cfg.encoder_layers:
+        state["enc_out"] = 0.01 * jnp.ones((B, cfg.frontend_len, cfg.d_model))
+    toks = jnp.ones((B, 1), jnp.int32)
+    logits, state = decode_step(cfg, params, state, toks)
+    logits, state = decode_step(cfg, params, state, toks)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert int(state["pos"]) == 2
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN decode logits"
+
+
+def test_decode_matches_forward_dense():
+    """Teacher-forced decode equals the parallel forward (dense GQA arch)."""
+    cfg, params = make("yi-6b")
+    toks = jax.random.randint(jax.random.fold_in(KEY, 7), (1, 8), 0,
+                              cfg.vocab_size, jnp.int32)
+    full = forward(cfg, params, {"tokens": toks})
+    state = init_tree(decode_state_specs(cfg, 1, 8), KEY, jnp.float32)
+    outs = []
+    for t in range(8):
+        lg, state = decode_step(cfg, params, state, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_decode_matches_forward_ssm():
+    """Recurrent decode equals parallel scan for the SSM family."""
+    cfg, params = make("xlstm-350m")
+    toks = jax.random.randint(jax.random.fold_in(KEY, 8), (1, 6), 0,
+                              cfg.vocab_size, jnp.int32)
+    full = forward(cfg, params, {"tokens": toks})
+    state = init_tree(decode_state_specs(cfg, 1, 6), KEY, jnp.float32)
+    outs = []
+    for t in range(6):
+        lg, state = decode_step(cfg, params, state, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_decode_matches_forward_mamba():
+    cfg, params = make("jamba-1.5-large-398b")
+    toks = jax.random.randint(jax.random.fold_in(KEY, 9), (1, 6), 0,
+                              cfg.vocab_size, jnp.int32)
+    full = forward(cfg, params, {"tokens": toks})
+    state = init_tree(decode_state_specs(cfg, 1, 6), KEY, jnp.float32)
+    outs = []
+    for t in range(6):
+        lg, state = decode_step(cfg, params, state, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_scan_equals_unrolled():
+    """scan-over-layers produces the same function as unrolled layers."""
+    from repro.models.model import effective_period
+    cfg_u, params = make("qwen3-1.7b")
+    p = effective_period(cfg_u)
+    cfg_u = cfg_u.replace(num_layers=2 * p)
+    params = init_params(model_specs(cfg_u), KEY, dtype=jnp.float32)
+    cfg_s = cfg_u.replace(scan_layers=True)
+    # restack unrolled params into the scanned layout
+    specs_s = model_specs(cfg_s)
+    stacked = init_tree(specs_s, KEY, jnp.float32)
+    import jax.tree_util as jtu
+    for pos in range(p):
+        for rep in range(2):
+            src = params["decoder"][f"layer_{rep * p + pos}"]
+            dst = stacked["decoder"][f"pos_{pos}"]
+            stacked["decoder"][f"pos_{pos}"] = jtu.tree_map(
+                lambda d, s, r=rep: d.at[r].set(s), dst, src)
+    stacked["embed"] = params["embed"]
+    stacked["final_norm"] = params["final_norm"]
+    toks = jnp.arange(16, dtype=jnp.int32)[None, :] % cfg_u.vocab_size
+    lg_u = forward(cfg_u, params, {"tokens": toks})
+    lg_s = forward(cfg_s, stacked, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg_u), np.asarray(lg_s),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_moe_groups_equivalence():
+    cfg, params = make("kimi-k2-1t-a32b")
+    toks = jnp.arange(2 * 32, dtype=jnp.int32).reshape(2, 32) % cfg.vocab_size
+    lg1 = forward(cfg.replace(moe_groups=1), params, {"tokens": toks})
+    lg2 = forward(cfg.replace(moe_groups=2), params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_full_configs_match_assignment_table():
+    """The registered full configs carry the exact assigned dimensions."""
+    expect = {
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    }
+    for arch, (L, d, nh, nkv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, nh, nkv, ff, v), arch
+    # MoE specifics
+    assert get_config("kimi-k2-1t-a32b").num_experts == 384
+    assert get_config("kimi-k2-1t-a32b").num_experts_per_tok == 8
+    assert get_config("llama4-maverick-400b-a17b").num_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").num_experts_per_tok == 1
+    assert get_config("jamba-1.5-large-398b").num_experts == 16
+    assert get_config("jamba-1.5-large-398b").num_experts_per_tok == 2
+    # structural
+    assert get_config("qwen3-1.7b").use_qk_norm
+    assert get_config("qwen2-vl-72b").mrope
+    assert get_config("whisper-base").encoder_layers == 6
+    pat = get_config("jamba-1.5-large-398b").block_pattern
+    assert pat.count("attn") == 1 and pat.count("mamba") == 7

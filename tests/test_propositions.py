@@ -1,0 +1,104 @@
+"""The paper's concurrency propositions (III.1–III.5) as runtime invariants.
+
+We instrument clusters at every scheduler step and assert the propositions
+over the *observed* joint states — a much stronger check than the scenario
+tests, since any interleaving the scheduler produces must satisfy them.
+"""
+import itertools
+
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Cluster, RoundType
+
+
+def observe_states(c: Cluster, steps: int, crash_at=None, victim=None):
+    """Step the cluster; record the set of joint (per-server) states seen."""
+    snapshots = []
+    for i in range(steps):
+        if crash_at is not None and i == crash_at:
+            c.crash(victim)
+        if not c.step():
+            break
+        snap = {}
+        for sid in c.members:
+            if sid in c.crashed:
+                continue
+            srv = c.servers[sid]
+            if srv.halted:
+                continue
+            snap[sid] = (srv.epoch, srv.round, srv.rtype)
+        snapshots.append(snap)
+    return snapshots
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n=st.integers(6, 10), seed=st.integers(0, 5000),
+       crash=st.booleans())
+def test_proposition_iii2_state_uniqueness(n, seed, crash):
+    """III.2: two non-faulty servers in the same (epoch, round) are in the
+    same round type."""
+    c = Cluster(n, d=3, seed=seed)
+    c.start()
+    snaps = observe_states(c, 3000, crash_at=(500 if crash else None),
+                           victim=seed % n)
+    for snap in snaps:
+        by_er = {}
+        for sid, (e, r, t) in snap.items():
+            key = (e, r)
+            if key in by_er:
+                assert by_er[key] == t, \
+                    f"III.2 violated: {key} seen as {by_er[key]} and {t}"
+            by_er[key] = t
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n=st.integers(6, 10), seed=st.integers(0, 5000),
+       crash=st.booleans())
+def test_proposition_iii1_round_skew(n, seed, crash):
+    """III.1 corollary: concurrent states stay within the windows of
+    Appendix A1 — epochs within 1, and rounds within 2 of each other among
+    non-faulty servers at any instant."""
+    c = Cluster(n, d=3, seed=seed)
+    c.start()
+    snaps = observe_states(c, 3000, crash_at=(400 if crash else None),
+                           victim=(seed // 3) % n)
+    for snap in snaps:
+        if len(snap) < 2:
+            continue
+        epochs = [e for (e, r, t) in snap.values()]
+        rounds = [r for (e, r, t) in snap.values()]
+        assert max(epochs) - min(epochs) <= 1, f"epoch skew >1: {snap}"
+        assert max(rounds) - min(rounds) <= 2, f"round skew >2: {snap}"
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n=st.integers(6, 9), seed=st.integers(0, 5000))
+def test_unreliable_rounds_have_no_epoch_change_without_failure(n, seed):
+    """No failures => a single epoch forever (epochs only advance through
+    fail transitions)."""
+    c = Cluster(n, d=3, seed=seed)
+    c.start()
+    snaps = observe_states(c, 2500)
+    for snap in snaps:
+        for sid, (e, r, t) in snap.items():
+            assert e == 1, f"epoch advanced without failures: {snap}"
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n=st.integers(6, 9), seed=st.integers(0, 5000))
+def test_delivered_rounds_monotone(n, seed):
+    """A-delivered round numbers are strictly increasing per server
+    (total-order prerequisite)."""
+    c = Cluster(n, d=3, seed=seed)
+    c.start()
+    c.run_until(lambda: c.min_delivered_rounds() >= 2, max_steps=100_000)
+    c.crash(seed % n)
+    c.run_until(lambda: c.min_delivered_rounds() >= 6, max_steps=400_000)
+    for sid in c.alive():
+        rounds = [rec.round for rec in c.deliveries(sid)]
+        assert rounds == sorted(rounds)
+        assert len(set(rounds)) == len(rounds)

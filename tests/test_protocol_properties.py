@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis): the four atomic-broadcast properties
+hold under randomized schedules, crash times and partial sends."""
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Cluster, Mode
+
+
+def check_invariants(c: Cluster):
+    streams = c.delivered_payload_streams()
+    vals = list(streams.values())
+    assert vals, "no alive servers"
+    # (Total order + Agreement prefix) identical delivery prefixes
+    minlen = min(len(v) for v in vals)
+    for v in vals:
+        assert v[:minlen] == vals[0][:minlen], "delivery streams diverge"
+    # (Integrity) no duplicates; only broadcast payloads
+    for sid, v in streams.items():
+        assert len(v) == len(set(v)), "duplicate A-delivery"
+        for p in v:
+            assert isinstance(p, str) and p.startswith("p")
+    # (Set agreement) per delivered round, same message set
+    per_round = {}
+    for sid in c.alive():
+        for rec in c.deliveries(sid):
+            key = rec.round
+            ms = tuple(sorted(m.uid for m in rec.msgs))
+            if key in per_round:
+                assert per_round[key] == ms, f"set disagreement round {key}"
+            else:
+                per_round[key] = ms
+    # consistent membership view
+    views = {tuple(c.servers[s].members) for s in c.alive()
+             if len(c.deliveries(s)) == max(len(c.deliveries(a))
+                                            for a in c.alive())}
+    assert len(views) <= 2  # at most one pending membership step of skew
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n=st.integers(min_value=5, max_value=11),
+    d=st.integers(min_value=2, max_value=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+    crashes=st.lists(
+        st.tuples(st.integers(0, 10), st.integers(0, 300),
+                  st.sampled_from([None, 0, 1, 2])),
+        min_size=0, max_size=2),
+)
+def test_atomic_broadcast_invariants(n, d, seed, crashes):
+    d = min(d, n - 2)
+    c = Cluster(n, d=d, seed=seed)
+    c.start()
+    f_budget = d - 1
+    for victim, delay, partial in crashes:
+        if f_budget == 0:
+            break
+        victim = victim % n
+        if victim in c.crashed:
+            continue
+        for _ in range(delay):
+            c.step()
+        c.crash(victim, partial_sends=partial)
+        f_budget -= 1
+    ok = c.run_until(lambda: c.min_delivered_rounds() >= 6,
+                     max_steps=400_000)
+    assert ok, f"no progress: states={[c.servers[s].state for s in c.alive()]}"
+    check_invariants(c)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n=st.integers(min_value=5, max_value=9),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_uniform_mode_invariants(n, seed):
+    c = Cluster(n, d=3, uniform=True, seed=seed)
+    c.start()
+    c.run_until(lambda: c.min_delivered_rounds() >= 2, max_steps=100_000)
+    c.crash(seed % n)
+    ok = c.run_until(lambda: c.min_delivered_rounds() >= 6, max_steps=400_000)
+    assert ok
+    check_invariants(c)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n=st.integers(min_value=6, max_value=10),
+    seed=st.integers(min_value=0, max_value=10_000),
+    mode=st.sampled_from([Mode.DUAL, Mode.RELIABLE_ONLY]),
+)
+def test_modes_with_failure(n, seed, mode):
+    c = Cluster(n, d=3, mode=mode, seed=seed)
+    c.start()
+    c.run_until(lambda: c.min_delivered_rounds() >= 1, max_steps=100_000)
+    c.crash((seed // 7) % n, partial_sends=seed % 3)
+    ok = c.run_until(lambda: c.min_delivered_rounds() >= 5, max_steps=400_000)
+    assert ok
+    check_invariants(c)

@@ -1,0 +1,93 @@
+"""Roofline machinery: HLO collective parsing + analytic cost model sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.roofline.analysis import (RooflineReport, parse_collectives,
+                                     wire_bytes, model_flops_for)
+from repro.roofline.analytic import cost_model
+
+
+HLO_SAMPLE = """
+  %all-gather.1 = bf16[256,4096]{1,0} all-gather(bf16[16,4096]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %all-reduce.2 = f32[1024]{0} all-reduce(f32[1024]{0} %y), replica_groups=[16,16]<=[256]{...}, to_apply=%add
+  %cp = bf16[8,128]{1,0} collective-permute(bf16[8,128]{1,0} %z), source_target_pairs={{0,1}}
+"""
+
+
+def test_parse_collectives():
+    colls = parse_collectives(HLO_SAMPLE)
+    kinds = [c["kind"] for c in colls]
+    assert kinds == ["all-gather", "all-reduce", "collective-permute"]
+    ag = colls[0]
+    assert ag["operand_bytes"] == 16 * 4096 * 2
+    assert ag["result_bytes"] == 256 * 4096 * 2
+    assert ag["group_size"] == 16
+    ar = colls[1]
+    assert ar["operand_bytes"] == 1024 * 4
+    assert ar["group_size"] == 16
+
+
+def test_wire_bytes_factors():
+    colls = parse_collectives(HLO_SAMPLE)
+    w = wire_bytes(colls)
+    n = 16
+    assert np.isclose(w["all-gather"], (n - 1) / n * 256 * 4096 * 2)
+    assert np.isclose(w["all-reduce"], 2 * (n - 1) / n * 1024 * 4)
+    assert np.isclose(w["collective-permute"], 8 * 128 * 2)
+
+
+def test_roofline_report_terms():
+    rep = RooflineReport(
+        arch="a", shape="s", mesh="m", chips=256,
+        hlo_flops_per_chip=197e12,      # exactly 1s of compute
+        hlo_bytes_per_chip=819e9,       # exactly 1s of memory
+        collective_bytes_per_chip=25e9,  # 0.5s of collective
+        collective_breakdown={}, model_flops=197e12 * 256)
+    assert np.isclose(rep.t_compute, 1.0)
+    assert np.isclose(rep.t_memory, 1.0)
+    assert np.isclose(rep.t_collective, 0.5)
+    assert rep.dominant in ("compute", "memory")
+    assert np.isclose(rep.roofline_fraction, 1.0)
+
+
+def test_cost_model_train_matches_6nd():
+    """For a dense arch the analytic fwd FLOPs ~ 2*N*D (+attention)."""
+    cfg = get_config("yi-6b")
+    shape = SHAPES["train_4k"]
+    cm = cost_model(cfg, shape)
+    n = cfg.param_count()
+    tokens = shape.global_batch * shape.seq_len
+    base = 2 * n * tokens
+    assert base * 0.9 < cm.flops_fwd < base * 1.6, \
+        (cm.flops_fwd / base)
+    # train total = (3 + remat) x fwd
+    assert np.isclose(cm.flops_total, cm.flops_fwd * 4.0)
+
+
+def test_cost_model_moe_uses_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    shape = SHAPES["train_4k"]
+    cm = cost_model(cfg, shape)
+    tokens = shape.global_batch * shape.seq_len
+    dense_equiv = 2 * cfg.param_count() * tokens        # 1T dense would be...
+    active_equiv = 2 * cfg.active_param_count() * tokens
+    assert cm.flops_fwd < 0.1 * dense_equiv             # far below dense
+    assert cm.flops_fwd > 0.8 * active_equiv            # >= active estimate
+
+
+def test_cost_model_decode_memory_dominated():
+    cfg = get_config("granite-3-8b")
+    cm = cost_model(cfg, SHAPES["decode_32k"])
+    # decode: bytes ~ params + kv cache; flops tiny
+    assert cm.bytes_total > 1e10
+    assert cm.flops_total < 1e13
+    assert cm.kv_bytes > 0.5 * cm.bytes_total
+
+
+def test_model_flops_for_kinds():
+    cfg = get_config("yi-6b")
+    assert model_flops_for(cfg, SHAPES["train_4k"]) > \
+        model_flops_for(cfg, SHAPES["prefill_32k"]) > \
+        model_flops_for(cfg, SHAPES["decode_32k"])

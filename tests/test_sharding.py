@@ -1,0 +1,59 @@
+"""Sharding rules: logical-axis resolution, conflict avoidance, spec trees."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import model_specs, param_logical_axes
+from repro.sharding.rules import (decode_rules, to_pspec, train_rules,
+                                  tree_pspecs)
+
+
+def test_train_rules_basic():
+    r = train_rules(multi_pod=False)
+    assert to_pspec(("batch", None), r) == P(("data",), None)
+    assert to_pspec(("fsdp", "heads"), r) == P("data", "model")
+    assert to_pspec(("vocab", "fsdp"), r) == P("model", "data")
+
+
+def test_multi_pod_rules():
+    r = train_rules(multi_pod=True)
+    assert to_pspec(("batch", None), r) == P(("pod", "data"), None)
+
+
+def test_no_mesh_axis_used_twice():
+    r = train_rules(multi_pod=False)
+    # experts -> model and ff -> model in the same spec: second use dropped
+    spec = to_pspec(("experts", "ff", "fsdp"), r)
+    flat = []
+    for ax in spec:
+        if ax is None:
+            continue
+        flat.extend(ax if isinstance(ax, tuple) else (ax,))
+    assert len(flat) == len(set(flat)), spec
+
+
+def test_decode_rules_long_context():
+    r = decode_rules(multi_pod=False, long_context=True)
+    assert to_pspec(("batch",), r) == P(None)
+    sk = to_pspec(("seq_kv",), r)
+    assert sk == P(("data", "model"))
+
+
+def test_param_pspecs_cover_all_archs():
+    for arch in ("yi-6b", "kimi-k2-1t-a32b", "jamba-1.5-large-398b",
+                 "whisper-base", "xlstm-350m"):
+        cfg = get_config(arch, reduced=True)
+        logical = param_logical_axes(model_specs(cfg))
+        specs = tree_pspecs(logical, train_rules(False))
+        leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda v: isinstance(v, P))
+        assert leaves and all(isinstance(l, P) for l in leaves)
+
+
+def test_expert_weights_ep_sharded():
+    cfg = get_config("kimi-k2-1t-a32b", reduced=True)
+    logical = param_logical_axes(model_specs(cfg))
+    specs = tree_pspecs(logical, train_rules(False))
+    wg = specs["decoder"]["layer_0"]["moe"]["w_gate"]
+    assert wg[0] == "model"   # experts -> EP over model axis
+    assert wg[1] == "data"    # d_model -> FSDP

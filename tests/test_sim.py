@@ -1,0 +1,72 @@
+"""Discrete-event simulator: paper-trend assertions + determinism."""
+import pytest
+
+from repro.sim import build_simulation
+
+
+def run_algo(algo, n, *, batch=4, network="sdc", rounds=15, max_time=30.0,
+             crash=None):
+    sim, met = build_simulation(algo, n, batch=batch, network=network)
+    if crash is not None:
+        sim.schedule_crash(*crash)
+    sim.start()
+    target = rounds * n
+    sim.run(until=lambda: len(met.delivered_msgs) >= max(n - 1, 1) and
+            all(v >= target for v in met.delivered_msgs.values()),
+            max_time=max_time)
+    return met
+
+
+def test_allconcurplus_beats_allconcur():
+    """Paper Fig. 4: AllConcur+ has higher throughput and lower latency."""
+    mp = run_algo("allconcur+", 32)
+    ma = run_algo("allconcur", 32)
+    assert mp.throughput(5, 12) > 1.5 * ma.throughput(5, 12)
+    assert mp.median_latency() < ma.median_latency()
+
+
+def test_allconcurplus_close_to_allgather():
+    """Paper: 79-100% of AllGather's throughput; ~2x its latency."""
+    mp = run_algo("allconcur+", 32)
+    mg = run_algo("allgather", 32)
+    ratio = mp.throughput(5, 12) / mg.throughput(5, 12)
+    assert 0.79 <= ratio <= 1.05, f"throughput ratio {ratio}"
+    lat_ratio = mp.median_latency() / mg.median_latency()
+    assert 1.5 <= lat_ratio <= 3.0, f"latency ratio {lat_ratio}"
+
+
+def test_allconcurplus_beats_lcr_and_libpaxos():
+    mp = run_algo("allconcur+", 24)
+    ml = run_algo("lcr", 24)
+    mx = run_algo("libpaxos", 24)
+    assert mp.throughput(5, 12) > ml.throughput(5, 12)
+    assert mp.throughput(5, 12) > 5 * mx.throughput(5, 12)
+    assert mp.median_latency() < ml.median_latency()
+    assert mp.median_latency() < mx.median_latency()
+
+
+def test_mdc_slower_than_sdc():
+    sdc = run_algo("allconcur+", 20, network="sdc")
+    mdc = run_algo("allconcur+", 20, network="mdc", max_time=120.0)
+    assert mdc.median_latency() > 5 * sdc.median_latency()
+
+
+def test_batching_raises_throughput():
+    small = run_algo("allconcur+", 16, batch=1)
+    big = run_algo("allconcur+", 16, batch=64)
+    assert big.throughput(5, 12) > 3 * small.throughput(5, 12)
+    assert big.median_latency() > small.median_latency()
+
+
+def test_failure_recovery_in_sim():
+    met = run_algo("allconcur+", 16, rounds=25, crash=(5, 5e-3))
+    alive = {s: v for s, v in met.delivered_msgs.items() if s != 5}
+    assert len(alive) == 15
+    assert min(alive.values()) >= 25 * 15  # survivors keep delivering
+
+
+def test_sim_determinism():
+    a = run_algo("allconcur+", 12, rounds=10)
+    b = run_algo("allconcur+", 12, rounds=10)
+    assert a.median_latency() == b.median_latency()
+    assert a.throughput(3, 8) == b.throughput(3, 8)

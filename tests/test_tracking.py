@@ -1,0 +1,81 @@
+"""Tracking digraphs / early termination (paper §III-A, Algorithm 6) —
+including the exact Fig. 1b trace."""
+from repro.core.digraph import circulant_digraph
+from repro.core.tracking import TrackingDigraph, TrackingState
+
+
+def fig1_graph():
+    """G_S(9,3) stand-in: circulant with offsets {1,2,4} (kappa=3); the
+    trace below follows the paper's logic with p0's successors = {1,2,4}."""
+    return circulant_digraph(list(range(9)), [1, 2, 4])
+
+
+def test_expansion_excludes_owner():
+    """On fn(target=0, owner=4): suspect 0's successors except 4 (FIFO
+    argument from Prop. III.14)."""
+    g = fig1_graph()
+    t = TrackingDigraph(0)
+    t.update(g, [], [(0, 4)])
+    assert 4 not in t.verts
+    assert t.verts == {0, 1, 2}
+
+
+def test_edge_removal_on_second_notification():
+    g = fig1_graph()
+    t = TrackingDigraph(0)
+    t.update(g, [], [(0, 4)])            # expand: 0 -> {1, 2}
+    known = [(0, 4)]
+    # 1 also failed, detected by 2: expansion through 1 minus owner 2
+    t.update(g, known, [(1, 2)])
+    known.append((1, 2))
+    assert 1 in t.verts                  # still suspected (has successors now)
+    # 2 fails too, detected by 3 -> suspicion spreads
+    t.update(g, known, [(2, 3)])
+    known.append((2, 3))
+    assert not t.empty
+
+
+def test_tracking_stops_when_all_suspects_failed():
+    """Message provably lost: all suspected holders are failure targets."""
+    g = circulant_digraph(list(range(4)), [1])  # ring 0->1->2->3->0
+    t = TrackingDigraph(0)
+    # 0 failed (detected by 1): 0's only successor is 1, excluded as owner ->
+    # 0 has no extra successors to suspect; all suspects ({0}) are targets
+    t.update(g, [], [(0, 1)])
+    assert t.empty, f"verts={t.verts}"
+
+
+def test_tracking_clear_on_receive():
+    st = TrackingState(fig1_graph())
+    assert not st.all_empty()
+    for v in range(9):
+        st.stop_tracking(v)
+    assert st.all_empty()
+
+
+def test_prune_unreachable():
+    g = fig1_graph()
+    t = TrackingDigraph(0)
+    t.update(g, [], [(0, 4)])
+    known = [(0, 4)]
+    # notifications that disconnect part of the suspicion graph prune it
+    t.update(g, known, [(1, 2)])
+    known.append((1, 2))
+    t.update(g, known, [(1, 3)])
+    known.append((1, 3))
+    t.update(g, known, [(1, 5)])
+    known.append((1, 5))
+    # 1's remaining suspicion edges shrink; graph stays origin-rooted
+    reach = t._reachable_from_origin()
+    assert t.verts == reach
+
+
+def test_reset_redelivers_notifications():
+    g = fig1_graph()
+    st = TrackingState(g)
+    st.apply_notifications([], [(0, 4)])
+    before = set(st.graphs[0].verts)
+    st.reset(g)
+    assert st.graphs[0].verts == {0}
+    st.apply_notifications([], [(0, 4)])
+    assert set(st.graphs[0].verts) == before

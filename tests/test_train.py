@@ -1,0 +1,125 @@
+"""Training substrate: optimizers, grad accumulation, checkpointing, data."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, ShapeConfig
+from repro.models import init_params, model_specs
+from repro.models.params import init_params as init_tree
+from repro.train import (CheckpointManager, DataPipeline, OptConfig, lr_at,
+                         make_train_step, opt_state_specs, synthetic_batch,
+                         tree_hash)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def setup(arch="qwen3-1.7b", opt="adamw"):
+    cfg = get_config(arch, reduced=True).replace(dtype="float32", remat="none")
+    specs = model_specs(cfg)
+    params = init_params(specs, KEY, dtype=jnp.float32)
+    oc = OptConfig(name=opt, lr=3e-3, warmup_steps=2, decay_steps=50)
+    opt_state = init_tree(opt_state_specs(oc, specs), KEY, jnp.float32)
+    shape = ShapeConfig("t", 32, 4, "train")
+    return cfg, params, oc, opt_state, shape
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_optimizer_memorizes_fixed_batch(opt):
+    cfg, params, oc, opt_state, shape = setup(opt=opt)
+    step = jax.jit(make_train_step(cfg, oc))
+    batch = synthetic_batch(cfg, shape, 0)
+    losses = []
+    for _ in range(20):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0, losses
+
+
+def test_grad_accum_matches_full_batch():
+    cfg, params, oc, opt_state, shape = setup()
+    batch = synthetic_batch(cfg, shape, 0)
+    s1 = jax.jit(make_train_step(cfg, oc))
+    s2 = jax.jit(make_train_step(cfg, oc, grad_accum=2))
+    p1, o1, m1 = s1(params, opt_state, batch)
+    p2, o2, m2 = s2(params, opt_state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    a = jax.tree_util.tree_leaves(p1)[0]
+    b = jax.tree_util.tree_leaves(p2)[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_lr_schedule():
+    oc = OptConfig(lr=1e-3, warmup_steps=10, decay_steps=100, min_lr_ratio=0.1)
+    assert float(lr_at(oc, 0)) == 0.0
+    assert float(lr_at(oc, 10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr_at(oc, 100)) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_adafactor_state_is_factored():
+    cfg, params, oc, _, _ = setup(opt="adafactor")
+    specs = model_specs(cfg)
+    from repro.train.optimizer import adafactor_state_specs
+    st = adafactor_state_specs(specs)
+    # factored second moment is much smaller than the params
+    from repro.models.params import param_count
+    assert param_count(st["v_row"]) + param_count(st["v_col"]) < \
+        0.2 * param_count(specs)
+
+
+def test_checkpoint_roundtrip_and_gc():
+    cfg, params, oc, opt_state, shape = setup()
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3):
+            cm.save(s, {"params": params}, {"config": cfg.name})
+        assert cm.steps() == [2, 3]  # GC keeps last 2
+        restored = cm.restore(3, {"params": params})
+        assert tree_hash(restored) == tree_hash({"params": params})
+        man = cm.manifest(3)
+        assert man["step"] == 3 and man["config"] == cfg.name
+
+
+def test_checkpoint_async():
+    cfg, params, *_ = setup()
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        cm.save_async(7, {"params": params})
+        cm.wait()
+        assert cm.latest_step() == 7
+
+
+def test_data_determinism_and_sharding():
+    cfg = get_config("yi-6b", reduced=True)
+    shape = ShapeConfig("t", 16, 8, "train")
+    p1 = DataPipeline(cfg, shape, seed=3)
+    p2 = DataPipeline(cfg, shape, seed=3)
+    b1, b2 = p1.batch_at(5), p2.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # shards are disjoint slices of the same global batch
+    pa = DataPipeline(cfg, shape, seed=3, n_shards=2, my_shard=0)
+    pb = DataPipeline(cfg, shape, seed=3, n_shards=2, my_shard=1)
+    ba, bb = pa.batch_at(5), pb.batch_at(5)
+    glob = np.asarray(b1["tokens"])
+    np.testing.assert_array_equal(np.asarray(ba["tokens"]), glob[:4])
+    np.testing.assert_array_equal(np.asarray(bb["tokens"]), glob[4:])
+    # elastic repartition: 2 shards -> 4 shards
+    pa.repartition(4, 2)
+    np.testing.assert_array_equal(np.asarray(pa.batch_at(5)["tokens"]),
+                                  glob[4:6])
+
+
+def test_vision_and_audio_batches():
+    for arch in ("qwen2-vl-72b", "whisper-base"):
+        cfg = get_config(arch, reduced=True)
+        shape = ShapeConfig("t", 16, 2, "train")
+        b = synthetic_batch(cfg, shape, 0)
+        if cfg.frontend == "vision_stub":
+            assert b["vision_embeds"].shape == (2, cfg.frontend_len, cfg.d_model)
+            assert b["positions3"].shape == (2, 3, 16)
+        if cfg.encoder_layers:
+            assert b["frames"].shape == (2, cfg.frontend_len, cfg.d_model)

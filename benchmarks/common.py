@@ -24,6 +24,24 @@ def run_sim(algo: str, n: int, *, batch: int = 4, network: str = "sdc",
     return met, time.time() - t0
 
 
+_ROWS: list = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
-    """CSV row: name,us_per_call,derived."""
+    """CSV row: name,us_per_call,derived.  Rows are also recorded so
+    ``benchmarks.run --json`` can dump them."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    row = {"name": name, "us_per_call": round(us_per_call, 3)}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                row[k] = float(v)
+            except ValueError:
+                row[k] = v
+    _ROWS.append(row)
+
+
+def rows() -> list:
+    """All rows emitted so far (for --json output)."""
+    return list(_ROWS)

@@ -1,7 +1,9 @@
-"""Benchmark harness: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale sizes
-(slow); default is CI-sized."""
+"""Benchmark harness: one function per paper table/figure (+ subsystem
+benches).  Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses
+paper-scale sizes (slow); default is CI-sized.  ``--json PATH`` additionally
+dumps the rows as JSON for trajectory tracking."""
 import argparse
+import json
 import sys
 
 
@@ -9,12 +11,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="table3|fig3|fig4|fig5|fig6|arch")
+                    help="table3|fig3|fig4|fig5|fig6|arch|smr")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump results as JSON to PATH")
     args = ap.parse_args()
 
-    from . import (arch_microbench, paper_fig3_batching, paper_fig4_scaling,
-                   paper_fig5_failures, paper_fig6_robustness,
-                   paper_table3_connectivity)
+    from . import (arch_microbench, common, paper_fig3_batching,
+                   paper_fig4_scaling, paper_fig5_failures,
+                   paper_fig6_robustness, paper_table3_connectivity,
+                   smr_throughput)
 
     benches = {
         "table3": paper_table3_connectivity.main,
@@ -23,12 +28,21 @@ def main() -> None:
         "fig5": paper_fig5_failures.main,
         "fig6": paper_fig6_robustness.main,
         "arch": arch_microbench.main,
+        "smr": smr_throughput.main,
     }
+    if args.only and args.only not in benches:
+        ap.error(f"unknown bench {args.only!r}; choose from "
+                 f"{'|'.join(benches)}")
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         fn(full=args.full)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(common.rows(), fh, indent=2)
+        print(f"wrote {len(common.rows())} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,106 @@
+"""SMR service layer: client-perceived requests/s and p50/p99 latency.
+
+Sweeps n, batch size, and read ratio across the three protocol modes
+(DUAL = allconcur+, RELIABLE_ONLY = allconcur, UNRELIABLE_ONLY = allgather),
+plus one failure-injection run per mode (crash mid-workload).  Unlike the
+paper figures (protocol-internal A-broadcast -> A-deliver latency), these
+numbers are what a client sees: submit -> committed-and-applied ack.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.sim import build_smr_simulation
+from repro.smr import WorkloadConfig
+
+from .common import emit
+
+ALGOS = ("allconcur+", "allconcur", "allgather")
+
+
+def run_smr(algo: str, n: int, *, batch_max: int, read_ratio: float,
+            num_clients: int, requests_per_client: int, network: str = "sdc",
+            crash=None, max_time: float = 5.0, seed: int = 0,
+            linearizable: bool = True):
+    cfg = WorkloadConfig(num_clients=num_clients, read_ratio=read_ratio,
+                         distribution="zipfian", arrival="closed", seed=seed,
+                         linearizable_reads=linearizable)
+    sim, smr, services = build_smr_simulation(
+        algo, n, workload=cfg, requests_per_client=requests_per_client,
+        batch_max=batch_max, network=network, stale_bound=4)
+    crashed = set()
+    if crash:
+        for c in crash:
+            sim.schedule_crash(*c)
+            crashed.add(c[0])
+    # clients homed on a crashed server stall: run until every *surviving*
+    # client finished its own workload (acks from doomed clients don't count
+    # toward the target)
+    alive_clients = [c for c in sim.workload.clients
+                     if sim.client_home[c.client_id] not in crashed]
+    t0 = time.time()
+    sim.start()
+    sim.run(until=lambda: all(c.acked >= requests_per_client
+                              for c in alive_clients),
+            max_time=max_time)
+    return smr, time.time() - t0
+
+
+def main(full: bool = False) -> None:
+    ns = [8, 16, 32] if full else [8, 16]
+    batches = [4, 16, 64] if full else [8, 32]
+    ratios = [0.0, 0.5, 0.95]
+    rpc = 40 if full else 15
+    clients_per_server = 2
+
+    for algo in ALGOS:
+        # ---- scaling in n (fixed batch, mixed workload) --------------------
+        for n in ns:
+            smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+                                num_clients=clients_per_server * n,
+                                requests_per_client=rpc)
+            emit(f"smr_{algo}_scale_n{n}", smr.p50() * 1e6,
+                 f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
+                 f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
+                 f"wall_s={wall:.1f}")
+        # ---- batch-size sweep (client population scales with batch) -------
+        n = ns[0]
+        for b in batches:
+            smr, wall = run_smr(algo, n, batch_max=b, read_ratio=0.5,
+                                num_clients=b * n,
+                                requests_per_client=rpc)
+            emit(f"smr_{algo}_batch_n{n}_b{b}", smr.p50() * 1e6,
+                 f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
+                 f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
+                 f"wall_s={wall:.1f}")
+        # ---- read-ratio sweep: stale-bounded local reads vs log writes ----
+        for rr in ratios:
+            smr, wall = run_smr(algo, n, batch_max=16, read_ratio=rr,
+                                num_clients=clients_per_server * n,
+                                requests_per_client=rpc, linearizable=False)
+            emit(f"smr_{algo}_reads_n{n}_r{int(rr*100)}", smr.p50() * 1e6,
+                 f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
+                 f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
+                 f"wall_s={wall:.1f}")
+        # ---- linearizable reads: every get ordered through the log --------
+        smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+                            num_clients=clients_per_server * n,
+                            requests_per_client=rpc, linearizable=True)
+        emit(f"smr_{algo}_linreads_n{n}_r50", smr.p50() * 1e6,
+             f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
+             f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
+             f"wall_s={wall:.1f}")
+        # ---- failure injection mid-workload (no FT in allgather) ----------
+        if algo != "allgather":
+            smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+                                num_clients=clients_per_server * n,
+                                requests_per_client=rpc,
+                                crash=[(1, 0.0005, 1)], max_time=8.0)
+            emit(f"smr_{algo}_crash_n{n}", smr.p50() * 1e6,
+                 f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
+                 f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
+                 f"wall_s={wall:.1f}")
+
+
+if __name__ == "__main__":
+    main(full=True)

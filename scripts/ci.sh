@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite, then a CI-sized smoke benchmark of the
+# SMR service layer.  Slow tests (>60 s) are gated behind --runslow and are
+# not part of this default gate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke bench: SMR throughput (CI size) =="
+python -m benchmarks.run --only smr

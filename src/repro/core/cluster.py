@@ -33,6 +33,7 @@ class Cluster:
         uniform: bool = False,
         primary_partition: bool = False,
         payload_fn: Optional[Callable[[int, int], Any]] = None,
+        on_deliver_fn: Optional[Callable[[int, DeliveryRecord], None]] = None,
         seed: int = 0,
     ):
         self.n = n
@@ -49,6 +50,8 @@ class Cluster:
                 g_r=gs_digraph(self.members, d),
                 mode=mode,
                 payload_for=(lambda s: (lambda r: payload_fn(s, r)))(sid),
+                on_deliver=((lambda s: (lambda rec: on_deliver_fn(s, rec)))(sid)
+                            if on_deliver_fn else None),
                 uniform=uniform,
                 f=f,
                 primary_partition=primary_partition,

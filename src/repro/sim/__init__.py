@@ -1,9 +1,10 @@
 from .network import FatTreeSDC, MultiDC, NetworkModel, UniformNetwork, make_network
-from .runner import Metrics, Simulation, build_simulation, wire_size
+from .runner import (Metrics, Simulation, SMRMetrics, build_simulation,
+                     build_smr_simulation, wire_size)
 from .baselines import LCRServer, LibpaxosNode
 
 __all__ = [
     "FatTreeSDC", "LCRServer", "LibpaxosNode", "Metrics", "MultiDC",
-    "NetworkModel", "Simulation", "UniformNetwork", "build_simulation",
-    "make_network", "wire_size",
+    "NetworkModel", "SMRMetrics", "Simulation", "UniformNetwork",
+    "build_simulation", "build_smr_simulation", "make_network", "wire_size",
 ]

@@ -1,0 +1,247 @@
+"""Per-server SMR shim: request -> batch -> A-deliver -> apply.
+
+One :class:`SMRService` sits next to each :class:`AllConcurServer`.  It
+plugs into the server's two application hooks:
+
+* ``payload_for(round)`` — drains up to ``batch_max`` pending client
+  requests into the payload of the server's own A-broadcast message.  A
+  request stays in the pending queue until it is *applied* (at-least-once
+  batching): if a round is rolled back after a failure and rerun reliably,
+  the request simply rides again, and apply-time deduplication makes the
+  overall semantics exactly-once.
+* ``on_deliver(record)`` — applies an A-delivered round: messages in the
+  record's deterministic src-sorted order, requests in batch order, each
+  deduplicated by ``(client_id, seq)`` against the per-client session table.
+  Replicas therefore apply identical command sequences and their state
+  digests stay equal.
+
+Reads:
+
+* ``read_local(key)`` — served from the local replica; the result carries
+  the replica's applied round so callers can bound staleness.  If
+  ``stale_bound`` is set, the service refuses local reads whenever the
+  replica lags more than that many rounds behind the freshest round it has
+  *heard of* (seen in any received message), returning None.
+* linearizable reads — submit a ``{"op": "get"}`` request like a write; the
+  answer is produced only when the read's round commits, so it reflects
+  every write acknowledged before it and never travels back in time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from ..core.cluster import Cluster
+from ..core.server import DeliveryRecord, Mode
+from .log import DeliveredRoundLog, LogEntry
+from .state_machine import KVStateMachine
+
+
+@dataclass(frozen=True)
+class ClientRequest:
+    """One client command.  ``seq`` increases per client; a retry reuses the
+    original seq, which is what apply-time dedup keys on."""
+    client_id: int
+    seq: int
+    op: Mapping[str, Any]
+
+    @property
+    def uid(self) -> Tuple[int, int]:
+        return (self.client_id, self.seq)
+
+
+KNOWN_OPS = frozenset({"put", "get", "del", "incr", "noop"})
+
+
+@dataclass(frozen=True)
+class ReadResult:
+    value: Any
+    key_version: int
+    applied_round: int
+    stale: bool = False
+
+
+class SMRService:
+    """Replicated KV service endpoint co-located with one server."""
+
+    def __init__(
+        self,
+        sid: int,
+        *,
+        batch_max: int = 64,
+        compact_every: int = 64,
+        stale_bound: Optional[int] = None,
+        on_ack: Optional[Callable[[ClientRequest, Any, int], None]] = None,
+    ):
+        self.sid = sid
+        self.batch_max = max(batch_max, 1)
+        self.stale_bound = stale_bound
+        self.on_ack = on_ack          # (request, result, round) -> None
+        self.sm = KVStateMachine()
+        self.log = DeliveredRoundLog(compact_every=compact_every)
+
+        self.pending: List[ClientRequest] = []       # submitted, not applied
+        self._pending_uids: set = set()
+        # exactly-once session state: per client, highest applied seq + its
+        # cached result (re-acked on retry of an already-committed request)
+        self.applied_seq: Dict[int, int] = {}
+        self.last_result: Dict[int, Tuple[int, Any]] = {}
+
+        self.server: Any = None       # optional backref for staleness bound
+        self.applied_round = -1       # highest A-delivered round applied
+        self.highest_seen_round = -1  # freshest round heard of (staleness ref)
+        self.applied_digests: Dict[int, str] = {}    # round -> digest after
+        self.acked = 0
+        self.duplicates_dropped = 0
+        self.invalid_dropped = 0
+
+    # ----------------------------------------------------------- client side
+    def submit(self, req: ClientRequest) -> bool:
+        """Enqueue a client request.  Returns False if the op is invalid or
+        it is a duplicate of an already-committed request — in which case
+        the cached result is re-acked immediately (exactly-once under
+        retry)."""
+        if req.op.get("op") not in KNOWN_OPS:
+            return False              # reject before it can enter the log
+        if self.applied_seq.get(req.client_id, -1) >= req.seq:
+            seq, result = self.last_result.get(req.client_id, (req.seq, None))
+            if self.on_ack and seq == req.seq:
+                self.on_ack(req, result, self.applied_round)
+            return False
+        if req.uid in self._pending_uids:
+            return False              # retry of an in-flight request: coalesce
+        self.pending.append(req)
+        self._pending_uids.add(req.uid)
+        return True
+
+    def read_local(self, key: Any) -> ReadResult:
+        """Stale-bounded local read (no round trip through the log)."""
+        if self.server is not None:
+            # the protocol is in round ``server.round``; everything up to the
+            # previous round may already be committed elsewhere
+            self.highest_seen_round = max(self.highest_seen_round,
+                                          self.server.round - 1)
+        lag = self.highest_seen_round - self.applied_round
+        if self.stale_bound is not None and lag > self.stale_bound:
+            return ReadResult(None, 0, self.applied_round, stale=True)
+        value, kver = self.sm.read(key)
+        return ReadResult(value, kver, self.applied_round)
+
+    def submit_linearizable_read(self, client_id: int, seq: int,
+                                 key: Any) -> bool:
+        """Linearizable read: ordered through the log like a write."""
+        return self.submit(ClientRequest(client_id, seq, {"op": "get",
+                                                          "key": key}))
+
+    # ----------------------------------------------------------- server hooks
+    def payload_for(self, rnd: int) -> Dict[str, Any]:
+        """Build this server's message payload for round ``rnd``.  Requests
+        are *not* removed here — they leave the queue when applied."""
+        reqs = tuple((r.client_id, r.seq, dict(r.op))
+                     for r in self.pending[: self.batch_max])
+        return {"kind": "smr", "src": self.sid, "round": rnd,
+                "batch": len(reqs), "reqs": reqs}
+
+    def on_deliver(self, rec: DeliveryRecord) -> None:
+        """Apply one A-delivered round deterministically."""
+        self.highest_seen_round = max(self.highest_seen_round, rec.round)
+        commands: List[Tuple[int, int, Any]] = []
+        for msg in rec.msgs:          # already src-sorted (DeliveryRecord)
+            payload = msg.payload
+            if not (isinstance(payload, Mapping) and payload.get("kind") == "smr"):
+                continue
+            for cid, seq, op in payload.get("reqs", ()):
+                if self.applied_seq.get(cid, -1) >= seq:
+                    self.duplicates_dropped += 1
+                    continue
+                if op.get("op") not in KNOWN_OPS:
+                    # a faulty peer batched garbage: skip it *deterministically*
+                    # (every replica sees the same payload) so one bad request
+                    # cannot poison the apply loop cluster-wide
+                    self.invalid_dropped += 1
+                    continue
+                try:
+                    result = self.sm.apply(op)
+                except Exception as exc:
+                    # type-invalid command (e.g. incr on a string value).
+                    # ``apply`` raises before mutating, and the same state +
+                    # command raises identically on every replica, so turning
+                    # it into an error *result* is deterministic.  The client
+                    # gets an error ack; the command stays out of the log so
+                    # ``replay`` is unaffected.
+                    self.invalid_dropped += 1
+                    result = {"error": type(exc).__name__}
+                    self.applied_seq[cid] = seq
+                    self.last_result[cid] = (seq, result)
+                    self._ack(cid, seq, op, result, rec.round)
+                    continue
+                self.applied_seq[cid] = seq
+                self.last_result[cid] = (seq, result)
+                commands.append((cid, seq, op))
+                self._ack(cid, seq, op, result, rec.round)
+        self.applied_round = rec.round
+        self.applied_digests[rec.round] = self.sm.digest()
+        self.log.append(
+            LogEntry(round=rec.round, epoch=rec.epoch, digest=self.sm.digest(),
+                     commands=tuple(commands)),
+            self.sm,
+        )
+        if self.log.compactions:
+            # prune per-round digests along with the log (bounded memory)
+            floor = self.log.snapshot_round - self.log.compact_every
+            self.applied_digests = {r: d for r, d in self.applied_digests.items()
+                                    if r > floor}
+
+    def _ack(self, cid: int, seq: int, op: Mapping[str, Any], result: Any,
+             rnd: int) -> None:
+        uid = (cid, seq)
+        if uid in self._pending_uids:
+            self._pending_uids.discard(uid)
+            self.pending = [r for r in self.pending if r.uid != uid]
+            self.acked += 1
+            if self.on_ack:
+                self.on_ack(ClientRequest(cid, seq, op), result, rnd)
+
+    # ------------------------------------------------------------- inspection
+    def digest(self) -> str:
+        return self.sm.digest()
+
+    def digest_at(self, rnd: int) -> Optional[str]:
+        return self.applied_digests.get(rnd)
+
+
+# ---------------------------------------------------------------------------
+# cluster integration: schedule-randomized correctness harness
+# ---------------------------------------------------------------------------
+
+def build_smr_cluster(
+    n: int,
+    d: int = 3,
+    *,
+    mode: Mode = Mode.DUAL,
+    seed: int = 0,
+    batch_max: int = 64,
+    compact_every: int = 64,
+    stale_bound: Optional[int] = None,
+    on_ack: Optional[Callable[[int, ClientRequest, Any, int], None]] = None,
+    **cluster_kwargs: Any,
+) -> Tuple[Cluster, Dict[int, SMRService]]:
+    """A :class:`Cluster` whose servers run the SMR service: payloads come
+    from each service's pending batch, deliveries are applied to it."""
+    services: Dict[int, SMRService] = {
+        sid: SMRService(sid, batch_max=batch_max, compact_every=compact_every,
+                        stale_bound=stale_bound,
+                        on_ack=(lambda s: (lambda req, res, rnd:
+                                           on_ack(s, req, res, rnd)))(sid)
+                        if on_ack else None)
+        for sid in range(n)
+    }
+    cluster = Cluster(
+        n, d, mode=mode, seed=seed,
+        payload_fn=lambda sid, rnd: services[sid].payload_for(rnd),
+        on_deliver_fn=lambda sid, rec: services[sid].on_deliver(rec),
+        **cluster_kwargs,
+    )
+    for sid, svc in services.items():
+        svc.server = cluster.servers[sid]
+    return cluster, services

@@ -1,0 +1,117 @@
+"""Deterministic versioned key-value state machine.
+
+The state machine is the replicated application: every replica applies the
+same command sequence (the A-delivered order) and must end in the same
+state.  Divergence detection is O(1) per command via a rolling digest — a
+hash chain over (command, result) pairs — so two replicas that ever applied
+a different command, or the same commands in a different order, report
+different digests forever after.
+
+Supported ops (plain dicts so payloads stay picklable/serializable):
+
+    {"op": "put",  "key": k, "value": v}   -> previous value (or None)
+    {"op": "get",  "key": k}               -> current value (or None)
+    {"op": "del",  "key": k}               -> deleted value (or None)
+    {"op": "incr", "key": k, "delta": d}   -> new counter value
+    {"op": "noop"}                         -> None
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+_EMPTY_DIGEST = "0" * 16
+
+
+def _stable_repr(x: Any) -> str:
+    """Deterministic repr for digest input (dicts sorted by key)."""
+    if isinstance(x, Mapping):
+        inner = ",".join(f"{k!r}:{_stable_repr(x[k])}" for k in sorted(x))
+        return "{" + inner + "}"
+    if isinstance(x, (list, tuple)):
+        return "[" + ",".join(_stable_repr(v) for v in x) + "]"
+    return repr(x)
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    """A point-in-time copy of the full state-machine state."""
+    version: int
+    digest: str
+    data: Tuple[Tuple[Any, Any], ...]      # sorted (key, value) pairs
+    versions: Tuple[Tuple[Any, int], ...]  # sorted (key, last-write version)
+
+
+class KVStateMachine:
+    """Versioned key-value store with snapshot/restore and rolling digest."""
+
+    def __init__(self) -> None:
+        self.data: Dict[Any, Any] = {}
+        self.key_version: Dict[Any, int] = {}
+        self.version = 0          # total commands applied
+        self._digest = _EMPTY_DIGEST
+
+    # ------------------------------------------------------------ application
+    def apply(self, cmd: Mapping[str, Any]) -> Any:
+        """Apply one command; returns its result.  Deterministic: same state
+        + same command -> same result + same next state on every replica."""
+        op = cmd.get("op")
+        key = cmd.get("key")
+        if op == "put":
+            result = self.data.get(key)
+            self.data[key] = cmd.get("value")
+            self.key_version[key] = self.version + 1
+        elif op == "get":
+            result = self.data.get(key)
+        elif op == "del":
+            result = self.data.pop(key, None)
+            self.key_version.pop(key, None)
+        elif op == "incr":
+            result = self.data.get(key, 0) + cmd.get("delta", 1)
+            self.data[key] = result
+            self.key_version[key] = self.version + 1
+        elif op == "noop":
+            result = None
+        else:
+            raise ValueError(f"unknown op: {op!r}")
+        self.version += 1
+        h = hashlib.sha256()
+        h.update(self._digest.encode())
+        h.update(_stable_repr(cmd).encode())
+        h.update(_stable_repr(result).encode())
+        self._digest = h.hexdigest()[:16]
+        return result
+
+    # -------------------------------------------------------------- integrity
+    def digest(self) -> str:
+        """Rolling digest over the applied history.  Equal digests imply the
+        replicas applied identical command sequences (hence identical state,
+        by determinism of ``apply``)."""
+        return self._digest
+
+    def read(self, key: Any) -> Tuple[Any, int]:
+        """Local read: (value, version of the last write to ``key``)."""
+        return self.data.get(key), self.key_version.get(key, 0)
+
+    # ------------------------------------------------------- snapshot/restore
+    def snapshot(self) -> Snapshot:
+        return Snapshot(
+            version=self.version,
+            digest=self._digest,
+            data=tuple(sorted(self.data.items(), key=lambda kv: repr(kv[0]))),
+            versions=tuple(sorted(self.key_version.items(),
+                                  key=lambda kv: repr(kv[0]))),
+        )
+
+    def restore(self, snap: Snapshot) -> None:
+        self.data = dict(snap.data)
+        self.key_version = dict(snap.versions)
+        self.version = snap.version
+        self._digest = snap.digest
+
+    @classmethod
+    def from_snapshot(cls, snap: Snapshot) -> "KVStateMachine":
+        sm = cls()
+        sm.restore(snap)
+        return sm

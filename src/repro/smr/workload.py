@@ -1,0 +1,118 @@
+"""YCSB-style client workload generator.
+
+Deterministic (seeded) generation of client request streams against the
+replicated KV store: configurable read/write mix, zipfian or uniform key
+popularity, N independent client sessions, and both closed-loop (one
+outstanding request per client, next issued on ack) and open-loop
+(exponential interarrival at a target rate) arrival processes.
+
+The generator produces *operations*; the driver (cluster test harness or
+the discrete-event simulator) decides when to submit them and wires acks
+back for closed-loop pacing.
+"""
+from __future__ import annotations
+
+import bisect
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from .service import ClientRequest
+
+
+class ZipfianGenerator:
+    """Zipf(theta) over [0, nkeys) via the precomputed CDF (nkeys is small
+    enough in simulation that O(nkeys) setup + O(log nkeys) draws win over
+    rejection sampling)."""
+
+    def __init__(self, nkeys: int, theta: float = 0.99):
+        self.nkeys = max(nkeys, 1)
+        self.theta = theta
+        weights = [1.0 / (i + 1) ** theta for i in range(self.nkeys)]
+        total = sum(weights)
+        acc, cdf = 0.0, []
+        for w in weights:
+            acc += w / total
+            cdf.append(acc)
+        self._cdf = cdf
+
+    def draw(self, rng: random.Random) -> int:
+        return bisect.bisect_left(self._cdf, rng.random())
+
+
+@dataclass
+class WorkloadConfig:
+    read_ratio: float = 0.5            # fraction of ops that are reads
+    distribution: str = "zipfian"      # "zipfian" | "uniform"
+    theta: float = 0.99                # zipfian skew
+    nkeys: int = 256
+    num_clients: int = 8
+    value_size: int = 16               # payload bytes per written value
+    linearizable_reads: bool = True    # reads through the log vs local
+    arrival: str = "closed"            # "closed" | "open"
+    open_rate: float = 1000.0          # req/s per client (open loop)
+    seed: int = 0
+
+
+@dataclass
+class WorkloadClient:
+    """One client session: its own RNG stream and seq counter."""
+    client_id: int
+    cfg: WorkloadConfig
+    rng: random.Random
+    zipf: Optional[ZipfianGenerator]
+    seq: int = 0
+    issued: int = 0
+    acked: int = 0
+
+    def _key(self) -> int:
+        if self.cfg.distribution == "uniform" or self.zipf is None:
+            return self.rng.randrange(self.cfg.nkeys)
+        return self.zipf.draw(self.rng)
+
+    def next_request(self) -> ClientRequest:
+        """Generate the next request (advances the session seq)."""
+        key = self._key()
+        if self.rng.random() < self.cfg.read_ratio:
+            op: Mapping[str, Any] = {"op": "get", "key": key}
+        else:
+            value = "v%d.%d" % (self.client_id, self.seq)
+            value += "x" * max(self.cfg.value_size - len(value), 0)
+            op = {"op": "put", "key": key, "value": value}
+        req = ClientRequest(self.client_id, self.seq, op)
+        self.seq += 1
+        self.issued += 1
+        return req
+
+    def interarrival(self) -> float:
+        """Open-loop: exponential gap to the next arrival (seconds)."""
+        return self.rng.expovariate(self.cfg.open_rate)
+
+
+class WorkloadGenerator:
+    """A population of deterministic client sessions."""
+
+    def __init__(self, cfg: WorkloadConfig):
+        self.cfg = cfg
+        zipf = (ZipfianGenerator(cfg.nkeys, cfg.theta)
+                if cfg.distribution == "zipfian" else None)
+        self.clients: List[WorkloadClient] = [
+            WorkloadClient(cid, cfg, random.Random((cfg.seed << 20) ^ cid), zipf)
+            for cid in range(cfg.num_clients)
+        ]
+
+    def client(self, cid: int) -> WorkloadClient:
+        return self.clients[cid]
+
+    def assign_round_robin(self, server_ids: List[int]) -> Dict[int, List[WorkloadClient]]:
+        """Partition clients across servers (co-located client model)."""
+        out: Dict[int, List[WorkloadClient]] = {sid: [] for sid in server_ids}
+        for i, c in enumerate(self.clients):
+            out[server_ids[i % len(server_ids)]].append(c)
+        return out
+
+    def total_issued(self) -> int:
+        return sum(c.issued for c in self.clients)
+
+    def total_acked(self) -> int:
+        return sum(c.acked for c in self.clients)

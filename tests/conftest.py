@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 # Smoke tests and benches must see ONE device; only launch/dryrun (its own
 # process) forces 512 placeholder devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -8,3 +10,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run tests marked slow (>60 s)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers",
+                            "slow: test takes >60 s (needs --runslow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: use --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

@@ -6,6 +6,10 @@ tests, since any interleaving the scheduler produces must satisfy them.
 """
 import itertools
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import Cluster, RoundType

@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis): the four atomic-broadcast properties
 hold under randomized schedules, crash times and partial sends."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import Cluster, Mode

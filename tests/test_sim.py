@@ -58,6 +58,7 @@ def test_batching_raises_throughput():
     assert big.median_latency() > small.median_latency()
 
 
+@pytest.mark.slow
 def test_failure_recovery_in_sim():
     met = run_algo("allconcur+", 16, rounds=25, crash=(5, 5e-3))
     alive = {s: v for s, v in met.delivered_msgs.items() if s != 5}

@@ -1,0 +1,277 @@
+"""SMR service layer: replica determinism, exactly-once, compaction,
+linearizable reads — driven through both the schedule-randomized Cluster
+and the timed discrete-event simulator."""
+import random
+
+import pytest
+
+from repro.core import Mode
+from repro.sim import build_smr_simulation
+from repro.smr import (ClientRequest, DeliveredRoundLog, KVStateMachine,
+                       SMRService, WorkloadConfig, WorkloadGenerator,
+                       ZipfianGenerator, build_smr_cluster)
+from repro.smr.log import LogEntry
+
+
+# ---------------------------------------------------------------------- unit
+
+def test_state_machine_deterministic_digest():
+    a, b = KVStateMachine(), KVStateMachine()
+    cmds = [{"op": "put", "key": "x", "value": 1},
+            {"op": "incr", "key": "c", "delta": 2},
+            {"op": "get", "key": "x"},
+            {"op": "del", "key": "x"}]
+    for c in cmds:
+        a.apply(c)
+    for c in cmds:
+        b.apply(c)
+    assert a.digest() == b.digest()
+    assert a.data == b.data
+    # order matters: different history -> different digest
+    c2 = KVStateMachine()
+    for c in reversed(cmds):
+        c2.apply(c)
+    assert c2.digest() != a.digest()
+
+
+def test_state_machine_snapshot_restore_roundtrip():
+    sm = KVStateMachine()
+    for i in range(20):
+        sm.apply({"op": "put", "key": i % 5, "value": i})
+    snap = sm.snapshot()
+    other = KVStateMachine.from_snapshot(snap)
+    assert other.digest() == sm.digest()
+    assert other.data == sm.data
+    # divergence after restore tracks both equally
+    sm.apply({"op": "incr", "key": "z"})
+    other.apply({"op": "incr", "key": "z"})
+    assert other.digest() == sm.digest()
+
+
+def test_zipfian_is_skewed_and_deterministic():
+    z = ZipfianGenerator(100, theta=0.99)
+    r1, r2 = random.Random(7), random.Random(7)
+    draws1 = [z.draw(r1) for _ in range(2000)]
+    draws2 = [z.draw(r2) for _ in range(2000)]
+    assert draws1 == draws2
+    # head keys dominate
+    head = sum(1 for d in draws1 if d < 10)
+    assert head > 1000
+    assert all(0 <= d < 100 for d in draws1)
+
+
+def test_invalid_op_rejected_at_submit_and_apply():
+    svc = SMRService(0)
+    assert svc.submit(ClientRequest(0, 0, {"op": "explode"})) is False
+    assert not svc.pending
+    # a faulty peer's batch containing garbage is skipped deterministically
+    from repro.core.messages import Message, MsgKind
+    from repro.core.server import DeliveryRecord
+    from repro.core.messages import RoundType
+    bad = Message(MsgKind.BCAST, 1, 1, 1,
+                  payload={"kind": "smr", "src": 1, "round": 1, "batch": 2,
+                           "reqs": ((7, 0, {"op": "explode"}),
+                                    (7, 1, {"op": "incr", "key": "k"}))})
+    svc.on_deliver(DeliveryRecord(1, 1, RoundType.UNRELIABLE, (bad,)))
+    assert svc.invalid_dropped == 1
+    assert svc.sm.data["k"] == 1          # the valid request still applied
+
+
+def test_type_invalid_op_yields_error_ack_not_crash():
+    """incr on a string value raises inside apply; the service must turn it
+    into a deterministic error result, not crash the delivery path."""
+    cluster, services = build_smr_cluster(8, 3, seed=21)
+    services[0].submit(ClientRequest(0, 0, {"op": "put", "key": "k",
+                                            "value": "str"}))
+    services[0].submit(ClientRequest(0, 1, {"op": "incr", "key": "k"}))
+    services[0].submit(ClientRequest(0, 2, {"op": "put", "key": "k2",
+                                            "value": 7}))
+    cluster.start()
+    cluster.run_until(lambda: services[0].applied_seq.get(0, -1) >= 2,
+                      max_steps=400_000)
+    assert services[0].sm.data["k2"] == 7            # later ops still commit
+    assert services[0].sm.data["k"] == "str"         # failed incr: no mutation
+    rnd = min(services[s].applied_round for s in cluster.alive())
+    assert len({services[s].digest_at(rnd) for s in cluster.alive()}) == 1
+    svc = services[0]
+    assert svc.invalid_dropped == 1
+    assert svc.log.replay().digest() == svc.sm.digest()  # log untouched
+
+
+# ------------------------------------------------- (a) replica determinism
+
+@pytest.mark.parametrize("mode", [Mode.DUAL, Mode.RELIABLE_ONLY])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_digest_equality_after_randomized_crashes(mode, seed):
+    """After a full run with crashes mid-round (truncated sends) under a
+    randomized schedule, every surviving replica reports the same digest."""
+    rng = random.Random(seed)
+    n = 9
+    cluster, services = build_smr_cluster(n, 3, mode=mode, seed=seed,
+                                          compact_every=8)
+    cfg = WorkloadConfig(num_clients=2 * n, read_ratio=0.25, seed=seed,
+                         nkeys=32)
+    gen = WorkloadGenerator(cfg)
+    home = {c.client_id: sid for sid, cs in
+            gen.assign_round_robin(list(range(n))).items() for c in cs}
+    for c in gen.clients:
+        for _ in range(4):
+            services[home[c.client_id]].submit(c.next_request())
+    cluster.start()
+    # crash up to f=2 servers at random points, with truncated sends
+    victims = rng.sample(range(n), 2)
+    for v in victims:
+        cluster.run(max_steps=rng.randrange(20, 400))
+        cluster.crash(v, partial_sends=rng.choice([None, 0, 1, 2]))
+    ok = cluster.run_until(
+        lambda: min((services[s].applied_seq.get(c.client_id, -1)
+                     for s in cluster.alive() for c in gen.clients
+                     if home[c.client_id] not in cluster.crashed),
+                    default=-1) >= 3,
+        max_steps=400_000)
+    assert ok, "workload did not finish"
+    alive = cluster.alive()
+    assert alive
+    rnd = min(services[s].applied_round for s in alive)
+    digests = {services[s].digest_at(rnd) for s in alive}
+    assert None not in digests, "digest history pruned below common round"
+    assert len(digests) == 1, f"replicas diverged at round {rnd}: {digests}"
+
+
+# --------------------------------------------------- (b) exactly-once retry
+
+def test_exactly_once_on_retry():
+    cluster, services = build_smr_cluster(8, 3, seed=5)
+    req = ClientRequest(0, 0, {"op": "incr", "key": "hits", "delta": 1})
+    services[0].submit(req)
+    cluster.start()
+    cluster.run_until(lambda: services[0].applied_seq.get(0, -1) >= 0,
+                      max_steps=200_000)
+    assert services[0].sm.data["hits"] == 1
+
+    # client never saw the ack and retries the same (client_id, seq)
+    acks = []
+    services[0].on_ack = lambda r, res, rnd: acks.append((r.uid, res))
+    assert services[0].submit(req) is False      # recognised as committed
+    assert acks and acks[0][0] == (0, 0)         # cached result re-acked
+    cluster.run_until(lambda: cluster.min_delivered_rounds() >= 8,
+                      max_steps=200_000)
+    for sid in cluster.alive():
+        assert services[sid].sm.data["hits"] == 1, "retry was re-applied"
+
+    # retry via a *different* server is also deduplicated at apply time
+    services[3].submit(req)
+    cluster.run_until(lambda: services[3].applied_seq.get(0, -1) >= 0 and
+                      cluster.min_delivered_rounds() >= 12,
+                      max_steps=200_000)
+    for sid in cluster.alive():
+        assert services[sid].sm.data["hits"] == 1
+        assert services[sid].sm.digest() == services[0].sm.digest()
+
+
+# ------------------------------------------- (c) snapshot/compaction paths
+
+def test_log_compaction_roundtrip_equivalence():
+    sm = KVStateMachine()
+    log = DeliveredRoundLog(compact_every=4)
+    rng = random.Random(11)
+    for rnd in range(40):
+        cmds = []
+        for _ in range(rng.randrange(1, 4)):
+            op = {"op": "put", "key": rng.randrange(8), "value": rng.random()}
+            sm.apply(op)
+            cmds.append((0, rnd, op))
+        log.append(LogEntry(rnd, 1, sm.digest(), tuple(cmds)), sm)
+    assert log.compactions >= 1
+    assert log.live_len() <= log.compact_every     # memory stays bounded
+    replayed = log.replay()
+    assert replayed.digest() == sm.digest()
+    assert replayed.data == sm.data
+
+
+def test_service_compaction_bounds_memory_and_preserves_state():
+    cluster, services = build_smr_cluster(8, 3, seed=7, compact_every=5)
+    for i in range(30):
+        services[0].submit(ClientRequest(0, i, {"op": "incr", "key": "k"}))
+    cluster.start()
+    cluster.run_until(lambda: services[0].applied_seq.get(0, -1) >= 29 and
+                      cluster.min_delivered_rounds() >= 12,
+                      max_steps=400_000)
+    svc = services[0]
+    assert svc.log.compactions >= 1
+    assert svc.log.live_len() <= svc.log.compact_every
+    assert svc.log.replay().digest() == svc.sm.digest()
+    assert svc.sm.data["k"] == 30
+
+
+# ------------------------------------------- (d) linearizable read monotony
+
+def test_linearizable_read_sees_acked_writes():
+    """A linearizable read issued after a write was acked never returns an
+    older value — even when submitted at a different replica."""
+    cluster, services = build_smr_cluster(8, 3, seed=9)
+    results = {}
+    for sid in range(8):
+        services[sid].on_ack = (
+            lambda s: (lambda r, res, rnd: results.setdefault(r.uid, res)))(sid)
+    cluster.start()
+    for ver in range(5):
+        writer_seq = ver
+        services[1].submit(ClientRequest(0, writer_seq,
+                                         {"op": "put", "key": "x",
+                                          "value": ver}))
+        cluster.run_until(
+            lambda: services[1].applied_seq.get(0, -1) >= writer_seq,
+            max_steps=400_000)
+        # write acked; now a linearizable read at another replica
+        services[5].submit_linearizable_read(9, ver, "x")
+        cluster.run_until(
+            lambda: services[5].applied_seq.get(9, -1) >= ver,
+            max_steps=400_000)
+        value = services[5].last_result[9][1]
+        assert value == ver, f"read returned stale value {value} < {ver}"
+
+
+def test_local_read_reports_staleness_bound():
+    cluster, services = build_smr_cluster(8, 3, seed=13, stale_bound=0)
+    services[0].submit(ClientRequest(0, 0, {"op": "put", "key": "a",
+                                            "value": 42}))
+    cluster.start()
+    cluster.run_until(lambda: services[0].applied_seq.get(0, -1) >= 0,
+                      max_steps=200_000)
+    res = services[0].read_local("a")
+    # with bound 0 the replica usually lags the frontier round -> flagged
+    assert res.stale or res.value == 42
+    relaxed = SMRService(99)   # unattached service: no staleness source
+    assert relaxed.read_local("missing").value is None
+
+
+# -------------------------------------------------- timed simulator runs
+
+@pytest.mark.parametrize("algo", ["allconcur+", "allconcur", "allgather"])
+def test_sim_end_to_end_modes(algo):
+    cfg = WorkloadConfig(num_clients=16, read_ratio=0.5, seed=3)
+    sim, smr, services = build_smr_simulation(algo, 8, workload=cfg,
+                                              requests_per_client=10)
+    sim.start()
+    sim.run(until=lambda: smr.acked >= 160, max_time=10.0)
+    assert smr.acked == 160
+    assert smr.throughput() > 0
+    assert smr.p50() <= smr.p99()
+    rnd = min(s.applied_round for s in services.values())
+    assert len({s.digest_at(rnd) for s in services.values()}) == 1
+
+
+def test_sim_crash_mid_workload_digests_converge():
+    cfg = WorkloadConfig(num_clients=16, read_ratio=0.2, arrival="open",
+                         open_rate=5000.0, seed=4)
+    sim, smr, services = build_smr_simulation("allconcur+", 8, workload=cfg,
+                                              requests_per_client=10)
+    sim.schedule_crash(2, 0.002, partial_sends=1)
+    sim.start()
+    sim.run(until=lambda: smr.acked >= 100, max_time=2.0)
+    assert smr.acked > 0
+    alive = [s for s in services if s != 2]
+    rnd = min(services[s].applied_round for s in alive)
+    digests = {services[s].digest_at(rnd) for s in alive}
+    assert len(digests) == 1 and None not in digests

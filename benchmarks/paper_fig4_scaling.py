@@ -9,9 +9,12 @@ from .common import emit, run_sim
 
 ALGOS = ["allgather", "allconcur+", "allconcur", "allconcur-ea", "lcr",
          "libpaxos"]
+VEC_ALGOS = ["allgather", "allconcur+", "allconcur"]
 
 
-def main(full: bool = False) -> None:
+def main(full: bool = False, engine: str = "event") -> None:
+    if engine == "vec":
+        return _main_vec(full)
     sizes = [8, 16, 32, 64] if not full else [8, 16, 32, 64, 128]
     for network in ("sdc", "mdc"):
         for n in sizes:
@@ -33,6 +36,33 @@ def main(full: bool = False) -> None:
                 emit(f"fig4_{network}_n{n}_{algo}", lat * 1e6,
                      f"latency_ms={lat*1e3:.3f};throughput_txn_s={thr:.0f};"
                      f"vs_allconcur+={rel:.3f};wall_s={wall:.1f}")
+
+
+def _main_vec(full: bool) -> None:
+    """Same scaling study through the jax-vectorized engine: the whole grid
+    in a few vmapped calls.  Covers the three G_U/G_R algorithms (LCR and
+    Libpaxos baselines have no vectorized lowering; use the event engine)."""
+    import time
+
+    from repro.vecsim import grid, sweep
+
+    sizes = [8, 16, 32, 64] if not full else [8, 16, 32, 64, 128, 256]
+    t0 = time.time()
+    res = sweep(grid(algo=tuple(VEC_ALGOS), n=tuple(sizes),
+                     network=("sdc", "mdc"), rounds=12), window=(3, 10))
+    wall = time.time() - t0
+    rows = {(r["network"], r["n"], r["algo"]): r for r in res.table()}
+    for network in ("sdc", "mdc"):
+        for n in sizes:
+            base = rows[(network, n, "allconcur+")]["throughput_txn_s"]
+            for algo in VEC_ALGOS:
+                r = rows[(network, n, algo)]
+                thr = r["throughput_txn_s"]
+                rel = (thr / base) if base else float("nan")
+                emit(f"fig4v_{network}_n{n}_{algo}", r["median_latency_us"],
+                     f"latency_ms={r['median_latency_us']/1e3:.3f};"
+                     f"throughput_txn_s={thr:.0f};vs_allconcur+={rel:.3f};"
+                     f"wall_s={wall:.1f}")
 
 
 if __name__ == "__main__":

@@ -9,26 +9,57 @@ model with delta_u/delta_r measured in our simulator.
 from .common import emit, run_sim
 
 
-def main(full: bool = False) -> None:
+def main(full: bool = False, engine: str = "event") -> None:
     n = 32 if full else 16
+    if engine == "vec":
+        from repro.vecsim import SweepConfig, sweep
+        res = sweep([SweepConfig(algo="allconcur+", n=n),
+                     SweepConfig(algo="allconcur", n=n)], window=(3, 8))
+        du = float(res.median_latency[0]) / 2.0
+        dr = float(res.median_latency[1])
+        _emit_rows(n, du, dr, tag="v")
+        _monte_carlo_rows(n, du, dr, full)
+        return
     mp, _ = run_sim("allconcur+", n, rounds=12)
     ma, _ = run_sim("allconcur", n, rounds=12)
     du = mp.median_latency() / 2.0   # paper: du = half AllConcur+ latency
     dr = ma.median_latency()         # paper: dr = AllConcur latency
-    emit(f"fig6_params_n{n}", du * 1e6, f"delta_u_ms={du*1e3:.3f};"
+    _emit_rows(n, du, dr)
+
+
+def _emit_rows(n: int, du: float, dr: float, tag: str = "") -> None:
+    emit(f"fig6{tag}_params_n{n}", du * 1e6, f"delta_u_ms={du*1e3:.3f};"
          f"delta_r_ms={dr*1e3:.3f}")
     # non-failure + worst case
-    emit(f"fig6_nf_n{n}", (2 * du) * 1e6,
+    emit(f"fig6{tag}_nf_n{n}", (2 * du) * 1e6,
          f"latency_factor_dr={2*du/dr:.3f};throughput_factor={dr/du:.3f}")
-    emit(f"fig6_wc_n{n}", (3 * du + 2 * dr) * 1e6,
+    emit(f"fig6{tag}_wc_n{n}", (3 * du + 2 * dr) * 1e6,
          f"latency_factor_dr={(3*du+2*dr)/dr:.3f};"
          f"throughput_factor={dr/(2*du+dr):.3f}")
     for lam in (3, 5, 10, 20, 100):
         lat = 2 * du + (du + 2 * dr) / lam
         thr = (1 - 1.0 / lam) / (du + dr / lam)
-        emit(f"fig6_lambda{lam}_n{n}", lat * 1e6,
+        emit(f"fig6{tag}_lambda{lam}_n{n}", lat * 1e6,
              f"latency_factor_dr={lat/dr:.3f};"
              f"throughput_factor={thr*dr:.3f}")
+
+
+def _monte_carlo_rows(n: int, du: float, dr: float, full: bool) -> None:
+    """Fig. 6 as an *expectation* over sampled crash schedules, not just the
+    analytic lambda curve: thousands of Monte-Carlo splices per point."""
+    from repro.vecsim import monte_carlo
+
+    schedules = 8192 if full else 2048
+    for lam in (3, 10, 100):
+        mc = monte_carlo(du, dr, n=n, batch=4, mtbf=lam * du,
+                         rounds=50 * max(1, int(lam ** 0.5)),
+                         n_schedules=schedules, seed=lam)
+        s = mc.summary()
+        emit(f"fig6v_mc_lambda{lam}_n{n}", s["latency_mean_us"],
+             f"throughput_mean={s['throughput_mean']:.0f};"
+             f"throughput_p5={s['throughput_p5']:.0f};"
+             f"crashes_mean={s['crashes_mean']:.2f};"
+             f"schedules={s['schedules']}")
 
 
 if __name__ == "__main__":

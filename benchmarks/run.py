@@ -11,7 +11,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="table3|fig3|fig4|fig5|fig6|arch|smr")
+                    help="comma-separated subset of "
+                         "table3|fig3|fig4|fig5|fig6|arch|smr|sweep_vec")
+    ap.add_argument("--engine", default="event", choices=("event", "vec"),
+                    help="fig4/fig6 backend: per-event heap or the "
+                         "jax-vectorized sweep engine (repro.vecsim)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump results as JSON to PATH")
     args = ap.parse_args()
@@ -19,23 +23,27 @@ def main() -> None:
     from . import (arch_microbench, common, paper_fig3_batching,
                    paper_fig4_scaling, paper_fig5_failures,
                    paper_fig6_robustness, paper_table3_connectivity,
-                   smr_throughput)
+                   smr_throughput, sweep_vec)
 
     benches = {
         "table3": paper_table3_connectivity.main,
         "fig3": paper_fig3_batching.main,
-        "fig4": paper_fig4_scaling.main,
+        "fig4": lambda full: paper_fig4_scaling.main(full=full,
+                                                     engine=args.engine),
         "fig5": paper_fig5_failures.main,
-        "fig6": paper_fig6_robustness.main,
+        "fig6": lambda full: paper_fig6_robustness.main(full=full,
+                                                        engine=args.engine),
         "arch": arch_microbench.main,
         "smr": smr_throughput.main,
+        "sweep_vec": sweep_vec.main,
     }
-    if args.only and args.only not in benches:
-        ap.error(f"unknown bench {args.only!r}; choose from "
-                 f"{'|'.join(benches)}")
+    only = set(args.only.split(",")) if args.only else None
+    if only and not only <= set(benches):
+        ap.error(f"unknown bench(es) {sorted(only - set(benches))}; choose "
+                 f"from {'|'.join(benches)}")
     print("name,us_per_call,derived")
     for name, fn in benches.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         fn(full=args.full)
     if args.json:

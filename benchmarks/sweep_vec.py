@@ -1,0 +1,85 @@
+"""Vectorized sweep bench: a ≥200-config grid (seeds × n × d × algorithm ×
+network) through `repro.vecsim.sweep`, compared against pushing the same grid
+through the event-driven `build_simulation`.
+
+Default (CI) mode measures the event engine on a stratified subset and
+extrapolates its grid cost (the whole point is that the full event grid takes
+minutes); ``--full`` replays the entire grid through the event engine for an
+exactly-measured ratio.  Emits the vec wall time, the event estimate and the
+speedup; the driver's ``--json`` dump records the trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.vecsim import grid, sweep
+
+from .common import emit, run_sim
+
+
+def _grid(full: bool):
+    return grid(algo=("allconcur+", "allconcur", "allgather"),
+                n=(8, 16, 32, 64), d=(2, 3), network=("sdc", "uniform"),
+                seed=range(16), rounds=12)
+
+
+def _run_event(cfg, window=(3, 10)):
+    met, _wall = run_sim(cfg.algo, cfg.n, batch=cfg.batch,
+                         network=cfg.network, rounds=cfg.rounds,
+                         max_time=60.0, d=cfg.resolved_d())
+    return met.median_latency(), met.throughput(*window)
+
+
+def main(full: bool = False) -> None:
+    cfgs = _grid(full)
+    window = (3, 10)
+
+    t0 = time.time()
+    res = sweep(cfgs, window=window)
+    cold = time.time() - t0
+    t0 = time.time()
+    res = sweep(cfgs, window=window)
+    warm = time.time() - t0
+
+    # event-engine cost for the same grid
+    if full:
+        t0 = time.time()
+        for cfg in cfgs:
+            _run_event(cfg, window)
+        event_total = time.time() - t0
+        event_label = "measured"
+    else:
+        # stratified subset: one config per (algo, n) cell, cost scaled by
+        # the cell's population (network/d/seed barely change event cost)
+        cells = {}
+        for i, cfg in enumerate(cfgs):
+            cells.setdefault((cfg.algo, cfg.n), []).append(i)
+        event_total = 0.0
+        for (algo, n), idxs in cells.items():
+            t0 = time.time()
+            _run_event(cfgs[idxs[0]], window)
+            event_total += (time.time() - t0) * len(idxs)
+        event_label = f"extrapolated_from_{len(cells)}"
+
+    # vecsim recognizes that failure-free rounds are deterministic (seeds and
+    # the unused G_U degree dedup away); the event engine replays every run
+    from repro.vecsim.sweep import _dedup_key
+    unique = len({_dedup_key(c) for c in cfgs})
+    speedup = event_total / warm
+    emit("sweep_vec_grid", warm / len(cfgs) * 1e6,
+         f"configs={len(cfgs)};unique_configs={unique};"
+         f"vec_warm_s={warm:.3f};vec_cold_s={cold:.3f};"
+         f"event_grid_s={event_total:.1f};speedup_x={speedup:.1f};"
+         f"event_cost={event_label}")
+
+    # sanity anchor: one row of actual sweep output per algorithm (n=16, sdc)
+    for row in res.table():
+        if row["n"] == 16 and row["network"] == "sdc" and row["seed"] == 0 \
+                and row["d"] == 3:
+            emit(f"sweep_vec_{row['algo']}_n16", row["median_latency_us"],
+                 f"throughput_txn_s={row['throughput_txn_s']:.0f};"
+                 f"round_period_us={row['round_period_us']:.3f}")
+
+
+if __name__ == "__main__":
+    main(full=False)

@@ -10,5 +10,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== smoke bench: SMR throughput (CI size) =="
-python -m benchmarks.run --only smr
+echo "== smoke bench: SMR throughput + vectorized sweep (CI size) =="
+python -m benchmarks.run --only smr,sweep_vec --json BENCH_ci.json
+
+echo "== perf trajectory (BENCH_ci.json) =="
+python -c "import json; [print(' ', r['name'], {k: v for k, v in r.items() if k != 'name'}) for r in json.load(open('BENCH_ci.json'))]"

@@ -18,7 +18,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.digraph import Digraph, gs_digraph, resilience_degree
-from ..core.messages import FailNotification, Message, MsgKind, PartitionMarker
+from ..core.messages import (FailNotification, Heartbeat, Message, MsgKind,
+                             PartitionMarker)
 from ..core.overlay import make_overlay
 from ..core.server import AllConcurServer, DeliveryRecord, Mode
 from .baselines import LCRServer, LibpaxosNode
@@ -37,6 +38,10 @@ def wire_size(msg: Any, n: int) -> int:
         extra = FT_HDR_EXTRA if msg.kind == MsgKind.RBCAST else 0
         return HDR_BYTES + extra + batch * TXN_BYTES
     if isinstance(msg, FailNotification):
+        return HDR_BYTES
+    if isinstance(msg, Heartbeat):
+        # FD heartbeats on G_R edges are pure header traffic; vecsim's cost
+        # tables cite this branch as the one source of truth for FD cost
         return HDR_BYTES
     if isinstance(msg, PartitionMarker):
         return HDR_BYTES

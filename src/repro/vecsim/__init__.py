@@ -1,0 +1,21 @@
+"""vecsim — jax-vectorized multi-deployment sweep engine.
+
+Evaluates thousands of independent AllConcur+/AllConcur/AllGather
+deployments in one jax program via a batched min-plus round recurrence,
+cross-validated (exactly, not just within tolerance) against the
+discrete-event simulator in :mod:`repro.sim`.  See README.md in this
+directory for the recurrence derivation and when to trust which engine.
+"""
+from .engine import RoundTimes, run_reliable, run_unreliable, summarize
+from .failures import MonteCarloResult, monte_carlo
+from .sweep import SweepConfig, SweepResult, grid, sweep
+from .topology import (ReliableTables, UnreliableTables, message_bytes,
+                       reliable_tables, unreliable_tables)
+
+__all__ = [
+    "RoundTimes", "run_reliable", "run_unreliable", "summarize",
+    "MonteCarloResult", "monte_carlo",
+    "SweepConfig", "SweepResult", "grid", "sweep",
+    "ReliableTables", "UnreliableTables", "message_bytes",
+    "reliable_tables", "unreliable_tables",
+]

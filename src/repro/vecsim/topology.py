@@ -1,0 +1,163 @@
+"""Lower protocol topology + network model into dense cost arrays.
+
+The event simulator (``repro.sim.runner``) walks ``Digraph`` /
+``UnreliableOverlay`` / ``NetworkModel`` objects one message at a time.  The
+vectorized engine instead consumes a handful of dense per-config arrays, all
+produced here from the *same* objects so there is exactly one source of truth
+for routing, send order and message cost:
+
+- ``prop[u, v]``      — path propagation latency (``NetworkModel.propagation``)
+- ``send_off[s, v]``  — cumulative NIC serialization at ``parent[s, v]`` up to
+                        and including the send of message ``s`` towards ``v``
+                        (the event sim serializes a drain's sends in outbox
+                        order; the offset encodes that order statically)
+- ``occ[s, u]``       — total NIC occupancy of forwarding message ``s`` at
+                        ``u`` (sum of per-hop serialization times)
+
+Message sizes go through :func:`repro.sim.runner.wire_size` on synthetic
+``Message`` instances, so header/batch accounting can never drift from the
+event engine.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..core.digraph import Digraph, gs_digraph, resilience_degree
+from ..core.messages import Message, MsgKind
+from ..core.overlay import make_overlay
+from ..sim.network import make_network
+from ..sim.runner import wire_size
+
+MODES = ("allconcur+", "allconcur", "allgather")
+
+
+@dataclass(frozen=True)
+class UnreliableTables:
+    """Binomial-tree (G_U) dissemination lowered to dense arrays.
+
+    Every message travels a tree rooted at its source: each server ``v != s``
+    has exactly one ``parent[s, v]`` that relays message ``s`` to it.
+    """
+    n: int
+    parent: np.ndarray     # [n, n] int32; parent[s, s] = s
+    send_off: np.ndarray   # [n, n] float64; cumulative ser at parent for s->v
+    occ: np.ndarray        # [n, n] float64; occ[s, u] = total ser of s at u
+    prop: np.ndarray       # [n, n] float64
+    ser: float             # per-message serialization time (constant model)
+
+
+@dataclass(frozen=True)
+class ReliableTables:
+    """G_R flood dissemination lowered to dense arrays.
+
+    Every server forwards each message to *all* its G_R successors on first
+    receipt; ``edge_off[u, v]`` is the cumulative serialization at ``u`` up to
+    and including the send towards successor ``v`` (BIG for non-edges).
+    """
+    n: int
+    d: int
+    adj: np.ndarray        # [n, n] bool; adj[u, v] = G_R edge u -> v
+    edge_off: np.ndarray   # [n, n] float64; cumulative ser at u for u -> v
+    occ: np.ndarray        # [n] float64; total ser of one flood-forward at u
+    prop: np.ndarray       # [n, n] float64
+    ser: float
+
+
+def message_bytes(mode: str, batch: int) -> int:
+    """Wire bytes of one A-broadcast message, via the event sim's wire_size.
+
+    AllConcur+ failure-free rounds and AllGather rounds carry BCAST messages;
+    AllConcur (RELIABLE_ONLY) rounds carry RBCAST messages with the
+    fault-tolerant header extra.
+    """
+    kind = MsgKind.RBCAST if mode == "allconcur" else MsgKind.BCAST
+    probe = Message(kind, 0, 1, 1, payload={"batch": batch, "src": 0, "round": 1})
+    return wire_size(probe, n=0)
+
+
+def prop_matrix(network: str, n: int) -> np.ndarray:
+    net = make_network(network, n)
+    prop = np.zeros((n, n), dtype=np.float64)
+    for u in range(n):
+        for v in range(n):
+            if u != v:
+                prop[u, v] = net.propagation(u, v)
+    return prop
+
+
+def _ser_time(network: str, n: int, nbytes: int) -> float:
+    """Per-message NIC serialization time.  All current network models charge
+    a sender-side constant (bytes/bandwidth + software overhead); assert that
+    so the dense tables stay valid if a model ever becomes pair-dependent."""
+    net = make_network(network, n)
+    times = {net.serialization(nbytes, u, v)
+             for u in range(min(n, 4)) for v in range(n) if u != v}
+    if len(times) != 1:
+        raise NotImplementedError(
+            "vecsim assumes sender-constant serialization; got per-pair "
+            f"times {sorted(times)[:4]}... for network={network!r}")
+    return times.pop()
+
+
+@functools.lru_cache(maxsize=512)
+def unreliable_tables(n: int, *, network: str = "sdc", batch: int = 4,
+                      overlay: str = "binomial",
+                      mode: str = "allconcur+") -> UnreliableTables:
+    """Sweep grids repeat identical (n, network, batch) points across seeds
+    and algorithms, so tables are cached; treat the arrays as read-only."""
+    ov = make_overlay(overlay, list(range(n)))
+    ser = _ser_time(network, n, message_bytes(mode, batch))
+    parent = np.full((n, n), -1, dtype=np.int32)
+    send_off = np.zeros((n, n), dtype=np.float64)
+    occ = np.zeros((n, n), dtype=np.float64)
+    for s in range(n):
+        parent[s, s] = s
+        for u in range(n):
+            hops = ov.next_hops(s, u)
+            occ[s, u] = len(hops) * ser
+            for j, w in enumerate(hops):
+                parent[s, w] = u
+                send_off[s, w] = (j + 1) * ser
+    if (parent < 0).any():
+        raise ValueError(f"overlay {overlay!r} does not reach every server")
+    return UnreliableTables(n=n, parent=parent, send_off=send_off, occ=occ,
+                            prop=prop_matrix(network, n), ser=ser)
+
+
+def reliable_tables(n: int, *, d: Optional[int] = None, network: str = "sdc",
+                    batch: int = 4, g_r: Optional[Digraph] = None,
+                    mode: str = "allconcur") -> ReliableTables:
+    if g_r is None:
+        return _reliable_tables_cached(n, d=d, network=network, batch=batch,
+                                       mode=mode)
+    return _reliable_tables(n, d=d, network=network, batch=batch, g_r=g_r,
+                            mode=mode)
+
+
+@functools.lru_cache(maxsize=512)
+def _reliable_tables_cached(n: int, *, d: Optional[int], network: str,
+                            batch: int, mode: str) -> ReliableTables:
+    return _reliable_tables(n, d=d, network=network, batch=batch, g_r=None,
+                            mode=mode)
+
+
+def _reliable_tables(n: int, *, d: Optional[int], network: str, batch: int,
+                     g_r: Optional[Digraph], mode: str) -> ReliableTables:
+    dd = d if d is not None else resilience_degree(n)
+    g = g_r if g_r is not None else gs_digraph(list(range(n)), dd)
+    ser = _ser_time(network, n, message_bytes(mode, batch))
+    adj = np.zeros((n, n), dtype=bool)
+    edge_off = np.zeros((n, n), dtype=np.float64)
+    occ = np.zeros(n, dtype=np.float64)
+    for u in range(n):
+        succ = g.successors(u)
+        occ[u] = len(succ) * ser
+        for j, v in enumerate(succ):
+            adj[u, v] = True
+            edge_off[u, v] = (j + 1) * ser
+    return ReliableTables(n=n, d=dd, adj=adj, edge_off=edge_off, occ=occ,
+                          prop=prop_matrix(network, n), ser=ser)

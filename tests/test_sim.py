@@ -1,7 +1,13 @@
 """Discrete-event simulator: paper-trend assertions + determinism."""
+import math
+
 import pytest
 
+from repro.core.messages import (FailNotification, Heartbeat, Message,
+                                 MsgKind, PartitionMarker)
 from repro.sim import build_simulation
+from repro.sim.runner import (FT_HDR_EXTRA, HDR_BYTES, TXN_BYTES, Metrics,
+                              wire_size)
 
 
 def run_algo(algo, n, *, batch=4, network="sdc", rounds=15, max_time=30.0,
@@ -71,3 +77,51 @@ def test_sim_determinism():
     b = run_algo("allconcur+", 12, rounds=10)
     assert a.median_latency() == b.median_latency()
     assert a.throughput(3, 8) == b.throughput(3, 8)
+
+
+# ------------------------------------------------------- wire-size accounting
+
+def test_wire_size_heartbeat_is_header_only():
+    """FD heartbeats (G_R edges) carry no payload: exactly HDR_BYTES.  The
+    explicit branch documents the cost vecsim's tables cite."""
+    assert wire_size(Heartbeat(src=3, seq=17), 16) == HDR_BYTES
+    assert wire_size(Heartbeat(src=0, seq=0, eon=2), 64) == HDR_BYTES
+
+
+def test_wire_size_message_kinds():
+    bcast = Message(MsgKind.BCAST, 0, 1, 1, payload={"batch": 4})
+    rbcast = Message(MsgKind.RBCAST, 0, 1, 1, payload={"batch": 4})
+    assert wire_size(bcast, 8) == HDR_BYTES + 4 * TXN_BYTES
+    assert wire_size(rbcast, 8) == HDR_BYTES + FT_HDR_EXTRA + 4 * TXN_BYTES
+    assert wire_size(FailNotification(1, 2), 8) == HDR_BYTES
+    assert wire_size(PartitionMarker(True, 0, 1, 1), 8) == HDR_BYTES
+
+
+# ------------------------------------------------- Metrics edge cases (NaN)
+
+def test_metrics_no_deliver_events_returns_nan():
+    """Stalled runs (vecsim sweeps aggregate over such configs) must yield
+    NaN summaries, never raise."""
+    m = Metrics(n=8, batch=4)
+    t1, t2 = m.window()
+    assert (t1, t2) == (0.0, 0.0)
+    assert math.isnan(m.throughput())
+    assert math.isnan(m.median_latency())
+
+
+def test_metrics_window_never_reached_returns_nan():
+    m = Metrics(n=2, batch=1)
+    m.on_deliver_round(0, 1.0, 2)   # a single event: hi window unreachable
+    m.on_deliver_round(1, 1.0, 2)
+    assert math.isnan(m.throughput(1, 100))   # t2 falls back to t1: NaN
+    # lo never reached: window degrades to (0, last]; finite, never raises
+    assert m.throughput(50, 100) == pytest.approx(2.0)
+
+
+def test_metrics_partial_window_uses_last_event():
+    m = Metrics(n=1, batch=2)
+    for k, t in enumerate([1.0, 2.0, 3.0, 4.0]):
+        m.on_deliver_round(0, t, 1)
+    t1, t2 = m.window(2, 100)       # lo at 2nd event; hi falls back to last
+    assert (t1, t2) == (2.0, 4.0)
+    assert m.throughput(2, 100) == pytest.approx(2 * 2 / 2.0)

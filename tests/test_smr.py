@@ -275,3 +275,24 @@ def test_sim_crash_mid_workload_digests_converge():
     rnd = min(services[s].applied_round for s in alive)
     digests = {services[s].digest_at(rnd) for s in alive}
     assert len(digests) == 1 and None not in digests
+
+
+def test_smr_simulation_runs_are_bitwise_deterministic():
+    """Two identical config/seed runs produce identical state-machine digests
+    and ack counts — the baseline vecsim cross-validates against must be free
+    of hidden nondeterminism (dict order, id()-keyed state, clocks)."""
+    def run():
+        cfg = WorkloadConfig(num_clients=12, read_ratio=0.3, seed=11)
+        sim, smr, services = build_smr_simulation("allconcur+", 8,
+                                                  workload=cfg,
+                                                  requests_per_client=8)
+        sim.start()
+        sim.run(until=lambda: smr.acked >= 96, max_time=10.0)
+        digests = tuple(s.sm.digest() for s in services.values())
+        return smr.acked, sorted(smr.latencies), digests
+
+    acked1, lats1, digests1 = run()
+    acked2, lats2, digests2 = run()
+    assert acked1 == acked2
+    assert lats1 == lats2          # exact float equality, not approx
+    assert digests1 == digests2

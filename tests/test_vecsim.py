@@ -1,0 +1,197 @@
+"""vecsim: cross-validation against the event engine + unit tests.
+
+The cross-validation class is the subsystem's acceptance gate: failure-free
+round latency and windowed throughput from the vectorized min-plus engine
+must match the discrete-event `Simulation` within 1% (they match to float
+precision in practice, because vecsim replicates the event semantics).
+"""
+import numpy as np
+import pytest
+
+from repro.sim import build_simulation
+from repro.vecsim import (SweepConfig, grid, monte_carlo, reliable_tables,
+                          sweep, unreliable_tables)
+from repro.vecsim import engine as vec_engine
+
+ROUNDS = 10
+WINDOW = (3, 8)
+
+
+def run_event(algo, n, network, *, batch=4, rounds=ROUNDS):
+    sim, met = build_simulation(algo, n, batch=batch, network=network)
+    sim.start()
+    target = rounds * n
+    sim.run(until=lambda: len(met.delivered_msgs) >= n and
+            all(v >= target for v in met.delivered_msgs.values()),
+            max_time=60.0)
+    return met
+
+
+def run_vec(algo, n, network, *, batch=4, rounds=ROUNDS):
+    if algo == "allconcur":
+        t = reliable_tables(n, network=network, batch=batch)
+        rt = vec_engine.run_reliable(t.adj, t.edge_off, t.occ, t.prop,
+                                     rounds=rounds)
+    else:
+        t = unreliable_tables(n, network=network, batch=batch, mode=algo)
+        rt = vec_engine.run_unreliable(t.parent, t.send_off, t.occ, t.prop,
+                                       rounds=rounds)
+    return vec_engine.summarize(rt, mode=algo, n=n, batch=batch,
+                                window=WINDOW)
+
+
+# ------------------------------------------------------ cross-validation
+
+class TestCrossValidation:
+    @pytest.mark.parametrize("network", ["uniform", "sdc"])
+    @pytest.mark.parametrize("n", [8, 16])
+    @pytest.mark.parametrize("algo", ["allconcur+", "allconcur", "allgather"])
+    def test_latency_and_throughput_within_1pct(self, algo, n, network):
+        met = run_event(algo, n, network)
+        s = run_vec(algo, n, network)
+        ev_lat, ev_thr = met.median_latency(), met.throughput(*WINDOW)
+        v_lat, v_thr = float(s["median_latency"]), float(s["throughput"])
+        assert abs(v_lat - ev_lat) <= 0.01 * ev_lat, (
+            f"latency: event {ev_lat:.6e} vs vec {v_lat:.6e}")
+        assert abs(v_thr - ev_thr) <= 0.01 * ev_thr, (
+            f"throughput: event {ev_thr:.0f} vs vec {v_thr:.0f}")
+
+
+# ---------------------------------------------------------------- topology
+
+def test_unreliable_tables_are_a_spanning_tree_per_source():
+    t = unreliable_tables(12, network="uniform")
+    n = t.n
+    for s in range(n):
+        # every server reachable from s by following parents backwards
+        for v in range(n):
+            hops, cur = 0, v
+            while cur != s:
+                cur = int(t.parent[s, cur])
+                hops += 1
+                assert hops <= n, f"parent cycle for src={s}, v={v}"
+    # total relays per message = n - 1 (minimal work)
+    assert np.isclose(t.occ.sum(axis=1), (n - 1) * t.ser).all()
+
+
+def test_reliable_tables_match_gr_degree():
+    t = reliable_tables(16, d=3, network="sdc")
+    assert t.adj.sum(axis=1).tolist() == [3] * 16
+    assert np.isclose(t.occ, 3 * t.ser).all()
+    # edge_off encodes the NIC send order: 1..d slots of one serialization
+    offs = np.sort(t.edge_off[0][t.adj[0]])
+    assert np.allclose(offs, t.ser * np.arange(1, 4))
+
+
+def test_message_bytes_cites_event_wire_size():
+    from repro.sim.runner import FT_HDR_EXTRA, HDR_BYTES, TXN_BYTES
+    from repro.vecsim import message_bytes
+    assert message_bytes("allgather", 4) == HDR_BYTES + 4 * TXN_BYTES
+    assert message_bytes("allconcur+", 4) == HDR_BYTES + 4 * TXN_BYTES
+    assert message_bytes("allconcur", 4) == (HDR_BYTES + FT_HDR_EXTRA
+                                             + 4 * TXN_BYTES)
+
+
+# ------------------------------------------------------------------ engine
+
+def test_rounds_are_monotone_and_batched_equals_single():
+    t = unreliable_tables(8, network="sdc")
+    rt = vec_engine.run_unreliable(t.parent, t.send_off, t.occ, t.prop,
+                                   rounds=6)
+    C = rt.completion
+    assert C.shape == (6, 8)
+    assert (np.diff(C, axis=0) > 0).all()
+    # stacking the same config twice gives identical per-lane results
+    stack = lambda a: np.stack([a, a])
+    rt2 = vec_engine.run_unreliable(stack(t.parent), stack(t.send_off),
+                                    stack(t.occ), stack(t.prop), rounds=6)
+    assert rt2.completion.shape == (2, 6, 8)
+    np.testing.assert_allclose(rt2.completion[0], C)
+    np.testing.assert_allclose(rt2.completion[1], C)
+
+
+def test_summarize_window_fallback_matches_event_metrics():
+    # fewer rounds than the window needs: throughput falls back to the last
+    # deliver event exactly like Metrics.window does
+    t = unreliable_tables(8, network="uniform")
+    rt = vec_engine.run_unreliable(t.parent, t.send_off, t.occ, t.prop,
+                                   rounds=4)
+    s = vec_engine.summarize(rt, mode="allgather", n=8, batch=4,
+                             window=(2, 100))
+    assert np.isfinite(s["throughput"])
+    s2 = vec_engine.summarize(rt, mode="allgather", n=8, batch=4,
+                              window=(4, 100))  # t1 == t2 == last event
+    assert np.isnan(s2["throughput"])
+
+
+# ------------------------------------------------------------------- sweep
+
+def test_sweep_groups_and_orders_results():
+    cfgs = grid(algo=("allconcur+", "allconcur"), n=(8,),
+                network=("uniform", "sdc"), seed=range(2), rounds=6)
+    assert len(cfgs) == 8
+    res = sweep(cfgs, window=(2, 4))
+    assert np.isfinite(res.median_latency).all()
+    assert np.isfinite(res.throughput).all()
+    # results align with config order: same (algo, network) across seeds is
+    # identical (failure-free rounds are seed-independent)
+    by_key = {}
+    for i, c in enumerate(cfgs):
+        by_key.setdefault((c.algo, c.network), []).append(res.throughput[i])
+    for vals in by_key.values():
+        assert len(set(np.round(vals, 6))) == 1
+    # dual mode trades ~2x latency for AllGather-level throughput
+    i_plus = cfgs.index(SweepConfig(algo="allconcur+", n=8, network="sdc",
+                                    rounds=6))
+    i_rel = cfgs.index(SweepConfig(algo="allconcur", n=8, network="sdc",
+                                   rounds=6))
+    assert res.throughput[i_plus] > 1.5 * res.throughput[i_rel]
+
+
+def test_sweep_matches_standalone_engine():
+    cfg = SweepConfig(algo="allconcur", n=8, network="sdc", rounds=ROUNDS)
+    res = sweep([cfg], window=WINDOW)
+    s = run_vec("allconcur", 8, "sdc")
+    np.testing.assert_allclose(res.median_latency[0], s["median_latency"])
+    np.testing.assert_allclose(res.throughput[0], s["throughput"])
+
+
+# ---------------------------------------------------------------- failures
+
+def test_monte_carlo_failure_free_limit_and_degradation():
+    du, dr = 100e-6, 300e-6
+    # mtbf >> horizon: no crashes land; throughput = n*batch/du, latency 2du
+    mc0 = monte_carlo(du, dr, n=8, batch=4, mtbf=1e6, rounds=50,
+                      n_schedules=64, seed=0)
+    assert mc0.crashes.max() == 0
+    np.testing.assert_allclose(mc0.throughput, 8 * 4 / du, rtol=1e-9)
+    np.testing.assert_allclose(mc0.mean_latency, 2 * du, rtol=1e-9)
+    # frequent crashes strictly degrade expectation
+    mc1 = monte_carlo(du, dr, n=8, batch=4, mtbf=20 * du, rounds=50,
+                      n_schedules=256, seed=1)
+    assert mc1.crashes.mean() > 0
+    assert mc1.throughput.mean() < mc0.throughput.mean()
+    assert mc1.mean_latency.mean() > mc0.mean_latency.mean()
+    # deterministic given the seed
+    mc1b = monte_carlo(du, dr, n=8, batch=4, mtbf=20 * du, rounds=50,
+                       n_schedules=256, seed=1)
+    np.testing.assert_array_equal(mc1.throughput, mc1b.throughput)
+
+
+def test_monte_carlo_back_to_back_crashes_stay_positive():
+    """A crash sampled inside the previous recovery window must not produce
+    negative latency or super-unit throughput (regression: the splice used
+    the raw crash time even when it predated the round start)."""
+    du, dr = 100e-6, 300e-6
+    mc = monte_carlo(du, dr, n=8, batch=4, mtbf=du / 2, rounds=30,
+                     n_schedules=512, seed=3, fd_timeout=10e-3)
+    assert (mc.mean_latency > 0).all()
+    assert (np.diff(mc.total_time) != 0).any() or mc.total_time[0] > 0
+    # every schedule is slower than failure-free, never faster
+    assert (mc.throughput <= 8 * 4 / du + 1e-6).all()
+
+
+def test_sweep_empty_returns_empty_result():
+    res = sweep([])
+    assert res.configs == []
+    assert res.throughput.shape == (0,)

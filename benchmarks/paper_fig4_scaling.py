@@ -13,8 +13,8 @@ VEC_ALGOS = ["allgather", "allconcur+", "allconcur"]
 
 
 def main(full: bool = False, engine: str = "event") -> None:
-    if engine == "vec":
-        return _main_vec(full)
+    if engine in ("vec", "pallas"):
+        return _main_vec(full, engine)
     sizes = [8, 16, 32, 64] if not full else [8, 16, 32, 64, 128]
     for network in ("sdc", "mdc"):
         for n in sizes:
@@ -38,10 +38,12 @@ def main(full: bool = False, engine: str = "event") -> None:
                      f"vs_allconcur+={rel:.3f};wall_s={wall:.1f}")
 
 
-def _main_vec(full: bool) -> None:
+def _main_vec(full: bool, engine: str = "vec") -> None:
     """Same scaling study through the jax-vectorized engine: the whole grid
     in a few vmapped calls.  Covers the three G_U/G_R algorithms (LCR and
-    Libpaxos baselines have no vectorized lowering; use the event engine)."""
+    Libpaxos baselines have no vectorized lowering; use the event engine).
+    ``engine="pallas"`` relaxes on the tropical min-plus kernel instead of
+    the jnp gather (identical results)."""
     import time
 
     from repro.vecsim import grid, sweep
@@ -49,7 +51,8 @@ def _main_vec(full: bool) -> None:
     sizes = [8, 16, 32, 64] if not full else [8, 16, 32, 64, 128, 256]
     t0 = time.time()
     res = sweep(grid(algo=tuple(VEC_ALGOS), n=tuple(sizes),
-                     network=("sdc", "mdc"), rounds=12), window=(3, 10))
+                     network=("sdc", "mdc"), rounds=12), window=(3, 10),
+                engine=engine)
     wall = time.time() - t0
     rows = {(r["network"], r["n"], r["algo"]): r for r in res.table()}
     for network in ("sdc", "mdc"):

@@ -11,10 +11,11 @@ from .common import emit, run_sim
 
 def main(full: bool = False, engine: str = "event") -> None:
     n = 32 if full else 16
-    if engine == "vec":
+    if engine in ("vec", "pallas"):
         from repro.vecsim import SweepConfig, sweep
         res = sweep([SweepConfig(algo="allconcur+", n=n),
-                     SweepConfig(algo="allconcur", n=n)], window=(3, 8))
+                     SweepConfig(algo="allconcur", n=n)], window=(3, 8),
+                    engine=engine)
         du = float(res.median_latency[0]) / 2.0
         dr = float(res.median_latency[1])
         _emit_rows(n, du, dr, tag="v")

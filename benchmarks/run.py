@@ -12,10 +12,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
-                         "table3|fig3|fig4|fig5|fig6|arch|smr|sweep_vec")
-    ap.add_argument("--engine", default="event", choices=("event", "vec"),
-                    help="fig4/fig6 backend: per-event heap or the "
-                         "jax-vectorized sweep engine (repro.vecsim)")
+                         "table3|fig3|fig4|fig5|fig6|arch|smr|sweep_vec|"
+                         "tropical")
+    ap.add_argument("--engine", default="event",
+                    choices=("event", "vec", "pallas"),
+                    help="fig4/fig6 backend: per-event heap, the "
+                         "jax-vectorized sweep engine (repro.vecsim), or "
+                         "the same engine relaxing on the Pallas tropical "
+                         "kernel")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump results as JSON to PATH")
     args = ap.parse_args()
@@ -23,7 +27,7 @@ def main() -> None:
     from . import (arch_microbench, common, paper_fig3_batching,
                    paper_fig4_scaling, paper_fig5_failures,
                    paper_fig6_robustness, paper_table3_connectivity,
-                   smr_throughput, sweep_vec)
+                   smr_throughput, sweep_vec, tropical_bench)
 
     benches = {
         "table3": paper_table3_connectivity.main,
@@ -36,6 +40,7 @@ def main() -> None:
         "arch": arch_microbench.main,
         "smr": smr_throughput.main,
         "sweep_vec": sweep_vec.main,
+        "tropical": tropical_bench.main,
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(benches):

@@ -10,6 +10,24 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== kernels smoke: interpret-mode rmsnorm + tropical_matmul =="
+python - <<'PY'
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.kernels import rmsnorm, tropical_matmul
+from repro.kernels.ref import rmsnorm_ref
+
+x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+w = jax.random.normal(jax.random.PRNGKey(1), (128,))
+np.testing.assert_allclose(np.asarray(rmsnorm(x, w, interpret=True)),
+                           np.asarray(rmsnorm_ref(x, w)), atol=3e-5, rtol=3e-5)
+a = jax.random.uniform(jax.random.PRNGKey(2), (48, 96), maxval=10.0)
+b = jax.random.uniform(jax.random.PRNGKey(3), (96, 33), maxval=10.0)
+ref = jnp.min(a[:, :, None] + b[None], axis=1)
+assert (tropical_matmul(a, b, interpret=True) == ref).all()
+print("kernels smoke OK")
+PY
+
 echo "== smoke bench: SMR throughput + vectorized sweep (CI size) =="
 python -m benchmarks.run --only smr,sweep_vec --json BENCH_ci.json
 

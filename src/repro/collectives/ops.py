@@ -13,14 +13,15 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from ..kernels.compat import axis_size, shard_map
 
 from .schedules import doubling_schedule, gs_flood_schedule, ring_schedule
 
 
 def _axis_size(axis: str):
-    return jax.lax.axis_size(axis)
+    return axis_size(axis)
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +137,7 @@ def make_grad_sync(mesh: Mesh, axis: str, strategy: str = "psum", d: int = 3):
         def one(g):
             fn = shard_map(
                 lambda a: graph_allreduce(a, axis, strategy=strategy, d=d) /
-                jax.lax.axis_size(axis),
+                axis_size(axis),
                 mesh=mesh,
                 in_specs=P(axis),
                 out_specs=P(axis),

@@ -1,3 +1,7 @@
 from .ops import decode_attention, flash_attention, mamba_scan, rmsnorm
+from .tropical import (tropical_closure, tropical_matmul,
+                       tropical_matmul_threshold, tropical_relax)
 
-__all__ = ["decode_attention", "flash_attention", "mamba_scan", "rmsnorm"]
+__all__ = ["decode_attention", "flash_attention", "mamba_scan", "rmsnorm",
+           "tropical_closure", "tropical_matmul",
+           "tropical_matmul_threshold", "tropical_relax"]

@@ -1,0 +1,44 @@
+"""jax version shim for the Pallas/shard_map layer.
+
+The repo tracks two API renames that landed between jax 0.4.x and 0.5+:
+
+- ``pltpu.TPUCompilerParams`` became ``pltpu.CompilerParams``.  Every kernel
+  builds its ``compiler_params`` through :data:`CompilerParams` here instead
+  of touching ``pltpu`` directly, so both spellings work.
+- ``jax.experimental.shard_map.shard_map`` was promoted to
+  ``jax.shard_map``.  Collectives import :func:`shard_map` from here.
+
+Policy: kernels and collectives never feature-detect jax themselves — all
+version probing lives in this module so a future rename is a one-line fix.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+# pltpu.CompilerParams (jax >= 0.5) vs pltpu.TPUCompilerParams (jax 0.4.x).
+# Both accept dimension_semantics=/vmem_limit_bytes=/... keywords.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    getattr(_pltpu, "TPUCompilerParams")
+
+# jax.shard_map (jax >= 0.5) vs jax.experimental.shard_map (jax 0.4.x).
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis inside shard_map.
+
+    ``jax.lax.axis_size`` (jax >= 0.5) vs ``jax.core.axis_frame`` (jax
+    0.4.x, where it resolves directly to the bound size).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    import jax.core as jax_core
+    frame = jax_core.axis_frame(axis)
+    return frame.size if hasattr(frame, "size") else frame
+
+
+__all__ = ["CompilerParams", "axis_size", "shard_map"]

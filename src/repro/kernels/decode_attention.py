@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -101,7 +103,7 @@ def decode_attention_kernel(q, k, v, kv_len, *, block_kv: int = 512,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * kvh, g, hd), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(kv_len.astype(jnp.int32), qr, kr, vr)
     return out.reshape(b, h, hd)

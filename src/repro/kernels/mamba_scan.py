@@ -14,7 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .compat import CompilerParams
 
 
 def _mamba_kernel(delta_ref, u_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
@@ -79,7 +80,7 @@ def mamba_scan_kernel(delta, u, b_in, c_in, a, d_skip, h0=None, *,
             jax.ShapeDtypeStruct((bsz, di_p, st), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(delta, u, b_in, c_in, a, d_skip, h0)
     return y[:, :, :di], hout[:, :di]

@@ -92,13 +92,17 @@ def _resolve_axis(rules: Rules, name: Optional[str], used: set) -> Axis:
     ax = rules.get(name)
     if ax is None:
         return None
-    if isinstance(ax, str):
+    # preserve the rule's grouping: a tuple-valued rule stays a tuple even
+    # when one mesh axis survives (P(("data",), None) != P("data", None) —
+    # a grouped axis means "this array dim is sharded over the product")
+    grouped = isinstance(ax, tuple)
+    if not grouped:
         ax = (ax,)
     picked = tuple(a for a in ax if a not in used)
     used.update(picked)
     if not picked:
         return None
-    return picked if len(picked) > 1 else picked[0]
+    return picked if grouped else picked[0]
 
 
 def to_pspec(axes: Sequence[Optional[str]], rules: Optional[Rules] = None) -> P:

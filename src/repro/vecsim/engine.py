@@ -20,8 +20,10 @@ We therefore alternate two vectorized passes until the joint fixpoint:
    get the next arrival estimates.
 
 Both passes are pure array programs: they vmap over a batch of configs and
-jit cleanly (and the inner relaxation maps naturally onto a Pallas kernel —
-see README).  All K rounds are relaxed jointly, which captures the pipelining
+jit cleanly; the inner relaxation optionally dispatches to the Pallas
+tropical-semiring kernel (``engine="pallas"``, bit-for-bit equal to the
+jnp path — see README and ``repro.kernels.tropical``).  All K rounds are
+relaxed jointly, which captures the pipelining
 the protocol actually exhibits: round k+1 messages overtake stragglers of
 round k and are postponed (G_U) or forwarded early (G_R) exactly like in the
 event engine.
@@ -46,6 +48,7 @@ from typing import Tuple
 import numpy as np
 
 BIG = 1e12          # "not yet known" sentinel (finite: avoids inf-inf NaNs)
+ENGINES = ("vec", "pallas")   # jnp gather relaxation | Pallas tropical kernel
 _EPS = 1e-9         # fixpoint convergence tolerance (seconds): one ns is 4+
                     # orders below any reported latency; tighter values only
                     # chase float-rounding churn through the round pipeline
@@ -118,7 +121,8 @@ def _nic_scan(jnp, keys, occ, tx0):
 # iterations over [n, n] arrays instead of a joint K-round relaxation).
 
 def _unreliable_round(jax, jnp, tstart, tx0, parent, send_off, occ, prop,
-                      prop_from_parent, max_iters):
+                      prop_from_parent, max_iters, relax_cost=None,
+                      interpret=True):
     n = tstart.shape[0]
     eye = jnp.eye(n, dtype=bool)
     tsv = tstart[None, :]                      # round entry, per server column
@@ -133,8 +137,19 @@ def _unreliable_round(jax, jnp, tstart, tx0, parent, send_off, occ, prop,
         start, free_end = jax.vmap(
             lambda Ev, Av, ov, t0: _nic_scan(jnp, (Av, Ev), ov, t0),
             in_axes=(1, 1, 1, 0), out_axes=(1, 0))(E, Aeff, occ, tx0)
-        cand = (jnp.take_along_axis(start, parent, axis=1)
-                + send_off + prop_from_parent)
+        if relax_cost is None:
+            cand = (jnp.take_along_axis(start, parent, axis=1)
+                    + send_off + prop_from_parent)
+        else:
+            # tropical kernel: per-source (1, n) x (n, n) min-plus — the one
+            # finite entry per column is the parent edge, so the min-plus
+            # contraction reproduces the tree gather bit-for-bit.  prop is
+            # added after the min (single candidate: equivalent) to keep the
+            # event sim's (start + send_off) + prop float association
+            from ..kernels.tropical import tropical_matmul
+            cand = tropical_matmul(start[:, None, :], relax_cost,
+                                   interpret=interpret)[:, 0, :] \
+                + prop_from_parent
         A_new = jnp.where(eye, tsv, cand)
         return A_new, E, free_end
 
@@ -157,10 +172,14 @@ def _unreliable_round(jax, jnp, tstart, tx0, parent, send_off, occ, prop,
 
 
 def run_unreliable(parent, send_off, occ, prop, *, rounds: int,
-                   max_iters: int = 0) -> RoundTimes:
+                   max_iters: int = 0, engine: str = "vec") -> RoundTimes:
     """Relax K failure-free G_U rounds.  Batched: all array arguments may
-    carry leading batch dimensions (vmapped out here)."""
+    carry leading batch dimensions (vmapped out here).  ``engine="pallas"``
+    lowers the relaxation onto the tropical min-plus kernel (bit-for-bit
+    equal to the default jnp path; interpret-mode off-TPU)."""
     jax, jnp = _jax()
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     parent = np.asarray(parent)
     batch_shape = parent.shape[:-2]
     n = parent.shape[-1]
@@ -168,7 +187,7 @@ def run_unreliable(parent, send_off, occ, prop, *, rounds: int,
     if not max_iters:
         max_iters = 2 * int(np.ceil(np.log2(max(n, 2)))) + 8
 
-    fn = _compiled_unreliable(n, K, max_iters)
+    fn = _compiled_unreliable(n, K, max_iters, engine)
     flat = lambda a: np.asarray(a, np.float64).reshape((-1,) + a.shape[len(batch_shape):])
     C, tstart, iters = fn(
         parent.reshape((-1, n, n)).astype(np.int32),
@@ -180,19 +199,32 @@ def run_unreliable(parent, send_off, occ, prop, *, rounds: int,
 
 
 @functools.lru_cache(maxsize=64)
-def _compiled_unreliable(n: int, K: int, max_iters: int):
+def _compiled_unreliable(n: int, K: int, max_iters: int,
+                         engine: str = "vec"):
     jax, jnp = _jax()
     from jax.experimental import enable_x64
+
+    use_pallas = engine == "pallas"
+    interpret = jax.default_backend() != "tpu"
 
     with enable_x64():
         def single(parent, send_off, occ, prop):
             prop_from_parent = prop[parent, jnp.arange(n)[None, :]]
+            relax_cost = None
+            if use_pallas:
+                # dense per-source send-slot costs: the only finite entry in
+                # column (s, :, v) is the parent edge of v in s's tree
+                # (propagation is added after the contraction)
+                s_idx = jnp.arange(n)[:, None]
+                v_idx = jnp.arange(n)[None, :]
+                relax_cost = jnp.full((n, n, n), jnp.inf, jnp.float64).at[
+                    s_idx, parent, v_idx].set(send_off)
 
             def round_step(carry, _):
                 tstart, tx0 = carry
                 C, free_end, it = _unreliable_round(
                     jax, jnp, tstart, tx0, parent, send_off, occ, prop,
-                    prop_from_parent, max_iters)
+                    prop_from_parent, max_iters, relax_cost, interpret)
                 return (C, free_end), (tstart, C, it)
 
             init = (jnp.zeros(n, jnp.float64), jnp.zeros(n, jnp.float64))
@@ -213,13 +245,15 @@ def _compiled_unreliable(n: int, K: int, max_iters: int):
 # ---------------------------------------------------------------------------
 
 def _reliable_step(jax, jnp, A1, inst, tstart, pred, pred_cost, pred_mask,
-                   occ, t0):
+                   occ, t0, pallas_tables=None, interpret=True):
     """One Jacobi sweep of the joint K-round G_R relaxation.
 
     ``pred[v, j]`` lists v's G_R predecessors (padded, masked by
     ``pred_mask``); ``pred_cost[v, j]`` is that edge's send-slot offset plus
     propagation, so candidates gather over d predecessors instead of a dense
-    n^3 min-plus contraction.
+    n^3 min-plus contraction.  With ``pallas_tables`` the same relaxation
+    runs as a dense tropical-kernel min-plus over (cost2, has_pad) —
+    bit-for-bit equal to the gather (see run_reliable).
     """
     K, n, _ = A1.shape
     k_idx = jnp.arange(K)
@@ -249,15 +283,31 @@ def _reliable_step(jax, jnp, A1, inst, tstart, pred, pred_cost, pred_mask,
     start1, start2 = jax.vmap(per_server, in_axes=(2, 2, 2, 2),
                               out_axes=2)(E1, E2, rnd_b, occ_b)
 
-    # min-plus over G_R edges: gather both forward events of each predecessor
-    c1 = start1[:, :, pred] + pred_cost[None, None]       # [K, s, v, dmax]
-    c2 = start2[:, :, pred] + pred_cost[None, None]
-    c1 = jnp.where(pred_mask[None, None], c1, BIG)
-    c2 = jnp.where(pred_mask[None, None], c2, BIG)
-    cand = jnp.concatenate([c1, c2], axis=-1)             # [K, s, v, 2*dmax]
-    A1_new = jnp.min(cand, axis=-1)
-    in_round = jnp.where(cand >= tsv[..., None], cand, BIG)
-    inst_new = jnp.min(in_round, axis=-1)
+    if pallas_tables is None:
+        # min-plus over G_R edges: gather both forward events of each
+        # predecessor
+        c1 = start1[:, :, pred] + pred_cost[None, None]   # [K, s, v, dmax]
+        c2 = start2[:, :, pred] + pred_cost[None, None]
+        c1 = jnp.where(pred_mask[None, None], c1, BIG)
+        c2 = jnp.where(pred_mask[None, None], c2, BIG)
+        cand = jnp.concatenate([c1, c2], axis=-1)         # [K, s, v, 2*dmax]
+        A1_new = jnp.min(cand, axis=-1)
+        in_round = jnp.where(cand >= tsv[..., None], cand, BIG)
+        inst_new = jnp.min(in_round, axis=-1)
+    else:
+        # dense tropical min-plus: both forward events stack along the
+        # contraction axis (same cost matrix), the install rule becomes the
+        # kernel's threshold gate, and columns whose gather rows carried
+        # BIG padding (in-degree < dmax) get the same min(., BIG) cap
+        from ..kernels.tropical import tropical_matmul_threshold
+        cost2, has_pad = pallas_tables                    # [2n, n], [n]
+        S2 = jnp.concatenate([start1, start2], axis=-1)   # [K, s, 2n]
+        thr = jnp.broadcast_to(tsv, (K, n, n))
+        plain, gated = tropical_matmul_threshold(S2, cost2, thr, big=BIG,
+                                                 interpret=interpret)
+        pad = has_pad[None, None, :]
+        A1_new = jnp.where(pad, jnp.minimum(plain, BIG), plain)
+        inst_new = jnp.where(pad, jnp.minimum(gated, BIG), gated)
     A1_new = jnp.where(eye[None], tsv, A1_new)
     inst_new = jnp.where(eye[None], tsv, inst_new)
 
@@ -267,13 +317,17 @@ def _reliable_step(jax, jnp, A1, inst, tstart, pred, pred_cost, pred_mask,
 
 
 def run_reliable(adj, edge_off, occ, prop, *, rounds: int,
-                 max_iters: int = 0) -> RoundTimes:
+                 max_iters: int = 0, engine: str = "vec") -> RoundTimes:
     """Relax K failure-free G_R (AllConcur) rounds to the joint fixpoint.
 
     G_R rounds interleave on the NIC (early forwards of round k+1 run while
     round k drains), so all K rounds relax jointly rather than sequentially.
+    ``engine="pallas"`` lowers the flood relaxation onto the tropical
+    min-plus kernel, bit-for-bit equal to the default jnp gather path.
     """
     jax, jnp = _jax()
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     adj = np.asarray(adj).astype(bool)
     batch_shape = adj.shape[:-2]
     n = adj.shape[-1]
@@ -299,13 +353,13 @@ def run_reliable(adj, edge_off, occ, prop, *, rounds: int,
             pred_cost[b, v, :len(us)] = eoff_f[b, us, v] + prop_f[b, us, v]
             pred_mask[b, v, :len(us)] = True
 
-    fn = _compiled_reliable(n, K, dmax, max_iters, True)
+    fn = _compiled_reliable(n, K, dmax, max_iters, True, engine)
     C, tstart, iters, resid = fn(pred, pred_cost, pred_mask, occ_f)
     C, resid = np.asarray(C), np.asarray(resid)
     # insurance: the warm-started solve must agree with the trustworthy cold
     # prefix and be fully resolved; otherwise redo the whole batch cold
     if (resid > 1e-9).any() or not np.isfinite(C).all() or (C > BIG / 2).any():
-        fn = _compiled_reliable(n, K, dmax, 8 * max_iters, False)
+        fn = _compiled_reliable(n, K, dmax, 8 * max_iters, False, engine)
         C, tstart, iters, _ = fn(pred, pred_cost, pred_mask, occ_f)
         C = np.asarray(C)
     C = C.reshape(batch_shape + (K, n))
@@ -314,13 +368,17 @@ def run_reliable(adj, edge_off, occ, prop, *, rounds: int,
 
 
 @functools.lru_cache(maxsize=64)
-def _compiled_reliable(n: int, K: int, dmax: int, max_iters: int, warm: bool):
+def _compiled_reliable(n: int, K: int, dmax: int, max_iters: int, warm: bool,
+                       engine: str = "vec"):
     jax, jnp = _jax()
     from jax.experimental import enable_x64
 
+    use_pallas = engine == "pallas"
+    interpret = jax.default_backend() != "tpu"
+
     with enable_x64():
         def solve(Kc, pred, pred_cost, pred_mask, occ, ts0, iters_cap,
-                  A0=None, inst0=None):
+                  A0=None, inst0=None, pallas_tables=None):
             if A0 is None:
                 A0 = jnp.full((Kc, n, n), BIG, jnp.float64)
             inst0 = A0 if inst0 is None else inst0
@@ -334,7 +392,7 @@ def _compiled_reliable(n: int, K: int, dmax: int, max_iters: int, warm: bool):
                 A1, inst, ts, it, _ = state
                 A1n, instn, tsn, _C = _reliable_step(
                     jax, jnp, A1, inst, ts, pred, pred_cost, pred_mask, occ,
-                    t0)
+                    t0, pallas_tables, interpret)
                 delta = jnp.maximum(
                     jnp.max(jnp.abs(jnp.clip(A1n, 0, BIG) - jnp.clip(A1, 0, BIG))),
                     jnp.max(jnp.abs(jnp.clip(instn, 0, BIG) - jnp.clip(inst, 0, BIG))))
@@ -343,10 +401,23 @@ def _compiled_reliable(n: int, K: int, dmax: int, max_iters: int, warm: bool):
             A1, inst, ts, it, _ = jax.lax.while_loop(
                 cond, body, (A0, inst0, ts0, jnp.int32(0), jnp.float64(BIG)))
             A1, inst, _ts, C = _reliable_step(
-                jax, jnp, A1, inst, ts, pred, pred_cost, pred_mask, occ, t0)
+                jax, jnp, A1, inst, ts, pred, pred_cost, pred_mask, occ, t0,
+                pallas_tables, interpret)
             return C, ts, it, A1, inst
 
         def single(pred, pred_cost, pred_mask, occ):
+            pallas_tables = None
+            if use_pallas:
+                # dense G_R edge costs (inf off-edge), stacked twice along
+                # the contraction axis — once per forward event kind; gather
+                # rows with BIG padding (in-degree < dmax) are flagged so
+                # the dense min gets the identical BIG cap
+                v_col = jnp.arange(n)[:, None]
+                dense = jnp.full((n, n), jnp.inf, jnp.float64).at[
+                    pred, v_col].min(
+                        jnp.where(pred_mask, pred_cost, jnp.inf))
+                pallas_tables = (jnp.concatenate([dense, dense], axis=0),
+                                 ~jnp.all(pred_mask, axis=-1))
             # cold Jacobi resolves rounds strictly one-by-one (~settle
             # iterations each).  Warm-start: solve a short prefix cold, then
             # extrapolate round entries by the steady-state period so all K
@@ -360,10 +431,12 @@ def _compiled_reliable(n: int, K: int, dmax: int, max_iters: int, warm: bool):
                 ts_cold = jnp.concatenate(
                     [jnp.zeros((1, n)), jnp.full((K - 1, n), BIG)], 0)
                 C, ts, it, _A, _i = solve(K, pred, pred_cost, pred_mask, occ,
-                                          ts_cold, jnp.int32(max_iters))
+                                          ts_cold, jnp.int32(max_iters),
+                                          pallas_tables=pallas_tables)
                 return C, ts, it, jnp.float64(0.0)
             C1, _ts1, it1, A1_1, inst1 = solve(K1, pred, pred_cost, pred_mask,
-                                               occ, ts0, jnp.int32(max_iters))
+                                               occ, ts0, jnp.int32(max_iters),
+                                               pallas_tables=pallas_tables)
             # extrapolate entry times AND arrival matrices by the per-server
             # steady-state period so late rounds start near their fixpoint
             period = C1[-1] - C1[-2]                       # per-server [n]
@@ -378,7 +451,8 @@ def _compiled_reliable(n: int, K: int, dmax: int, max_iters: int, warm: bool):
             inst_warm = jnp.concatenate([inst1, inst1[-1][None] + shift], 0)
             C, ts, it2, _A, _i = solve(K, pred, pred_cost, pred_mask, occ,
                                        ts_warm, jnp.int32(max_iters),
-                                       A0=A_warm, inst0=inst_warm)
+                                       A0=A_warm, inst0=inst_warm,
+                                       pallas_tables=pallas_tables)
             resid = jnp.max(jnp.abs(C[:K1] - C1))
             return C, ts, it1 + it2, resid
 

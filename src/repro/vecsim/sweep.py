@@ -23,7 +23,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.digraph import resilience_degree
-from . import engine, topology
+from . import engine as _engine
+from . import topology
 
 UNRELIABLE_MODES = ("allconcur+", "allgather")
 
@@ -98,9 +99,12 @@ def _dedup_key(cfg: SweepConfig) -> Tuple:
 
 
 def sweep(configs: Sequence[SweepConfig], *,
-          window: Tuple[int, int] = (3, 10)) -> SweepResult:
+          window: Tuple[int, int] = (3, 10),
+          engine: str = "vec") -> SweepResult:
     """Evaluate every config; returns per-config failure-free round latency,
-    steady-state throughput and the full completion-time trajectories."""
+    steady-state throughput and the full completion-time trajectories.
+    ``engine="pallas"`` runs the inner relaxation on the tropical min-plus
+    Pallas kernel (bit-for-bit equal to the default jnp path)."""
     all_configs = list(configs)
     t0 = time.time()
 
@@ -133,25 +137,27 @@ def sweep(configs: Sequence[SweepConfig], *,
             tabs = [topology.unreliable_tables(
                 n, network=configs[i].network, batch=configs[i].batch,
                 mode=configs[i].algo) for i in idxs]
-            rt = engine.run_unreliable(
+            rt = _engine.run_unreliable(
                 np.stack([t.parent for t in tabs]),
                 np.stack([t.send_off for t in tabs]),
                 np.stack([t.occ for t in tabs]),
-                np.stack([t.prop for t in tabs]), rounds=rounds)
+                np.stack([t.prop for t in tabs]), rounds=rounds,
+                engine=engine)
         else:
             tabs2 = [topology.reliable_tables(
                 n, d=configs[i].resolved_d(), network=configs[i].network,
                 batch=configs[i].batch) for i in idxs]
-            rt = engine.run_reliable(
+            rt = _engine.run_reliable(
                 np.stack([t.adj for t in tabs2]),
                 np.stack([t.edge_off for t in tabs2]),
                 np.stack([t.occ for t in tabs2]),
-                np.stack([t.prop for t in tabs2]), rounds=rounds)
+                np.stack([t.prop for t in tabs2]), rounds=rounds,
+                engine=engine)
         for j, i in enumerate(idxs):
-            one = engine.RoundTimes(completion=rt.completion[j],
+            one = _engine.RoundTimes(completion=rt.completion[j],
                                     start=rt.start[j],
                                     iterations=rt.iterations)
-            s = engine.summarize(one, mode=configs[i].algo, n=n,
+            s = _engine.summarize(one, mode=configs[i].algo, n=n,
                                  batch=configs[i].batch, window=window)
             med[i] = s["median_latency"]
             thr[i] = s["throughput"]

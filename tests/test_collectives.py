@@ -35,10 +35,10 @@ _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
     import sys
     sys.path.insert(0, "src")
+    from repro.kernels.compat import shard_map
     from repro.collectives.ops import (ring_allgather, doubling_allgather,
                                        gs_flood_allgather, ring_allreduce,
                                        graph_allreduce)

@@ -27,15 +27,15 @@ def run_event(algo, n, network, *, batch=4, rounds=ROUNDS):
     return met
 
 
-def run_vec(algo, n, network, *, batch=4, rounds=ROUNDS):
+def run_vec(algo, n, network, *, batch=4, rounds=ROUNDS, engine="vec"):
     if algo == "allconcur":
         t = reliable_tables(n, network=network, batch=batch)
         rt = vec_engine.run_reliable(t.adj, t.edge_off, t.occ, t.prop,
-                                     rounds=rounds)
+                                     rounds=rounds, engine=engine)
     else:
         t = unreliable_tables(n, network=network, batch=batch, mode=algo)
         rt = vec_engine.run_unreliable(t.parent, t.send_off, t.occ, t.prop,
-                                       rounds=rounds)
+                                       rounds=rounds, engine=engine)
     return vec_engine.summarize(rt, mode=algo, n=n, batch=batch,
                                 window=WINDOW)
 
@@ -55,6 +55,16 @@ class TestCrossValidation:
             f"latency: event {ev_lat:.6e} vs vec {v_lat:.6e}")
         assert abs(v_thr - ev_thr) <= 0.01 * ev_thr, (
             f"throughput: event {ev_thr:.0f} vs vec {v_thr:.0f}")
+
+    @pytest.mark.parametrize("algo", ["allconcur+", "allconcur", "allgather"])
+    def test_pallas_engine_matches_event_sim(self, algo):
+        """The tropical-kernel lowering reproduces the event simulator just
+        like the jnp path does (it is bit-for-bit equal to it)."""
+        met = run_event(algo, 8, "sdc")
+        s = run_vec(algo, 8, "sdc", engine="pallas")
+        ev_lat, ev_thr = met.median_latency(), met.throughput(*WINDOW)
+        assert abs(float(s["median_latency"]) - ev_lat) <= 0.01 * ev_lat
+        assert abs(float(s["throughput"]) - ev_thr) <= 0.01 * ev_thr
 
 
 # ---------------------------------------------------------------- topology

@@ -66,11 +66,15 @@ def main(full: bool = False) -> None:
     from repro.vecsim.sweep import _dedup_key
     unique = len({_dedup_key(c) for c in cfgs})
     speedup = event_total / warm
+    # wall_clock=1 tells scripts/check_bench.py that this row's us_per_call
+    # is measured wall time (noisy run-to-run), not deterministic simulated
+    # time like the smr_* rows — the regression gate applies its looser
+    # wall-clock band to it
     emit("sweep_vec_grid", warm / len(cfgs) * 1e6,
          f"configs={len(cfgs)};unique_configs={unique};"
          f"vec_warm_s={warm:.3f};vec_cold_s={cold:.3f};"
          f"event_grid_s={event_total:.1f};speedup_x={speedup:.1f};"
-         f"event_cost={event_label}")
+         f"wall_clock=1;event_cost={event_label}")
 
     # sanity anchor: one row of actual sweep output per algorithm (n=16, sdc)
     for row in res.table():

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Bench-regression gate: diff a fresh BENCH_ci.json against the baseline.
+
+Usage::
+
+    python scripts/check_bench.py FRESH.json [--baseline BENCH_ci.json]
+    python scripts/check_bench.py FRESH.json --update-baseline
+
+Rows are matched by ``name``.  The gate fails (exit 1) when, on any row
+present in both files:
+
+* ``us_per_call`` regresses by more than ``--max-us-regress`` (default 25%),
+* ``speedup_x`` drops by more than ``--max-speedup-drop`` (default 20%),
+
+or when a baseline row disappeared from the fresh run.  New rows are
+reported but never fail the gate (they have no baseline yet).
+
+Rows that flag themselves with ``wall_clock`` (e.g. ``sweep_vec_grid``,
+whose us_per_call is measured wall time rather than deterministic simulated
+time) get the looser ``--max-wall-regress`` band (default 100%, i.e. up to
+2x) for us_per_call, because wall time is noisy run-to-run even on one
+machine; ``speedup_x`` keeps its own band — as a same-run ratio the machine
+speed largely cancels out of it.
+
+Waiver: after an *intentional* perf change (e.g. the wire codec changing
+byte accounting, or new hardware), rerun the bench and bless it with
+``--update-baseline``, which copies the fresh file over the baseline and
+exits 0 — then commit the updated baseline alongside the change that
+explains it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from typing import List
+
+
+def _fmt_pct(new: float, old: float) -> str:
+    if old == 0:
+        return "n/a"
+    return f"{(new - old) / old * 100.0:+.1f}%"
+
+
+def compare(fresh: List[dict], baseline: List[dict], *,
+            max_us_regress: float = 0.25,
+            max_speedup_drop: float = 0.20,
+            max_wall_regress: float = 1.00) -> List[str]:
+    """Return a list of human-readable failures (empty = gate passes)."""
+    failures: List[str] = []
+    fresh_by_name = {r.get("name"): r for r in fresh}
+    for base in baseline:
+        name = base.get("name")
+        row = fresh_by_name.get(name)
+        if row is None:
+            failures.append(f"{name}: row missing from fresh run")
+            continue
+        wall = bool(base.get("wall_clock") or row.get("wall_clock"))
+        allowed = max_wall_regress if wall else max_us_regress
+        b_us, f_us = base.get("us_per_call"), row.get("us_per_call")
+        if isinstance(b_us, (int, float)) and isinstance(f_us, (int, float)) \
+                and b_us > 0 and f_us > b_us * (1.0 + allowed):
+            failures.append(
+                f"{name}: us_per_call {b_us:g} -> {f_us:g} "
+                f"({_fmt_pct(f_us, b_us)} > +{allowed:.0%} allowed"
+                f"{', wall-clock band' if wall else ''})")
+        b_sp, f_sp = base.get("speedup_x"), row.get("speedup_x")
+        if isinstance(b_sp, (int, float)) and isinstance(f_sp, (int, float)) \
+                and b_sp > 0 and f_sp < b_sp * (1.0 - max_speedup_drop):
+            failures.append(
+                f"{name}: speedup_x {b_sp:g} -> {f_sp:g} "
+                f"({_fmt_pct(f_sp, b_sp)} < -{max_speedup_drop:.0%} allowed)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly produced bench JSON")
+    ap.add_argument("--baseline", default="BENCH_ci.json",
+                    help="committed baseline (default: BENCH_ci.json)")
+    ap.add_argument("--max-us-regress", type=float, default=0.25,
+                    help="allowed fractional us_per_call increase (0.25)")
+    ap.add_argument("--max-speedup-drop", type=float, default=0.20,
+                    help="allowed fractional speedup_x decrease (0.20)")
+    ap.add_argument("--max-wall-regress", type=float, default=1.00,
+                    help="allowed fractional us_per_call increase for rows "
+                         "flagged wall_clock (1.00 = up to 2x)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="bless the fresh run: copy it over the baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    if args.update_baseline:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"check_bench: baseline {args.baseline} updated from "
+              f"{args.fresh} ({len(fresh)} rows)")
+        return 0
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    failures = compare(fresh, baseline,
+                       max_us_regress=args.max_us_regress,
+                       max_speedup_drop=args.max_speedup_drop,
+                       max_wall_regress=args.max_wall_regress)
+    baseline_names = {r.get("name") for r in baseline}
+    new_rows = [r["name"] for r in fresh if r.get("name") not in baseline_names]
+    if new_rows:
+        print(f"check_bench: {len(new_rows)} new row(s) without baseline: "
+              f"{', '.join(new_rows)}")
+    if failures:
+        print(f"check_bench: FAIL ({len(failures)} regression(s) vs "
+              f"{args.baseline}):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        print("  (intentional? bless with: python scripts/check_bench.py "
+              f"{args.fresh} --update-baseline)", file=sys.stderr)
+        return 1
+    print(f"check_bench: OK — {len(baseline)} baseline rows within bounds "
+          f"(us_per_call +{args.max_us_regress:.0%}, "
+          f"speedup_x -{args.max_speedup_drop:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Minimal lint fallback for environments without ruff.
+
+``scripts/ci.sh lint`` prefers ``ruff check .`` (configured in
+pyproject.toml: pyflakes' unused-import rule F401).  The pinned container
+for this repo cannot pip-install, so this script reimplements the same
+narrow check — plus a syntax pass — with only the stdlib:
+
+* every ``.py`` file under src/ tests/ benchmarks/ scripts/ examples/ must
+  parse (``ast.parse``);
+* module-level and nested ``import``/``from .. import`` bindings must be
+  referenced somewhere else in the file (conservatively: any word-token
+  match outside the import statement itself counts, so docstring/string
+  references never false-positive), be re-exported via ``__all__`` or the
+  ``import X as X`` idiom, or carry a ``# noqa`` on the import line.
+  ``__init__.py`` files are exempt (re-export surface), mirroring the
+  per-file-ignores in pyproject.toml.
+
+Exit 1 with ``file:line: name imported but unused`` diagnostics, else 0.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+from typing import List, Tuple
+
+ROOTS = ("src", "tests", "benchmarks", "scripts", "examples")
+_WORD = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def _iter_py(root: str):
+    for base, dirs, files in os.walk(root):
+        dirs[:] = [d for d in dirs if not d.startswith((".", "__pycache__"))]
+        for f in files:
+            if f.endswith(".py"):
+                yield os.path.join(base, f)
+
+
+def _import_bindings(tree: ast.AST) -> List[Tuple[int, str, str]]:
+    """(lineno, bound_name, display_name) for every import binding."""
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                bound = alias.asname or alias.name.split(".")[0]
+                out.append((node.lineno, bound, alias.name))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                if alias.asname == alias.name:      # re-export idiom
+                    continue
+                bound = alias.asname or alias.name
+                out.append((node.lineno, bound, alias.name))
+    return out
+
+
+def _blank_import_lines(source: str, tree: ast.AST) -> str:
+    """Return the source with import statements blanked out, so a binding
+    does not count as its own use."""
+    lines = source.splitlines()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            end = getattr(node, "end_lineno", node.lineno)
+            for ln in range(node.lineno - 1, end):
+                if 0 <= ln < len(lines):
+                    lines[ln] = ""
+    return "\n".join(lines)
+
+
+def check_file(path: str) -> List[str]:
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [f"{path}:{exc.lineno}: syntax error: {exc.msg}"]
+    if os.path.basename(path) == "__init__.py":
+        return []
+    src_lines = source.splitlines()
+    exported = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                    try:
+                        exported |= set(ast.literal_eval(node.value))
+                    except (ValueError, SyntaxError):
+                        pass
+    blanked = _blank_import_lines(source, tree)
+    used = set(_WORD.findall(blanked))
+    problems = []
+    for lineno, bound, display in _import_bindings(tree):
+        line = src_lines[lineno - 1] if lineno - 1 < len(src_lines) else ""
+        if "noqa" in line:
+            continue
+        if bound in used or bound in exported:
+            continue
+        problems.append(f"{path}:{lineno}: '{display}' imported but unused")
+    return problems
+
+
+def main(argv=None) -> int:
+    roots = (argv or sys.argv[1:]) or list(ROOTS)
+    problems: List[str] = []
+    nfiles = 0
+    for root in roots:
+        if not os.path.isdir(root):
+            continue
+        for path in sorted(_iter_py(root)):
+            nfiles += 1
+            problems.extend(check_file(path))
+    for p in problems:
+        print(p)
+    status = "FAIL" if problems else "OK"
+    print(f"lint_fallback: {status} — {nfiles} files, "
+          f"{len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,8 +8,6 @@ price of fault tolerance the paper quantifies).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +15,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels.compat import axis_size, shard_map
 
-from .schedules import doubling_schedule, gs_flood_schedule, ring_schedule
+from .schedules import gs_flood_schedule
 
 
 def _axis_size(axis: str):

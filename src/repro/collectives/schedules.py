@@ -15,7 +15,7 @@ collective-permutes it can overlap with compute.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Tuple
 
 from ..core.digraph import _geometric_offsets
 

@@ -8,8 +8,8 @@ dims).  Input shapes are the four assigned (seq_len, global_batch) cells.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple
 
 
 @dataclass(frozen=True)

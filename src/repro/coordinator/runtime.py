@@ -27,9 +27,8 @@ uses the jit'd train steps from repro.train.
 """
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +38,12 @@ from ..configs.base import ModelConfig, ShapeConfig
 from ..core.cluster import Cluster
 from ..core.server import DeliveryRecord, Mode
 from ..models import init_params, model_specs
-from ..train import (CheckpointManager, DataPipeline, OptConfig, cross_entropy,
-                     make_loss_fn, opt_state_specs, tree_hash)
+from ..train import (CheckpointManager,
+                     DataPipeline,
+                     OptConfig,
+                     make_loss_fn,
+                     opt_state_specs,
+                     tree_hash)
 from ..train.compression import (CompressionConfig, GradCompressor,
                                  decompress)
 from ..train.optimizer import apply_updates

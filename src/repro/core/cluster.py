@@ -9,16 +9,21 @@ Fig. 1).
 
 This harness is for *correctness* (hypothesis drives it through thousands of
 schedules); timing/throughput live in ``repro.sim``.
+
+``codec=True`` round-trips every delivered message through the wire codec
+(``repro.wire``): the receiver processes ``decode(encode(msg))`` instead of
+the in-memory object, so schedule-randomized protocol tests double as
+codec-fidelity tests on real traffic, and per-channel byte accounting
+(``wire_frames`` / ``wire_bytes``) becomes available.
 """
 from __future__ import annotations
 
 import random
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
-from .digraph import Digraph, gs_digraph
-from .messages import FailNotification, Message, MsgKind
-from .overlay import BinomialOverlay, UnreliableOverlay, make_overlay
+from .digraph import gs_digraph
+from .overlay import make_overlay
 from .server import AllConcurServer, DeliveryRecord, Mode
 
 
@@ -35,7 +40,16 @@ class Cluster:
         payload_fn: Optional[Callable[[int, int], Any]] = None,
         on_deliver_fn: Optional[Callable[[int, DeliveryRecord], None]] = None,
         seed: int = 0,
+        codec: bool = False,
     ):
+        self.codec = codec
+        self.wire_frames = 0          # frames round-tripped (codec=True)
+        self.wire_bytes = 0           # total encoded bytes (codec=True)
+        if codec:
+            # local import: repro.wire imports core.messages, and this module
+            # is itself imported while the core package initializes
+            from ..wire import decode as _wire_decode, encode as _wire_encode
+            self._wire_encode, self._wire_decode = _wire_encode, _wire_decode
         self.n = n
         self.members = list(range(n))
         self.rng = random.Random(seed)
@@ -125,6 +139,11 @@ class Cluster:
         if kind == "msg":
             src, dst = pick
             msg = self.channels[(src, dst)].popleft()
+            if self.codec:
+                frame = self._wire_encode(msg, n=self.n)
+                self.wire_frames += 1
+                self.wire_bytes += len(frame)
+                msg = self._wire_decode(frame)
             srv = self.servers[dst]
             if not srv.halted:
                 srv.on_message(msg)

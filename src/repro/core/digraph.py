@@ -20,7 +20,6 @@ paper's Table III sizes.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, Iterable, List, Sequence, Set, Tuple
 
 

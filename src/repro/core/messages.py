@@ -6,8 +6,8 @@ failure notifications by (target id, owner id) — per paper §III-F.
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Tuple
 
 
 class RoundType(enum.Enum):

@@ -20,7 +20,7 @@ Optional features (paper §III-H, §III-I, Appendix C):
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .digraph import Digraph, gs_digraph

@@ -10,7 +10,7 @@ completes when *all* tracking digraphs are empty (paper §III-A, Algorithm 6).
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Set, Tuple
 
 from .digraph import Digraph
 

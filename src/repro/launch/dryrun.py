@@ -17,7 +17,7 @@ import json
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
 from ..models import (abstract_params, decode_state_specs, model_specs,
                       param_logical_axes)
-from ..models.params import tree_map_spec
 from ..roofline.analysis import (RooflineReport, model_flops_for,
                                  parse_collectives, wire_bytes)
 from ..roofline.analytic import cost_model

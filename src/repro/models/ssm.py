@@ -4,7 +4,7 @@ single-step recurrence (decode).  [arXiv:2312.00752; Jamba arXiv:2403.19887]
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 from ..configs.base import ModelConfig, ShapeConfig
 from ..models.model import layer_has_ffn, layer_has_moe, layer_kind

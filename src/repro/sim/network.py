@@ -18,9 +18,7 @@ overhead.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Dict, Tuple
 
 GIGE_BW = 125e6            # 1 GigE payload bandwidth, bytes/s
 INTER_DC_BW = 1.25e9       # 10 Gbps

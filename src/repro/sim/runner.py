@@ -15,47 +15,43 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
-from ..core.digraph import Digraph, gs_digraph, resilience_degree
-from ..core.messages import (FailNotification, Heartbeat, Message, MsgKind,
-                             PartitionMarker)
+from ..core.digraph import gs_digraph, resilience_degree
 from ..core.overlay import make_overlay
 from ..core.server import AllConcurServer, DeliveryRecord, Mode
+from ..wire import TXN_BYTES, encoded_size  # noqa: F401  (TXN_BYTES re-export)
 from .baselines import LCRServer, LibpaxosNode
 from .network import NetworkModel, make_network
 
-TXN_BYTES = 250
-HDR_BYTES = 64
-FT_HDR_EXTRA = 32   # fault-tolerant header overhead (epoch/round/eon ids)
 LOCAL_READ_LATENCY = 5e-6   # co-located client -> replica memory read (5 us)
 
 
 def wire_size(msg: Any, n: int) -> int:
-    """Bytes on the wire for a message (paper: 250 B per transaction)."""
-    if isinstance(msg, Message):
-        batch = msg.payload.get("batch", 0) if isinstance(msg.payload, dict) else 0
-        extra = FT_HDR_EXTRA if msg.kind == MsgKind.RBCAST else 0
-        return HDR_BYTES + extra + batch * TXN_BYTES
-    if isinstance(msg, FailNotification):
-        return HDR_BYTES
-    if isinstance(msg, Heartbeat):
-        # FD heartbeats on G_R edges are pure header traffic; vecsim's cost
-        # tables cite this branch as the one source of truth for FD cost
-        return HDR_BYTES
-    if isinstance(msg, PartitionMarker):
-        return HDR_BYTES
-    if isinstance(msg, tuple):
-        kind = msg[0]
-        if kind == "lcr_m":
-            return HDR_BYTES + 8 * n + msg[4] * TXN_BYTES  # vector clock: 8n
-        if kind == "lcr_ack":
-            return HDR_BYTES + 8 * n
-        if kind == "pax_client" or kind == "pax_accept":
-            return HDR_BYTES + msg[3] * TXN_BYTES
-        if kind == "pax_accepted":
-            return HDR_BYTES + msg[3] * TXN_BYTES
-    return HDR_BYTES
+    """Bytes on the wire for a message: exactly ``len(wire.encode(msg))``.
+
+    The hand-maintained size model (fixed 64 B header + modeled extras) is
+    gone — the codec in :mod:`repro.wire` is the single source of truth for
+    byte accounting, for the event simulator and (via
+    :func:`repro.vecsim.topology.message_bytes`) for vecsim's cost tables
+    alike.  ``n`` sizes the modeled vector-clock section of the LCR
+    baseline's wire tuples.
+
+    A message is sized once per send *event*, and the same (frozen) object
+    travels many edges per round, so the computed size is memoized on the
+    instance (messages are immutable after construction; a fresh payload
+    dict is built per round).  Baseline tuples can't carry attributes and
+    stay uncached — they are small and ring traffic is light.
+    """
+    cache = getattr(msg, "_wire_size_cache", None)
+    if cache is not None and cache[0] == n:
+        return cache[1]
+    size = encoded_size(msg, n=n)
+    try:
+        object.__setattr__(msg, "_wire_size_cache", (n, size))
+    except (AttributeError, TypeError):
+        pass
+    return size
 
 
 @dataclass
@@ -250,7 +246,12 @@ def build_simulation(
             def payload(rnd):
                 simn = sim_holder[0]
                 metrics.on_abcast(sid, rnd, simn.now)
-                return {"batch": batch, "src": sid, "round": rnd}
+                # no src/round duplicates here: the Message header already
+                # carries them fixed-width, and putting varint-encoded
+                # counters in the payload would make the frame length drift
+                # with the round number (breaking vecsim's constant-cost
+                # tables); nothing ever consumed them from the payload
+                return {"batch": batch}
             return payload
 
         def mk_deliver(sid):

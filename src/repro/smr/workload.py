@@ -14,8 +14,8 @@ from __future__ import annotations
 
 import bisect
 import random
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Mapping, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional
 
 from .service import ClientRequest
 

@@ -19,7 +19,6 @@ from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -11,11 +11,10 @@ For multi-host runs each process builds only its addressable slice via
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ModelConfig, ShapeConfig
 

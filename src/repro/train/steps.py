@@ -5,16 +5,14 @@ active during tracing (repro.sharding.rules.use_rules).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.base import ModelConfig
 from ..models import decode_step as model_decode
 from ..models import forward
-from ..sharding.rules import constrain
 from .optimizer import OptConfig, apply_updates
 
 

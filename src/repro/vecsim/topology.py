@@ -15,8 +15,9 @@ for routing, send order and message cost:
                         ``u`` (sum of per-hop serialization times)
 
 Message sizes go through :func:`repro.sim.runner.wire_size` on synthetic
-``Message`` instances, so header/batch accounting can never drift from the
-event engine.
+``Message`` instances — which is now the *encoded frame length* from
+:mod:`repro.wire` — so header/batch byte accounting can never drift from
+the event engine or from the bytes an actual codec round-trip produces.
 """
 from __future__ import annotations
 
@@ -68,14 +69,17 @@ class ReliableTables:
 
 
 def message_bytes(mode: str, batch: int) -> int:
-    """Wire bytes of one A-broadcast message, via the event sim's wire_size.
+    """Wire bytes of one A-broadcast message, via the event sim's wire_size
+    (= the encoded frame length, ``len(repro.wire.encode(probe))``).
 
     AllConcur+ failure-free rounds and AllGather rounds carry BCAST messages;
-    AllConcur (RELIABLE_ONLY) rounds carry RBCAST messages with the
-    fault-tolerant header extra.
+    AllConcur (RELIABLE_ONLY) rounds carry RBCAST messages.  With the real
+    codec the fault-tolerant fields are varints carried by both kinds, so
+    the old modeled 32-byte RBCAST surcharge collapses to nothing — the
+    honest failure-free header cost the paper's §V argument relies on.
     """
     kind = MsgKind.RBCAST if mode == "allconcur" else MsgKind.BCAST
-    probe = Message(kind, 0, 1, 1, payload={"batch": batch, "src": 0, "round": 1})
+    probe = Message(kind, 0, 1, 1, payload={"batch": batch})
     return wire_size(probe, n=0)
 
 

@@ -1,0 +1,21 @@
+"""Wire-format codec: byte-level frames for the full message vocabulary.
+
+See ``src/repro/wire/README.md`` for the frame layout and policies, and
+``repro.wire.fuzz`` for the corpus-seeded mutation fuzzer.
+"""
+from .codec import (MAX_FRAME_BODY, TXN_BYTES, FrameSplitter, decode,
+                    decode_frame, encode, encoded_size, split)
+from .crc32c import crc32c
+from .errors import (BadMagicError, ChecksumError, FrameTooLargeError,
+                     MalformedFieldError, TrailingBytesError,
+                     TruncatedFrameError, UnknownKindError, WireDecodeError,
+                     WireEncodeError, WireError)
+
+__all__ = [
+    "encode", "decode", "decode_frame", "split", "encoded_size",
+    "FrameSplitter", "crc32c", "TXN_BYTES", "MAX_FRAME_BODY",
+    "WireError", "WireEncodeError", "WireDecodeError",
+    "TruncatedFrameError", "BadMagicError", "ChecksumError",
+    "UnknownKindError", "TrailingBytesError", "FrameTooLargeError",
+    "MalformedFieldError",
+]

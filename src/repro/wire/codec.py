@@ -1,0 +1,522 @@
+"""Byte-level wire codec for the full message vocabulary.
+
+Replaces the hand-maintained size model that used to live in
+``repro.sim.runner.wire_size``: a message's wire cost is now simply
+``len(encode(msg))``, and the decoder is a real parser that the fuzzer
+(``repro.wire.fuzz``) and the schedule-randomized ``Cluster(codec=True)``
+mode exercise on live traffic.
+
+Frame layout (see ``src/repro/wire/README.md`` for the diagram)::
+
+    MAGIC(1) | KIND(1) | BODY_LEN(uvarint) | BODY | CRC32C(4, LE)
+
+The CRC covers every byte from MAGIC through the end of BODY.  Frame kinds:
+
+====  ====================  body fields
+0x01  Message               msgkind (uvarint), src/epoch (u32), round (u64),
+                            eon (u32), payload (value), txn padding section
+0x02  FailNotification      target, owner, eon (u32 each)
+0x03  Heartbeat             src (u32), seq (u64), eon (u32)
+0x04  PartitionMarker       forward (1 byte, strict 0/1), src/epoch (u32),
+                            round (u64)
+0x05  baseline tuple        tuple (value), modeled padding section
+====  ====================  ===========================================
+
+Protocol header fields are fixed-width (little-endian) rather than varints
+so that frame length is invariant in the round/server counters — vecsim's
+cost tables charge one constant per-message size per configuration, and the
+event simulator must agree with them *exactly* at any round number.
+
+Payloads are encoded with a compact self-describing value encoding
+(1-byte type tag + varint lengths) covering None/bool/int/float/str/bytes/
+list/tuple/dict — enough for every payload the protocol, the SMR service
+and the tests produce, with exact round-trip (tuples stay tuples).
+
+**Modeled transaction bodies.**  The harness models application
+transactions as opaque 250-byte blobs (paper §IV).  A protocol ``Message``
+whose payload declares ``{"batch": k}`` without carrying real request bytes
+(no ``"reqs"`` field) gets a padding section of ``k * TXN_BYTES``
+deterministic bytes — the simulated transaction bodies.  SMR payloads carry
+their actual requests, so they get no padding: their (much smaller) honest
+size is the point of the exercise.  Baseline tuples similarly materialize
+the bytes their size model implied (LCR vector clocks: ``8 * n``; Paxos
+batches: ``batch * TXN_BYTES``), which is why :func:`encode` takes ``n``.
+The decoder validates the padding pattern and, for protocol messages,
+recomputes the expected length from the decoded payload.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any, List, Mapping, Optional, Tuple
+
+from ..core.messages import (FailNotification, Heartbeat, Message, MsgKind,
+                             PartitionMarker)
+from .crc32c import crc32c
+from .errors import (BadMagicError, ChecksumError, FrameTooLargeError,
+                     MalformedFieldError, TrailingBytesError,
+                     TruncatedFrameError, UnknownKindError, WireDecodeError,
+                     WireEncodeError)
+
+TXN_BYTES = 250            # the paper's 250 B transaction model (§IV)
+MAGIC = 0xA7
+MAX_FRAME_BODY = 1 << 22   # 4 MiB body cap (fuzz-safety allocation bound)
+MAX_VALUE_DEPTH = 32       # nesting cap for the value encoding
+
+FRAME_MESSAGE = 0x01
+FRAME_FAIL = 0x02
+FRAME_HEARTBEAT = 0x03
+FRAME_MARKER = 0x04
+FRAME_BASELINE = 0x05
+
+_T_NONE, _T_FALSE, _T_TRUE = 0x00, 0x01, 0x02
+_T_INT, _T_FLOAT, _T_STR, _T_BYTES = 0x03, 0x04, 0x05, 0x06
+_T_LIST, _T_TUPLE, _T_DICT = 0x07, 0x08, 0x09
+
+_INT64_MIN, _INT64_MAX = -(1 << 63), (1 << 63) - 1
+
+# deterministic padding pattern for modeled sections, extended on demand
+_PAD_CACHE = bytes(i & 0xFF for i in range(1 << 14))
+
+
+def _pad(k: int) -> bytes:
+    global _PAD_CACHE
+    while len(_PAD_CACHE) < k:
+        _PAD_CACHE = _PAD_CACHE + _PAD_CACHE
+    return _PAD_CACHE[:k]
+
+
+# ---------------------------------------------------------------- varints
+
+def _uvarint_len(v: int) -> int:
+    n = 1
+    while v >= 0x80:
+        v >>= 7
+        n += 1
+    return n
+
+
+def _write_uvarint(out: bytearray, v: int, what: str = "field") -> None:
+    if not isinstance(v, int) or isinstance(v, bool) or v < 0 or v > (1 << 64) - 1:
+        raise WireEncodeError(f"{what} must be an int in [0, 2^64): {v!r}")
+    while v >= 0x80:
+        out.append((v & 0x7F) | 0x80)
+        v >>= 7
+    out.append(v)
+
+
+def _write_u32(out: bytearray, v: int, what: str) -> None:
+    if not isinstance(v, int) or isinstance(v, bool) or not 0 <= v < (1 << 32):
+        raise WireEncodeError(f"{what} must be an int in [0, 2^32): {v!r}")
+    out += v.to_bytes(4, "little")
+
+
+def _write_u64(out: bytearray, v: int, what: str) -> None:
+    if not isinstance(v, int) or isinstance(v, bool) or not 0 <= v < (1 << 64):
+        raise WireEncodeError(f"{what} must be an int in [0, 2^64): {v!r}")
+    out += v.to_bytes(8, "little")
+
+
+def _zigzag(v: int) -> int:
+    return (v << 1) if v >= 0 else ((-v) << 1) - 1
+
+
+def _unzigzag(u: int) -> int:
+    return (u >> 1) if not u & 1 else -((u + 1) >> 1)
+
+
+# ---------------------------------------------------- value encoding (enc)
+
+def _encode_value(out: bytearray, v: Any, depth: int = 0) -> None:
+    if depth > MAX_VALUE_DEPTH:
+        raise WireEncodeError("value nesting too deep")
+    if v is None:
+        out.append(_T_NONE)
+    elif v is True:
+        out.append(_T_TRUE)
+    elif v is False:
+        out.append(_T_FALSE)
+    elif isinstance(v, int):
+        if not _INT64_MIN <= v <= _INT64_MAX:
+            raise WireEncodeError(f"int out of 64-bit range: {v!r}")
+        out.append(_T_INT)
+        _write_uvarint(out, _zigzag(v))
+    elif isinstance(v, float):
+        out.append(_T_FLOAT)
+        out += struct.pack("<d", v)
+    elif isinstance(v, str):
+        raw = v.encode("utf-8")
+        out.append(_T_STR)
+        _write_uvarint(out, len(raw))
+        out += raw
+    elif isinstance(v, (bytes, bytearray)):
+        out.append(_T_BYTES)
+        _write_uvarint(out, len(v))
+        out += v
+    elif isinstance(v, (list, tuple)):
+        out.append(_T_TUPLE if isinstance(v, tuple) else _T_LIST)
+        _write_uvarint(out, len(v))
+        for item in v:
+            _encode_value(out, item, depth + 1)
+    elif isinstance(v, Mapping):
+        out.append(_T_DICT)
+        _write_uvarint(out, len(v))
+        for k, val in v.items():
+            _encode_value(out, k, depth + 1)
+            _encode_value(out, val, depth + 1)
+    else:
+        raise WireEncodeError(f"unencodable payload type: {type(v).__name__}")
+
+
+# ------------------------------------------------------------ body reader
+
+class _Reader:
+    """Bounds-checked cursor over one frame body; every overrun raises a
+    typed :class:`TruncatedFrameError`."""
+
+    __slots__ = ("buf", "pos", "end")
+
+    def __init__(self, buf: bytes, pos: int, end: int):
+        self.buf, self.pos, self.end = buf, pos, end
+
+    def byte(self, what: str) -> int:
+        if self.pos >= self.end:
+            raise TruncatedFrameError(f"truncated {what}")
+        b = self.buf[self.pos]
+        self.pos += 1
+        return b
+
+    def take(self, k: int, what: str) -> bytes:
+        if k > self.end - self.pos:
+            raise TruncatedFrameError(f"truncated {what}")
+        raw = bytes(self.buf[self.pos:self.pos + k])
+        self.pos += k
+        return raw
+
+    def u32(self, what: str) -> int:
+        return int.from_bytes(self.take(4, what), "little")
+
+    def u64(self, what: str) -> int:
+        return int.from_bytes(self.take(8, what), "little")
+
+    def uvarint(self, what: str) -> int:
+        val = shift = 0
+        for _ in range(10):
+            b = self.byte(what)
+            val |= (b & 0x7F) << shift
+            if not b & 0x80:
+                if val >= (1 << 64):
+                    # a 10-byte varint can carry up to 70 bits; reject what
+                    # the encoder could never have produced, so that every
+                    # decoded message re-encodes (encode/decode symmetry)
+                    raise MalformedFieldError(f"varint in {what} exceeds 64 bits")
+                return val
+            shift += 7
+        raise MalformedFieldError(f"over-long varint in {what}")
+
+    def value(self, depth: int = 0) -> Any:
+        if depth > MAX_VALUE_DEPTH:
+            raise MalformedFieldError("value nesting too deep")
+        tag = self.byte("value tag")
+        if tag == _T_NONE:
+            return None
+        if tag == _T_TRUE:
+            return True
+        if tag == _T_FALSE:
+            return False
+        if tag == _T_INT:
+            return _unzigzag(self.uvarint("int value"))
+        if tag == _T_FLOAT:
+            return struct.unpack("<d", self.take(8, "float value"))[0]
+        if tag == _T_STR:
+            raw = self.take(self.uvarint("str length"), "str value")
+            try:
+                return raw.decode("utf-8")
+            except UnicodeDecodeError as exc:
+                raise MalformedFieldError(f"invalid utf-8 in str value: {exc}")
+        if tag == _T_BYTES:
+            return self.take(self.uvarint("bytes length"), "bytes value")
+        if tag in (_T_LIST, _T_TUPLE):
+            count = self.uvarint("sequence count")
+            if count > self.end - self.pos:       # every element is >= 1 byte
+                raise TruncatedFrameError("sequence count exceeds body")
+            items = [self.value(depth + 1) for _ in range(count)]
+            return tuple(items) if tag == _T_TUPLE else items
+        if tag == _T_DICT:
+            count = self.uvarint("dict count")
+            if count > self.end - self.pos:
+                raise TruncatedFrameError("dict count exceeds body")
+            d = {}
+            for _ in range(count):
+                k = self.value(depth + 1)
+                try:
+                    hash(k)
+                except TypeError:
+                    # narrow scope: only key hashing may raise here — a
+                    # TypeError out of the *value* decode would be a decoder
+                    # bug and must surface as a crash, not a typed rejection
+                    raise MalformedFieldError("unhashable dict key")
+                d[k] = self.value(depth + 1)
+            return d
+        raise MalformedFieldError(f"unknown value tag 0x{tag:02x}")
+
+    def padding(self, expect: Optional[int], what: str) -> int:
+        """Read a modeled-padding section (uvarint length + pattern bytes).
+        ``expect`` (when known) is validated against the declared length."""
+        k = self.uvarint(f"{what} length")
+        if expect is not None and k != expect:
+            raise MalformedFieldError(
+                f"{what} length {k} contradicts header (expected {expect})")
+        raw = self.take(k, what)
+        if raw != _pad(k):
+            raise MalformedFieldError(f"corrupt {what} pattern")
+        return k
+
+
+# ------------------------------------------------------- modeled sections
+
+def _message_pad(payload: Any) -> int:
+    """Modeled transaction bytes riding a protocol message: ``batch``
+    declared but no real request bytes present (see module docstring)."""
+    if isinstance(payload, Mapping) and "reqs" not in payload:
+        b = payload.get("batch")
+        if isinstance(b, int) and not isinstance(b, bool) and b > 0:
+            return b * TXN_BYTES
+    return 0
+
+
+def _baseline_pad(t: tuple, n: int) -> int:
+    """Modeled bytes of the §IV baseline wire tuples: LCR messages carry an
+    ``8 * n`` vector clock; batched messages carry their transactions."""
+    tag = t[0] if t and isinstance(t[0], str) else ""
+    pad = 0
+    if tag in ("lcr_m", "lcr_ack"):
+        pad += 8 * max(n, 0)
+    if tag == "lcr_m" and len(t) > 4 and isinstance(t[4], int) and t[4] > 0:
+        pad += t[4] * TXN_BYTES
+    if tag in ("pax_client", "pax_accept", "pax_accepted") and len(t) > 3 \
+            and isinstance(t[3], int) and t[3] > 0:
+        pad += t[3] * TXN_BYTES
+    return pad
+
+
+# ---------------------------------------------------------------- encode
+
+def _body(msg: Any, n: int) -> Tuple[int, bytearray, int]:
+    """Build (frame_kind, structural body bytes, modeled pad length).
+    The pad bytes themselves are appended by :func:`encode`; keeping them
+    out of the build lets :func:`encoded_size` skip materializing them."""
+    out = bytearray()
+    # protocol header fields are FIXED-WIDTH (u32 ids/epochs/eons, u64 round
+    # counters), not varints: a message's frame length must not depend on
+    # *which* round or server produced it, or vecsim's constant per-message
+    # cost tables would drift from the event simulator on long runs
+    if isinstance(msg, Message):
+        _write_uvarint(out, msg.kind.value, "msg kind")
+        _write_u32(out, msg.src, "src")
+        _write_u32(out, msg.epoch, "epoch")
+        _write_u64(out, msg.round, "round")
+        _write_u32(out, msg.eon, "eon")
+        _encode_value(out, msg.payload)
+        pad = _message_pad(msg.payload)
+        _write_uvarint(out, pad, "txn padding length")
+        return FRAME_MESSAGE, out, pad
+    if isinstance(msg, FailNotification):
+        _write_u32(out, msg.target, "target")
+        _write_u32(out, msg.owner, "owner")
+        _write_u32(out, msg.eon, "eon")
+        return FRAME_FAIL, out, 0
+    if isinstance(msg, Heartbeat):
+        _write_u32(out, msg.src, "src")
+        _write_u64(out, msg.seq, "seq")
+        _write_u32(out, msg.eon, "eon")
+        return FRAME_HEARTBEAT, out, 0
+    if isinstance(msg, PartitionMarker):
+        out.append(1 if msg.forward else 0)
+        _write_u32(out, msg.src, "src")
+        _write_u32(out, msg.epoch, "epoch")
+        _write_u64(out, msg.round, "round")
+        return FRAME_MARKER, out, 0
+    if isinstance(msg, tuple):
+        _encode_value(out, msg)
+        pad = _baseline_pad(msg, n)
+        _write_uvarint(out, pad, "modeled padding length")
+        return FRAME_BASELINE, out, pad
+    raise WireEncodeError(f"unencodable message type: {type(msg).__name__}")
+
+
+def encode(msg: Any, *, n: int = 0) -> bytes:
+    """Encode one message as a self-delimiting checksummed frame.
+
+    ``n`` (cluster size) only matters for §IV baseline tuples, whose modeled
+    vector-clock section scales with it.
+    """
+    kind, body, pad = _body(msg, n)
+    if len(body) + pad > MAX_FRAME_BODY:
+        raise WireEncodeError(
+            f"frame body {len(body) + pad} exceeds cap {MAX_FRAME_BODY}")
+    head = bytearray((MAGIC, kind))
+    _write_uvarint(head, len(body) + pad, "body length")
+    frame = bytes(head) + bytes(body) + _pad(pad)
+    return frame + crc32c(frame).to_bytes(4, "little")
+
+
+def encoded_size(msg: Any, *, n: int = 0) -> int:
+    """``len(encode(msg, n=n))`` without materializing pad bytes or the
+    checksum — the event simulator calls this on every send."""
+    _, body, pad = _body(msg, n)
+    blen = len(body) + pad
+    if blen > MAX_FRAME_BODY:
+        raise WireEncodeError(f"frame body {blen} exceeds cap {MAX_FRAME_BODY}")
+    return 2 + _uvarint_len(blen) + blen + 4
+
+
+# ---------------------------------------------------------------- decode
+
+def _frame_extent(buf: bytes, pos: int) -> Optional[int]:
+    """Total length of the frame starting at ``pos``, or None if more bytes
+    are needed to know.  Raises on structurally bad prefixes."""
+    end = len(buf)
+    if end - pos < 1:
+        return None
+    if buf[pos] != MAGIC:
+        raise BadMagicError(
+            f"bad frame magic 0x{buf[pos]:02x} (expected 0x{MAGIC:02x})")
+    if end - pos < 2:
+        return None
+    val = shift = 0
+    p = pos + 2
+    while True:
+        if p >= end:
+            return None
+        b = buf[p]
+        val |= (b & 0x7F) << shift
+        p += 1
+        if not b & 0x80:
+            break
+        shift += 7
+        if shift > 28:
+            raise MalformedFieldError("over-long frame length varint")
+    if val > MAX_FRAME_BODY:
+        raise FrameTooLargeError(f"frame body {val} exceeds cap {MAX_FRAME_BODY}")
+    return (p - pos) + val + 4
+
+
+def decode_frame(buf: bytes, pos: int = 0) -> Tuple[Any, int]:
+    """Decode the frame at ``pos``; return ``(message, next_pos)``."""
+    ext = _frame_extent(buf, pos)
+    if ext is None or len(buf) - pos < ext:
+        raise TruncatedFrameError("incomplete frame")
+    crc_at = pos + ext - 4
+    stored = int.from_bytes(buf[crc_at:pos + ext], "little")
+    if crc32c(bytes(buf[pos:crc_at])) != stored:
+        raise ChecksumError("frame CRC32C mismatch")
+    kind = buf[pos + 1]
+    p = pos + 2                    # skip past the body-length varint
+    while buf[p] & 0x80:
+        p += 1
+    body_start = p + 1
+    body_end = crc_at
+    r = _Reader(buf, body_start, body_end)
+
+    if kind == FRAME_MESSAGE:
+        mk = r.uvarint("msg kind")
+        try:
+            mkind = MsgKind(mk)
+        except ValueError:
+            raise UnknownKindError(f"unknown MsgKind value {mk}")
+        src = r.u32("src")
+        epoch = r.u32("epoch")
+        rnd = r.u64("round")
+        eon = r.u32("eon")
+        payload = r.value()
+        r.padding(_message_pad(payload), "txn padding")
+        msg: Any = Message(mkind, src, epoch, rnd, payload=payload, eon=eon)
+    elif kind == FRAME_FAIL:
+        msg = FailNotification(r.u32("target"), r.u32("owner"),
+                               eon=r.u32("eon"))
+    elif kind == FRAME_HEARTBEAT:
+        msg = Heartbeat(r.u32("src"), r.u64("seq"), eon=r.u32("eon"))
+    elif kind == FRAME_MARKER:
+        fwd = r.byte("forward flag")
+        if fwd not in (0, 1):
+            raise MalformedFieldError(f"forward flag must be 0/1, got {fwd}")
+        msg = PartitionMarker(bool(fwd), r.u32("src"),
+                              r.u32("epoch"), r.u64("round"))
+    elif kind == FRAME_BASELINE:
+        t = r.value()
+        if not isinstance(t, tuple):
+            raise MalformedFieldError(
+                f"baseline frame must carry a tuple, got {type(t).__name__}")
+        # the modeled length depends on n, which the wire does not carry;
+        # only the pattern is validated (see README: versioning policy)
+        r.padding(None, "modeled padding")
+        msg = t
+    else:
+        raise UnknownKindError(f"unknown frame kind 0x{kind:02x}")
+
+    if r.pos != body_end:
+        raise TrailingBytesError(
+            f"{body_end - r.pos} trailing bytes inside frame body")
+    return msg, pos + ext
+
+
+def decode(buf: bytes) -> Any:
+    """Strict one-shot decode: exactly one frame, nothing after it."""
+    msg, nxt = decode_frame(buf, 0)
+    if nxt != len(buf):
+        raise TrailingBytesError(f"{len(buf) - nxt} trailing bytes after frame")
+    return msg
+
+
+def split(buf: bytes) -> List[Any]:
+    """Decode a concatenation of frames; the buffer must end on a frame
+    boundary (a partial tail raises :class:`TruncatedFrameError`)."""
+    out: List[Any] = []
+    pos = 0
+    while pos < len(buf):
+        msg, pos = decode_frame(buf, pos)
+        out.append(msg)
+    return out
+
+
+class FrameSplitter:
+    """Incremental frame splitter for a FIFO byte stream.
+
+    Feed arbitrary chunks; complete frames are decoded and returned, a
+    partial tail is buffered for the next ``feed``.  Decode errors are
+    fatal for the stream (FIFO channels cannot resynchronize), matching
+    the strictness of :func:`decode` — but frames that decoded cleanly
+    *before* the bad bytes in the same ``feed`` are never lost: they are
+    returned, the consumed prefix is dropped, and the error raises on the
+    next ``feed`` call (errors at a frame boundary are definitive, more
+    bytes cannot repair them).
+    """
+
+    def __init__(self) -> None:
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> List[Any]:
+        self._buf += data
+        out: List[Any] = []
+        pos = 0
+        try:
+            while True:
+                ext = _frame_extent(self._buf, pos)
+                if ext is None or len(self._buf) - pos < ext:
+                    break
+                msg, pos = decode_frame(self._buf, pos)
+                out.append(msg)
+        except WireDecodeError:
+            del self._buf[:pos]
+            if not out:
+                raise
+            # deliver the good frames now; the bad bytes stay buffered and
+            # this same error re-raises on the next feed()
+            return out
+        del self._buf[:pos]
+        return out
+
+    @property
+    def pending(self) -> int:
+        """Bytes buffered awaiting the rest of a frame."""
+        return len(self._buf)

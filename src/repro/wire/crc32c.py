@@ -1,0 +1,37 @@
+"""CRC-32C (Castagnoli) — software, table-driven.
+
+The container ships no ``crc32c``/``google-crc32c`` wheel and ``zlib.crc32``
+uses the IEEE polynomial, so the Castagnoli CRC used by the frame format
+(same polynomial as iSCSI, ext4 and gRPC) is implemented here.  The table
+is built once at import; throughput is fine for the frame sizes the codec
+produces (checksums cover the structural bytes of a frame, which are small;
+see ``repro.wire.codec``).
+
+Check value (RFC 3720 appendix / catalogue of CRC algorithms):
+``crc32c(b"123456789") == 0xE3069283``.
+"""
+from __future__ import annotations
+
+_POLY = 0x82F63B78  # reflected Castagnoli polynomial
+
+
+def _build_table() -> tuple:
+    table = []
+    for i in range(256):
+        crc = i
+        for _ in range(8):
+            crc = (crc >> 1) ^ _POLY if crc & 1 else crc >> 1
+        table.append(crc)
+    return tuple(table)
+
+
+_TABLE = _build_table()
+
+
+def crc32c(data: bytes, crc: int = 0) -> int:
+    """CRC-32C of ``data``; pass a previous result as ``crc`` to chain."""
+    crc ^= 0xFFFFFFFF
+    tab = _TABLE
+    for b in data:
+        crc = tab[(crc ^ b) & 0xFF] ^ (crc >> 8)
+    return crc ^ 0xFFFFFFFF

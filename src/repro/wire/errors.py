@@ -1,0 +1,53 @@
+"""Typed error hierarchy for the wire codec.
+
+Every decode failure raises a subclass of :class:`WireDecodeError`; the
+fuzzer (``repro.wire.fuzz``) and the CI ``wire-fuzz-smoke`` stage treat any
+*other* exception escaping the decoder as a bug.  Encoding failures (bad
+input, not bad bytes) raise :class:`WireEncodeError` instead — they are
+never acceptable on the decode path.
+"""
+from __future__ import annotations
+
+
+class WireError(Exception):
+    """Base for all codec errors."""
+
+
+class WireEncodeError(WireError):
+    """The in-memory message cannot be encoded (unsupported type, field out
+    of range, frame would exceed the size cap)."""
+
+
+class WireDecodeError(WireError):
+    """Base for all decoder rejections of bad bytes."""
+
+
+class TruncatedFrameError(WireDecodeError):
+    """The buffer ends before the frame (or a field inside it) is complete."""
+
+
+class BadMagicError(WireDecodeError):
+    """The first byte of a frame is not the protocol magic."""
+
+
+class ChecksumError(WireDecodeError):
+    """The per-frame CRC32C does not match the frame contents."""
+
+
+class UnknownKindError(WireDecodeError):
+    """Unrecognized frame kind tag or ``MsgKind`` discriminant."""
+
+
+class TrailingBytesError(WireDecodeError):
+    """Extra bytes after a complete frame (strict one-shot decode) or after
+    the last field inside a frame body."""
+
+
+class FrameTooLargeError(WireDecodeError):
+    """Declared body length exceeds the codec's frame size cap."""
+
+
+class MalformedFieldError(WireDecodeError):
+    """A field is structurally invalid: bad value tag, over-long varint,
+    invalid UTF-8, out-of-range bool/enum byte, nesting too deep, or a
+    modeled-padding section that contradicts the header."""

@@ -1,0 +1,222 @@
+"""Corpus-seeded mutation fuzzer for the wire decoder.
+
+The decoder's contract is: *any* byte string either decodes to a message or
+raises a :class:`~repro.wire.errors.WireDecodeError` subclass — never an
+``IndexError``, ``MemoryError``, ``RecursionError``, or silent garbage.
+This module drives that contract continuously:
+
+* a seed corpus of canonical frames (one per message kind, an SMR batch,
+  §IV baseline tuples, and a multi-frame stream) lives under
+  ``tests/corpus/wire/`` and can be regenerated with ``--regen-corpus``;
+* each iteration picks a corpus entry, applies 1–8 random mutations
+  (bit flips, byte writes, truncation, insertion, deletion, duplication,
+  splicing two entries), and feeds the result to :func:`repro.wire.decode`
+  — and, every few iterations, byte-by-byte through a
+  :class:`~repro.wire.codec.FrameSplitter` to exercise the streaming path;
+* any exception outside the typed family is recorded as a crash with the
+  hex blob that triggered it, and the process exits non-zero.
+
+CI runs this time-boxed (``scripts/ci.sh wire-fuzz-smoke``, 10 s); the unit
+suite runs a 1 s slice so the contract is also enforced by plain pytest.
+
+Usage::
+
+    python -m repro.wire.fuzz --time 10 --corpus tests/corpus/wire
+    python -m repro.wire.fuzz --iterations 5000 --seed 7
+    python -m repro.wire.fuzz --regen-corpus   # rewrite the seed corpus
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..core.messages import (FailNotification, Heartbeat, Message, MsgKind,
+                             PartitionMarker)
+from .codec import FrameSplitter, decode, encode
+from .errors import WireDecodeError
+
+DEFAULT_CORPUS = os.path.join("tests", "corpus", "wire")
+
+
+# ------------------------------------------------------------------ corpus
+
+def corpus_messages() -> List[Tuple[str, object, int]]:
+    """Canonical (name, message, n) seeds covering the full vocabulary."""
+    smr_reqs = ((7, 0, {"op": "put", "key": 12, "value": "v7.0xxxxxxxx"}),
+                (9, 4, {"op": "get", "key": 12}),
+                (7, 1, {"op": "incr", "key": 3}))
+    return [
+        ("msg_bcast", Message(MsgKind.BCAST, 0, 1, 7,
+                              payload={"batch": 4, "src": 0, "round": 7}), 8),
+        ("msg_rbcast", Message(MsgKind.RBCAST, 3, 2, 9,
+                               payload={"batch": 2, "src": 3, "round": 9},
+                               eon=1), 8),
+        ("msg_smr", Message(MsgKind.BCAST, 2, 1, 3,
+                            payload={"kind": "smr", "src": 2, "round": 3,
+                                     "batch": len(smr_reqs),
+                                     "reqs": smr_reqs}), 8),
+        ("msg_str_payload", Message(MsgKind.BCAST, 5, 1, 2,
+                                    payload="p5:r2"), 8),
+        ("msg_none_payload", Message(MsgKind.FWD, 1, 1, 4), 8),
+        ("fail", FailNotification(4, 6, eon=2), 8),
+        ("heartbeat", Heartbeat(src=3, seq=17), 8),
+        ("marker_fwd", PartitionMarker(True, 0, 2, 5), 8),
+        ("marker_bwd", PartitionMarker(False, 7, 2, 5), 8),
+        ("lcr_m", ("lcr_m", 0, 1, 0, 4), 16),
+        ("lcr_ack", ("lcr_ack", 0, 1, 2), 16),
+        ("pax_accept", ("pax_accept", 0, 1, 4), 16),
+    ]
+
+
+def write_corpus(dirpath: str = DEFAULT_CORPUS) -> List[str]:
+    """(Re)write the seed corpus; returns the file names written."""
+    os.makedirs(dirpath, exist_ok=True)
+    names = []
+    stream = b""
+    for name, msg, n in corpus_messages():
+        frame = encode(msg, n=n)
+        stream += frame
+        path = os.path.join(dirpath, f"{name}.bin")
+        with open(path, "wb") as fh:
+            fh.write(frame)
+        names.append(f"{name}.bin")
+    with open(os.path.join(dirpath, "stream.bin"), "wb") as fh:
+        fh.write(stream)
+    names.append("stream.bin")
+    return names
+
+
+def load_corpus(dirpath: str = DEFAULT_CORPUS) -> List[bytes]:
+    entries = []
+    for fname in sorted(os.listdir(dirpath)):
+        if fname.endswith(".bin"):
+            with open(os.path.join(dirpath, fname), "rb") as fh:
+                entries.append(fh.read())
+    if not entries:
+        raise FileNotFoundError(f"no .bin corpus entries under {dirpath}")
+    return entries
+
+
+# --------------------------------------------------------------- mutation
+
+def _mutate(rng: random.Random, data: bytes, other: bytes) -> bytes:
+    buf = bytearray(data)
+    op = rng.randrange(7)
+    if op == 0 and buf:                                   # bit flip
+        i = rng.randrange(len(buf))
+        buf[i] ^= 1 << rng.randrange(8)
+    elif op == 1 and buf:                                 # byte write
+        buf[rng.randrange(len(buf))] = rng.randrange(256)
+    elif op == 2 and buf:                                 # truncate
+        buf = buf[:rng.randrange(len(buf))]
+    elif op == 3:                                         # insert junk
+        i = rng.randrange(len(buf) + 1)
+        junk = bytes(rng.randrange(256) for _ in range(rng.randrange(1, 9)))
+        buf[i:i] = junk
+    elif op == 4 and len(buf) > 1:                        # delete span
+        i = rng.randrange(len(buf))
+        buf[i:i + rng.randrange(1, 9)] = b""
+    elif op == 5 and buf:                                 # duplicate span
+        i = rng.randrange(len(buf))
+        span = buf[i:i + rng.randrange(1, 17)]
+        buf[i:i] = span
+    else:                                                 # splice with other
+        if buf and other:
+            i = rng.randrange(len(buf))
+            j = rng.randrange(len(other))
+            buf = buf[:i] + bytearray(other[j:])
+    return bytes(buf)
+
+
+@dataclass
+class FuzzStats:
+    iterations: int = 0
+    decoded_ok: int = 0
+    rejected: Dict[str, int] = field(default_factory=dict)
+    crashes: List[Tuple[str, str]] = field(default_factory=list)  # (exc, hex)
+
+    def summary(self) -> str:
+        rej = ", ".join(f"{k}={v}" for k, v in sorted(self.rejected.items()))
+        return (f"{self.iterations} iterations: {self.decoded_ok} decoded ok, "
+                f"rejected [{rej}], {len(self.crashes)} crashes")
+
+
+def _try_decode(stats: FuzzStats, blob: bytes, streaming: bool,
+                rng: random.Random) -> None:
+    try:
+        if streaming:
+            sp = FrameSplitter()
+            pos = 0
+            while pos < len(blob):
+                step = rng.randrange(1, 17)
+                sp.feed(blob[pos:pos + step])
+                pos += step
+        else:
+            decode(blob)
+        stats.decoded_ok += 1
+    except WireDecodeError as exc:
+        name = type(exc).__name__
+        stats.rejected[name] = stats.rejected.get(name, 0) + 1
+    except Exception as exc:                     # the bug class we hunt
+        stats.crashes.append((f"{type(exc).__name__}: {exc}", blob.hex()))
+
+
+def fuzz(corpus: List[bytes], *, time_budget: Optional[float] = None,
+         iterations: Optional[int] = None, seed: int = 0) -> FuzzStats:
+    """Mutate-and-decode loop; stops at ``time_budget`` seconds or
+    ``iterations``, whichever comes first (at least one of them must be
+    given)."""
+    if time_budget is None and iterations is None:
+        raise ValueError("need a time budget or an iteration count")
+    rng = random.Random(seed)
+    stats = FuzzStats()
+    deadline = None if time_budget is None else time.monotonic() + time_budget
+    while True:
+        if iterations is not None and stats.iterations >= iterations:
+            break
+        if deadline is not None and time.monotonic() >= deadline:
+            break
+        entry = corpus[rng.randrange(len(corpus))]
+        other = corpus[rng.randrange(len(corpus))]
+        blob = entry
+        for _ in range(rng.randrange(1, 9)):
+            blob = _mutate(rng, blob, other)
+        _try_decode(stats, blob, streaming=stats.iterations % 5 == 4, rng=rng)
+        stats.iterations += 1
+    return stats
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="corpus-seeded mutation fuzzer for repro.wire")
+    ap.add_argument("--corpus", default=DEFAULT_CORPUS,
+                    help=f"corpus directory (default: {DEFAULT_CORPUS})")
+    ap.add_argument("--time", type=float, default=None, metavar="SECONDS",
+                    help="time budget (default 10 s if no --iterations)")
+    ap.add_argument("--iterations", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--regen-corpus", action="store_true",
+                    help="rewrite the seed corpus and exit")
+    args = ap.parse_args(argv)
+
+    if args.regen_corpus:
+        names = write_corpus(args.corpus)
+        print(f"wrote {len(names)} corpus entries to {args.corpus}")
+        return 0
+
+    budget = args.time if (args.time is not None or args.iterations) else 10.0
+    stats = fuzz(load_corpus(args.corpus), time_budget=budget,
+                 iterations=args.iterations, seed=args.seed)
+    print(f"wire-fuzz: {stats.summary()}")
+    for exc, blob in stats.crashes[:10]:
+        print(f"  CRASH {exc}\n    blob: {blob[:200]}", file=sys.stderr)
+    return 1 if stats.crashes else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,128 @@
+"""CI gate scripts: bench-regression diff and the lint fallback.
+
+``scripts/check_bench.py`` is the bench stage's gate — these tests pin its
+contract: pass on equal/improved numbers, exit non-zero on a synthetically
+regressed BENCH_ci.json, and support the --update-baseline waiver.
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECK_BENCH = os.path.join(REPO, "scripts", "check_bench.py")
+LINT_FALLBACK = os.path.join(REPO, "scripts", "lint_fallback.py")
+
+BASELINE = [
+    {"name": "smr_scale_n8", "us_per_call": 100.0, "req_s": 1000.0},
+    {"name": "sweep_vec_grid", "us_per_call": 50.0, "speedup_x": 100.0},
+]
+
+
+def _run(*argv, cwd=None):
+    return subprocess.run([sys.executable, CHECK_BENCH, *argv],
+                          capture_output=True, text=True, cwd=cwd)
+
+
+def _write(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def test_check_bench_passes_on_identical_and_improved(tmp_path):
+    base = _write(tmp_path, "base.json", BASELINE)
+    same = _write(tmp_path, "same.json", BASELINE)
+    r = _run(same, "--baseline", base)
+    assert r.returncode == 0, r.stderr
+    better = [dict(BASELINE[0], us_per_call=80.0),
+              dict(BASELINE[1], us_per_call=40.0, speedup_x=140.0)]
+    r = _run(_write(tmp_path, "better.json", better), "--baseline", base)
+    assert r.returncode == 0, r.stderr
+
+
+def test_check_bench_fails_on_us_per_call_regression(tmp_path):
+    base = _write(tmp_path, "base.json", BASELINE)
+    worse = [dict(BASELINE[0], us_per_call=126.0), BASELINE[1]]  # +26% > 25%
+    r = _run(_write(tmp_path, "worse.json", worse), "--baseline", base)
+    assert r.returncode == 1
+    assert "us_per_call" in r.stderr and "smr_scale_n8" in r.stderr
+    # +25% exactly is still within bounds
+    edge = [dict(BASELINE[0], us_per_call=125.0), BASELINE[1]]
+    r = _run(_write(tmp_path, "edge.json", edge), "--baseline", base)
+    assert r.returncode == 0, r.stderr
+
+
+def test_check_bench_wall_clock_rows_get_looser_band(tmp_path):
+    """Rows flagged wall_clock (measured wall time, noisy) use the 2x band
+    for us_per_call; deterministic rows keep the strict 25%."""
+    base_rows = [{"name": "wall_row", "us_per_call": 100.0, "wall_clock": 1.0},
+                 {"name": "sim_row", "us_per_call": 100.0}]
+    base = _write(tmp_path, "base.json", base_rows)
+    # +60%: fails a sim row, passes a wall row
+    fresh = [dict(base_rows[0], us_per_call=160.0), base_rows[1]]
+    r = _run(_write(tmp_path, "f1.json", fresh), "--baseline", base)
+    assert r.returncode == 0, r.stderr
+    fresh = [base_rows[0], dict(base_rows[1], us_per_call=160.0)]
+    r = _run(_write(tmp_path, "f2.json", fresh), "--baseline", base)
+    assert r.returncode == 1
+    # beyond 2x fails even the wall row
+    fresh = [dict(base_rows[0], us_per_call=210.0), base_rows[1]]
+    r = _run(_write(tmp_path, "f3.json", fresh), "--baseline", base)
+    assert r.returncode == 1
+    assert "wall-clock band" in r.stderr
+
+
+def test_check_bench_fails_on_speedup_drop(tmp_path):
+    base = _write(tmp_path, "base.json", BASELINE)
+    worse = [BASELINE[0], dict(BASELINE[1], speedup_x=79.0)]   # -21% > 20%
+    r = _run(_write(tmp_path, "worse.json", worse), "--baseline", base)
+    assert r.returncode == 1
+    assert "speedup_x" in r.stderr
+
+
+def test_check_bench_fails_on_missing_row_but_not_new_row(tmp_path):
+    base = _write(tmp_path, "base.json", BASELINE)
+    fresh = [BASELINE[0],                       # sweep_vec_grid disappeared
+             {"name": "brand_new_bench", "us_per_call": 1.0}]
+    r = _run(_write(tmp_path, "fresh.json", fresh), "--baseline", base)
+    assert r.returncode == 1
+    assert "missing" in r.stderr
+    # new rows alone never fail
+    fresh2 = BASELINE + [{"name": "brand_new_bench", "us_per_call": 1.0}]
+    r = _run(_write(tmp_path, "fresh2.json", fresh2), "--baseline", base)
+    assert r.returncode == 0, r.stderr
+    assert "brand_new_bench" in r.stdout
+
+
+def test_check_bench_update_baseline_waiver(tmp_path):
+    base = _write(tmp_path, "base.json", BASELINE)
+    worse = [dict(BASELINE[0], us_per_call=400.0), BASELINE[1]]
+    fresh = _write(tmp_path, "worse.json", worse)
+    assert _run(fresh, "--baseline", base).returncode == 1
+    assert _run(fresh, "--baseline", base,
+                "--update-baseline").returncode == 0
+    assert json.loads(open(base).read()) == worse   # blessed
+    assert _run(fresh, "--baseline", base).returncode == 0
+
+
+def test_check_bench_gates_the_committed_baseline_shape():
+    """The committed BENCH_ci.json must be self-consistent: diffing it
+    against itself passes (guards against schema drift breaking the gate)."""
+    r = _run(os.path.join(REPO, "BENCH_ci.json"),
+             "--baseline", os.path.join(REPO, "BENCH_ci.json"))
+    assert r.returncode == 0, r.stderr
+
+
+def test_lint_fallback_flags_unused_import(tmp_path):
+    pkg = tmp_path / "src"
+    pkg.mkdir()
+    (pkg / "bad.py").write_text("import os\nimport sys\nprint(sys.path)\n")
+    r = subprocess.run([sys.executable, LINT_FALLBACK, str(pkg)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "'os' imported but unused" in r.stdout
+    (pkg / "bad.py").write_text("import sys\nprint(sys.path)\n")
+    r = subprocess.run([sys.executable, LINT_FALLBACK, str(pkg)],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout

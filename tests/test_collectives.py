@@ -5,7 +5,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 from repro.collectives.schedules import (doubling_schedule, gs_flood_schedule,
                                          ring_schedule)

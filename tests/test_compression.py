@@ -1,5 +1,4 @@
 """Gradient compression: codecs, error feedback, coordinator integration."""
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, ShapeConfig

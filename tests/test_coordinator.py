@@ -2,7 +2,6 @@
 checkpoint commit, straggler policy."""
 import tempfile
 
-import pytest
 
 from repro.configs import get_config, ShapeConfig
 from repro.coordinator.runtime import ElasticTrainer

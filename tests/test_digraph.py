@@ -1,9 +1,12 @@
 """Digraph library: G_S(n,d) optimal connectivity, overlays, schedules."""
 import pytest
 
-from repro.core.digraph import (Digraph, binomial_digraph, binomial_schedule,
-                                circulant_digraph, gs_digraph,
-                                resilience_degree, ring_digraph)
+from repro.core.digraph import (Digraph,
+                                binomial_digraph,
+                                binomial_schedule,
+                                gs_digraph,
+                                resilience_degree,
+                                ring_digraph)
 from repro.core.overlay import BinomialOverlay, RingOverlay
 
 

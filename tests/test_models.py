@@ -8,7 +8,7 @@ import pytest
 from repro.configs import ALL_ARCHS, get_config, ShapeConfig
 from repro.models import (decode_state_specs, decode_step, forward,
                           init_params, model_specs)
-from repro.models.params import init_params as init_tree, param_count
+from repro.models.params import init_params as init_tree
 from repro.train import OptConfig, make_train_step, opt_state_specs, synthetic_batch
 
 KEY = jax.random.PRNGKey(0)

@@ -4,7 +4,6 @@ We instrument clusters at every scheduler step and assert the propositions
 over the *observed* joint states — a much stronger check than the scenario
 tests, since any interleaving the scheduler produces must satisfy them.
 """
-import itertools
 
 import pytest
 
@@ -12,7 +11,7 @@ pytest.importorskip("hypothesis")
 
 from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.core import Cluster, RoundType
+from repro.core import Cluster
 
 
 def observe_states(c: Cluster, steps: int, crash_at=None, victim=None):

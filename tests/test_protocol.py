@@ -1,5 +1,4 @@
 """AllConcur+ protocol: scenario tests (paper §III), all modes."""
-import pytest
 
 from repro.core import Cluster, Mode, Transition, gs_digraph
 

@@ -1,6 +1,4 @@
 """Roofline machinery: HLO collective parsing + analytic cost model sanity."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SHAPES, get_config

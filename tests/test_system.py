@@ -5,14 +5,13 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, ShapeConfig
 from repro.coordinator.runtime import ElasticTrainer
 from repro.models import (decode_state_specs, decode_step, forward,
                           init_params, model_specs)
 from repro.models.params import init_params as init_tree
-from repro.train import make_prefill_step, make_serve_step
+from repro.train import make_serve_step
 
 
 def test_end_to_end_training_with_failure_and_checkpoint():

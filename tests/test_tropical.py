@@ -5,7 +5,6 @@ the same candidate set (min and broadcast-add are exact in floating point),
 which is what lets ``engine="pallas"`` reproduce the vecsim engine — and
 therefore the event simulator — exactly.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

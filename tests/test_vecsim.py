@@ -93,13 +93,43 @@ def test_reliable_tables_match_gr_degree():
     assert np.allclose(offs, t.ser * np.arange(1, 4))
 
 
-def test_message_bytes_cites_event_wire_size():
-    from repro.sim.runner import FT_HDR_EXTRA, HDR_BYTES, TXN_BYTES
+def test_message_bytes_is_encoded_frame_length():
+    """Cost tables are built from *encoded* lengths: message_bytes must be
+    exactly len(encode(probe)) for every mode/batch — byte-accounting parity
+    between vecsim, the event sim and the real codec."""
+    from repro.core.messages import Message, MsgKind
     from repro.vecsim import message_bytes
-    assert message_bytes("allgather", 4) == HDR_BYTES + 4 * TXN_BYTES
-    assert message_bytes("allconcur+", 4) == HDR_BYTES + 4 * TXN_BYTES
-    assert message_bytes("allconcur", 4) == (HDR_BYTES + FT_HDR_EXTRA
-                                             + 4 * TXN_BYTES)
+    from repro.wire import encode
+    for mode in ("allconcur+", "allconcur", "allgather"):
+        kind = MsgKind.RBCAST if mode == "allconcur" else MsgKind.BCAST
+        for batch in (1, 4, 32):
+            probe = Message(kind, 0, 1, 1, payload={"batch": batch})
+            assert message_bytes(mode, batch) == len(encode(probe))
+
+
+def test_frame_length_invariant_in_round_and_src():
+    """vecsim charges ONE per-message size per config, so the encoded length
+    must not depend on which round/server produced the message (fixed-width
+    header counters) — else long event-sim runs would drift off the tables."""
+    from repro.core.messages import Message, MsgKind
+    from repro.wire import encode
+    ref = len(encode(Message(MsgKind.BCAST, 0, 1, 1, payload={"batch": 4})))
+    for src, epoch, rnd in [(63, 1, 64), (127, 200, 10**6), (0, 2**31, 2**63)]:
+        m = Message(MsgKind.BCAST, src, epoch, rnd, payload={"batch": 4})
+        assert len(encode(m)) == ref
+
+
+def test_cost_tables_cross_validate_exactly_with_encoded_lengths():
+    """With ser times derived from encoded lengths, the vectorized engine
+    still reproduces the event simulator *exactly* (0.0000%), not just
+    within the 1% gate above."""
+    for algo in ("allconcur+", "allconcur", "allgather"):
+        met = run_event(algo, 8, "sdc")
+        s = run_vec(algo, 8, "sdc")
+        np.testing.assert_allclose(float(s["median_latency"]),
+                                   met.median_latency(), rtol=1e-12)
+        np.testing.assert_allclose(float(s["throughput"]),
+                                   met.throughput(*WINDOW), rtol=1e-12)
 
 
 # ------------------------------------------------------------------ engine

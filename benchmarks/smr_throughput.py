@@ -5,12 +5,20 @@ Sweeps n, batch size, and read ratio across the three protocol modes
 plus one failure-injection run per mode (crash mid-workload).  Unlike the
 paper figures (protocol-internal A-broadcast -> A-deliver latency), these
 numbers are what a client sees: submit -> committed-and-applied ack.
+
+Membership rows: ``smr_*_eonflip_*`` adds a server mid-workload (an
+``add_server`` admin command through the log -> transitional reliable round
+-> snapshot catch-up) and reports the client-perceived disruption p50/p99
+inside a window around the eon flip plus the longest ack gap;
+``smr_*_failover_*`` crashes a server with client failover enabled, so the
+crashed server's clients finish at another replica and the failover rides
+the tail of the latency distribution.
 """
 from __future__ import annotations
 
 import time
 
-from repro.sim import build_smr_simulation
+from repro.sim import build_smr_simulation, schedule_membership_change
 from repro.smr import WorkloadConfig
 
 from .common import emit
@@ -21,29 +29,34 @@ ALGOS = ("allconcur+", "allconcur", "allgather")
 def run_smr(algo: str, n: int, *, batch_max: int, read_ratio: float,
             num_clients: int, requests_per_client: int, network: str = "sdc",
             crash=None, max_time: float = 5.0, seed: int = 0,
-            linearizable: bool = True):
+            linearizable: bool = True, add_server_at=None,
+            client_failover: bool = False):
     cfg = WorkloadConfig(num_clients=num_clients, read_ratio=read_ratio,
                          distribution="zipfian", arrival="closed", seed=seed,
                          linearizable_reads=linearizable)
     sim, smr, services = build_smr_simulation(
         algo, n, workload=cfg, requests_per_client=requests_per_client,
-        batch_max=batch_max, network=network, stale_bound=4)
+        batch_max=batch_max, network=network, stale_bound=4,
+        client_failover=client_failover)
+    if add_server_at is not None:
+        schedule_membership_change(sim, services, add_server_at, add=n, via=1)
     crashed = set()
     if crash:
         for c in crash:
             sim.schedule_crash(*c)
             crashed.add(c[0])
-    # clients homed on a crashed server stall: run until every *surviving*
-    # client finished its own workload (acks from doomed clients don't count
-    # toward the target)
+    # without failover, clients homed on a crashed server stall: run until
+    # every *surviving* client finished its own workload (with failover,
+    # every client finishes)
     alive_clients = [c for c in sim.workload.clients
-                     if sim.client_home[c.client_id] not in crashed]
+                     if client_failover
+                     or sim.client_home[c.client_id] not in crashed]
     t0 = time.time()
     sim.start()
     sim.run(until=lambda: all(c.acked >= requests_per_client
                               for c in alive_clients),
             max_time=max_time)
-    return smr, time.time() - t0
+    return sim, smr, time.time() - t0
 
 
 def main(full: bool = False) -> None:
@@ -56,7 +69,7 @@ def main(full: bool = False) -> None:
     for algo in ALGOS:
         # ---- scaling in n (fixed batch, mixed workload) --------------------
         for n in ns:
-            smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+            _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
                                 num_clients=clients_per_server * n,
                                 requests_per_client=rpc)
             emit(f"smr_{algo}_scale_n{n}", smr.p50() * 1e6,
@@ -66,7 +79,7 @@ def main(full: bool = False) -> None:
         # ---- batch-size sweep (client population scales with batch) -------
         n = ns[0]
         for b in batches:
-            smr, wall = run_smr(algo, n, batch_max=b, read_ratio=0.5,
+            _sim, smr, wall = run_smr(algo, n, batch_max=b, read_ratio=0.5,
                                 num_clients=b * n,
                                 requests_per_client=rpc)
             emit(f"smr_{algo}_batch_n{n}_b{b}", smr.p50() * 1e6,
@@ -75,7 +88,7 @@ def main(full: bool = False) -> None:
                  f"wall_s={wall:.1f}")
         # ---- read-ratio sweep: stale-bounded local reads vs log writes ----
         for rr in ratios:
-            smr, wall = run_smr(algo, n, batch_max=16, read_ratio=rr,
+            _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=rr,
                                 num_clients=clients_per_server * n,
                                 requests_per_client=rpc, linearizable=False)
             emit(f"smr_{algo}_reads_n{n}_r{int(rr*100)}", smr.p50() * 1e6,
@@ -83,7 +96,7 @@ def main(full: bool = False) -> None:
                  f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
                  f"wall_s={wall:.1f}")
         # ---- linearizable reads: every get ordered through the log --------
-        smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+        _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
                             num_clients=clients_per_server * n,
                             requests_per_client=rpc, linearizable=True)
         emit(f"smr_{algo}_linreads_n{n}_r50", smr.p50() * 1e6,
@@ -92,13 +105,49 @@ def main(full: bool = False) -> None:
              f"wall_s={wall:.1f}")
         # ---- failure injection mid-workload (no FT in allgather) ----------
         if algo != "allgather":
-            smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+            _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
                                 num_clients=clients_per_server * n,
                                 requests_per_client=rpc,
                                 crash=[(1, 0.0005, 1)], max_time=8.0)
             emit(f"smr_{algo}_crash_n{n}", smr.p50() * 1e6,
                  f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
                  f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
+                 f"wall_s={wall:.1f}")
+        # ---- client failover: crashed server's clients finish elsewhere ---
+        if algo != "allgather":
+            _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+                                      num_clients=clients_per_server * n,
+                                      requests_per_client=rpc,
+                                      crash=[(1, 0.0005, 1)], max_time=8.0,
+                                      client_failover=True)
+            emit(f"smr_{algo}_failover_n{n}", smr.p50() * 1e6,
+                 f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
+                 f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
+                 f"maxgap_ms={smr.max_ack_gap()*1e3:.3f};wall_s={wall:.1f}")
+        # ---- eon flip: AddServer mid-workload, disruption around the flip -
+        if algo == "allconcur+":
+            sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+                                     num_clients=clients_per_server * n,
+                                     requests_per_client=2 * rpc,
+                                     add_server_at=0.002, max_time=8.0)
+            t_flip = (min(t for (t, _s, _e) in sim.eon_flips)
+                      if sim.eon_flips else float("nan"))
+            # window commensurate with the few-ms simulated run, so the
+            # flip stats isolate the transition instead of reproducing the
+            # whole-run distribution
+            w0, w1 = t_flip - 0.0005, t_flip + 0.002
+            win = smr.latencies_in(w0, w1)
+            win.sort()
+            flip_p50 = win[len(win) // 2] if win else float("nan")
+            flip_p99 = (win[min(int(0.99 * len(win)), len(win) - 1)]
+                        if win else float("nan"))
+            gap = smr.max_ack_gap(w0, w1)
+            emit(f"smr_{algo}_eonflip_n{n}", smr.p50() * 1e6,
+                 f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
+                 f"p99_ms={smr.p99()*1e3:.3f};"
+                 f"flip_p50_ms={flip_p50*1e3:.3f};"
+                 f"flip_p99_ms={flip_p99*1e3:.3f};"
+                 f"flip_gap_ms={gap*1e3:.3f};acked={smr.acked};"
                  f"wall_s={wall:.1f}")
 
 

@@ -55,6 +55,14 @@ stage_wire_fuzz_smoke() {
   python -m repro.wire.fuzz --time 10 --corpus tests/corpus/wire
 }
 
+stage_membership_chaos() {
+  echo "== membership-chaos: slow-marked chaos suite (time-boxed 600 s) =="
+  # randomized schedules interleaving writes, crashes and add/remove
+  # commands (tests/test_membership.py); the wide sweeps are slow-marked,
+  # so tier-1 stays fast and this stage owns them, under a hard time box
+  timeout 600 python -m pytest tests/test_membership.py -q --runslow
+}
+
 stage_bench() {
   echo "== bench: SMR throughput + vectorized sweep (CI size) =="
   python -m benchmarks.run --only smr,sweep_vec --json BENCH_ci.fresh.json
@@ -69,15 +77,16 @@ stage_bench() {
   python -c "import json; [print(' ', r['name'], {k: v for k, v in r.items() if k != 'name'}) for r in json.load(open('BENCH_ci.fresh.json'))]"
 }
 
-ALL_STAGES=(lint tier1 kernels-smoke wire-fuzz-smoke bench)
+ALL_STAGES=(lint tier1 kernels-smoke wire-fuzz-smoke membership-chaos bench)
 
 run_stage() {
   case "$1" in
-    lint)            stage_lint ;;
-    tier1)           stage_tier1 ;;
-    kernels-smoke)   stage_kernels_smoke ;;
-    wire-fuzz-smoke) stage_wire_fuzz_smoke ;;
-    bench)           stage_bench ;;
+    lint)             stage_lint ;;
+    tier1)            stage_tier1 ;;
+    kernels-smoke)    stage_kernels_smoke ;;
+    wire-fuzz-smoke)  stage_wire_fuzz_smoke ;;
+    membership-chaos) stage_membership_chaos ;;
+    bench)            stage_bench ;;
     *) echo "unknown stage: $1 (choose from: ${ALL_STAGES[*]})" >&2; exit 2 ;;
   esac
 }

@@ -3,8 +3,9 @@
 from .digraph import (Digraph, binomial_digraph, binomial_schedule,
                       circulant_digraph, gs_digraph, resilience_degree,
                       ring_digraph)
-from .messages import (FailNotification, Heartbeat, Message, MsgKind,
-                       PartitionMarker, RoundType)
+from .messages import (FailNotification, Heartbeat, LogSuffix, Message,
+                       MsgKind, PartitionMarker, RoundType, SnapshotChunk,
+                       SnapshotRequest)
 from .overlay import BinomialOverlay, RingOverlay, UnreliableOverlay, make_overlay
 from .server import AllConcurServer, DeliveryRecord, Mode, Transition
 from .tracking import TrackingDigraph, TrackingState
@@ -12,9 +13,10 @@ from .cluster import Cluster
 
 __all__ = [
     "AllConcurServer", "BinomialOverlay", "Cluster", "DeliveryRecord",
-    "Digraph", "FailNotification", "Heartbeat", "Message", "Mode", "MsgKind",
-    "PartitionMarker", "RingOverlay", "RoundType", "TrackingDigraph",
-    "TrackingState", "Transition", "UnreliableOverlay", "binomial_digraph",
+    "Digraph", "FailNotification", "Heartbeat", "LogSuffix", "Message",
+    "Mode", "MsgKind", "PartitionMarker", "RingOverlay", "RoundType",
+    "SnapshotChunk", "SnapshotRequest", "TrackingDigraph", "TrackingState",
+    "Transition", "UnreliableOverlay", "binomial_digraph",
     "binomial_schedule", "circulant_digraph", "gs_digraph", "make_overlay",
     "resilience_degree", "ring_digraph",
 ]

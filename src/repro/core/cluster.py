@@ -72,7 +72,11 @@ class Cluster:
             )
         self.channels: Dict[Tuple[int, int], deque] = {}
         self.crashed: Set[int] = set()
-        self.fd_pending: List[Tuple[int, int]] = []  # (target, detector)
+        # delivered FD events, keyed (target, det, det's eon): failure
+        # notifications are eon-specific (§III-I), so detection re-arms
+        # after every eon flip — the FD keeps suspecting a dead server and
+        # re-announces it on the new digraph
+        self.fd_done: Set[Tuple[int, int, int]] = set()
         self.steps = 0
 
     # ----------------------------------------------------------------- wiring
@@ -98,41 +102,64 @@ class Cluster:
     # ---------------------------------------------------------------- control
     def crash(self, sid: int, partial_sends: Optional[int] = None) -> None:
         """Crash ``sid``.  Pending outbox truncated to ``partial_sends``
-        messages (None = all already-queued sends still go out).  Successors
-        of sid in each alive server's G_R will detect the failure (queued as
-        FD events, delivered by the scheduler)."""
+        messages (None = all already-queued sends still go out).  Detection
+        is evaluated continuously by the scheduler against each alive
+        server's *current* G_R view (so an eon flip that makes an
+        already-crashed server someone's predecessor re-arms detection)."""
         if sid in self.crashed:
             return
         srv = self.servers[sid]
         self._drain(srv, allow=(partial_sends if partial_sends is not None else None))
         self.crashed.add(sid)
         srv.outbox = []
-        # perfect FD: detection is by successors of sid in G_R (local FD)
-        g_r = srv.g_r
-        for det in g_r.successors(sid):
-            if det not in self.crashed:
-                self.fd_pending.append((sid, det))
+
+    def add_server(self, server: "AllConcurServer") -> None:
+        """Register a dynamically added (joining) server.  For a recovering
+        replica re-joining under its old id, the crashed state and stale FD
+        bookkeeping are cleared so a later crash is detected afresh."""
+        sid = server.sid
+        self.servers[sid] = server
+        if sid not in self.members:
+            self.members.append(sid)
+        self.crashed.discard(sid)
+        self.fd_done = {e for e in self.fd_done if e[0] != sid}
+        for ch in list(self.channels):
+            if sid in ch:
+                del self.channels[ch]   # drop pre-crash in-flight traffic
+        self._drain(server)
 
     # -------------------------------------------------------------- scheduler
     def pending_channels(self) -> List[Tuple[int, int]]:
         return [ch for ch, q in self.channels.items() if q and ch[1] not in self.crashed]
 
+    def _fd_choices(self) -> List[Tuple[int, int]]:
+        """Eligible (target, det) perfect-FD events: det's current G_R has
+        an edge target->det, det is alive, and the FIFO channel target->det
+        has drained — heartbeats travel the same channel as messages, so a
+        timeout implies everything the target sent before crashing has
+        arrived (Proposition III.14's premise)."""
+        out: List[Tuple[int, int]] = []
+        for target in self.crashed:
+            for det, srv in self.servers.items():
+                if det in self.crashed or srv.halted or srv.joining:
+                    continue
+                if (target, det, srv.eon) in self.fd_done:
+                    continue
+                if target not in srv.g_r or det not in srv.g_r.successors(target):
+                    continue
+                if not self.channels.get((target, det)):
+                    out.append((target, det))
+        return out
+
     def step(self) -> bool:
         """Deliver one message (or one FD event).  Returns False if nothing
-        is pending.
-
-        FD events for (target, det) are only eligible once the FIFO channel
-        target->det has drained: heartbeats travel the same channel as
-        messages, so a timeout implies everything the target sent before
-        crashing has arrived (Proposition III.14's premise)."""
+        is pending."""
         self.steps += 1
         choices: List[Tuple[str, Any]] = []
         for ch in self.pending_channels():
             choices.append(("msg", ch))
-        for i, fd in enumerate(self.fd_pending):
-            target, det = fd
-            if det not in self.crashed and not self.channels.get((target, det)):
-                choices.append(("fd", i))
+        for fd in self._fd_choices():
+            choices.append(("fd", fd))
         if not choices:
             return False
         kind, pick = self.rng.choice(choices)
@@ -149,8 +176,9 @@ class Cluster:
                 srv.on_message(msg)
                 self._drain(srv)
         else:
-            target, det = self.fd_pending.pop(pick)
+            target, det = pick
             srv = self.servers[det]
+            self.fd_done.add((target, det, srv.eon))
             if not srv.halted and det not in self.crashed:
                 srv.on_failure_detected(target)
                 self._drain(srv)

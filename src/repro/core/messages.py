@@ -80,3 +80,53 @@ class PartitionMarker:
     src: int
     epoch: int
     round: int
+
+
+# ---------------------------------------------------------------------------
+# replica catch-up (§III-I eons): snapshot + log-suffix transfer
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SnapshotRequest:
+    """A joining (or recovering) server asks a peer for catch-up state.
+    ``applied_round`` is what the requester already has (-1 = nothing)."""
+    src: int
+    applied_round: int = -1
+
+    def __repr__(self) -> str:
+        return f"snapreq({self.src}@{self.applied_round})"
+
+
+@dataclass(frozen=True)
+class SnapshotChunk:
+    """One slice of a peer's service snapshot, captured at an eon flip.
+
+    ``(eon, epoch, round)`` is the install point: the first round of the
+    new eon, so the receiver can enter the overlay in lockstep.  ``data``
+    is an opaque tuple of state records (wire-encodable values); chunks
+    arrive FIFO-ordered per channel and are reassembled by ``chunk`` /
+    ``nchunks``."""
+    src: int
+    eon: int
+    epoch: int
+    round: int
+    members: Tuple[int, ...]
+    chunk: int
+    nchunks: int
+    data: Any = ()
+
+    def __repr__(self) -> str:
+        return f"snap({self.src}:{self.chunk + 1}/{self.nchunks}@e{self.eon})"
+
+
+@dataclass(frozen=True)
+class LogSuffix:
+    """The delivered-round log entries after the snapshot round: tuples of
+    ``(round, epoch, digest, commands)`` exactly as logged, so the receiver
+    replays them through its state machine to the peer's digest."""
+    src: int
+    from_round: int
+    entries: Tuple[Any, ...] = ()
+
+    def __repr__(self) -> str:
+        return f"logsuffix({self.src}>{self.from_round}:{len(self.entries)})"

@@ -57,6 +57,8 @@ class Transition(enum.Enum):
     T_NFR = ">r"    # [e,r]>  -> [[e+1,r]]
     T_RR = "rr"     # [[e,r]] -> [[e+1,r+1]]
     T_SK = "sk"     # [[e,r]] -> [[e,r+1]]
+    T_VR = "vr"     # [e,r]   -> [[e+1,r]]  (voluntary: scheduled eon change;
+                    #                        uniform mode rolls to [[e+1,r-1]])
 
 
 class AllConcurServer:
@@ -76,6 +78,7 @@ class AllConcurServer:
         uniform: bool = False,
         f: int = 0,
         primary_partition: bool = False,
+        joining: bool = False,
     ):
         self.sid = sid
         self.members: List[int] = sorted(members)
@@ -118,9 +121,23 @@ class AllConcurServer:
         self._marker_sent: Set[Tuple[int, int]] = set()
         self._n0 = len(self.members)     # initial n (majority base)
 
-        # eons (§III-I)
-        self._pending_gr_update: Optional[Callable[[Sequence[int]], Digraph]] = None
-        self._next_eon_buffer: List[Message] = []
+        # eons (§III-I): pending update = (G_R builder, membership delta)
+        self._pending_gr_update: Optional[
+            Tuple[Callable[[Sequence[int]], Digraph],
+                  List[Tuple[str, int]]]] = None
+        self._next_eon_buffer: List[Any] = []
+        self._eon_replay: List[Any] = []
+
+        # application hooks: non-protocol messages (catch-up traffic) are
+        # handed to ``app_handler``; ``on_eon_change(eon, members, epoch,
+        # round)`` fires at every eon flip with the new eon's install point
+        self.app_handler: Optional[Callable[[Any], None]] = None
+        self.on_eon_change: Optional[
+            Callable[[int, List[int], int, int], None]] = None
+
+        # a joining server buffers protocol traffic until install_state()
+        self.joining = joining
+        self._join_buffer: List[Any] = []
 
         self.halted = False              # not in surviving partition / removed
 
@@ -200,19 +217,37 @@ class AllConcurServer:
     def on_message(self, msg: Any) -> None:
         if self.halted:
             return
-        if isinstance(msg, Message):
-            if msg.kind == MsgKind.BCAST:
-                self._handle_bcast(msg)
-            elif msg.kind == MsgKind.RBCAST:
-                self._handle_rbcast(msg)
-        elif isinstance(msg, FailNotification):
-            self._handle_fail(msg.target, msg.owner, eon=msg.eon)
-        elif isinstance(msg, PartitionMarker):
-            self._handle_marker(msg)
+        if isinstance(msg, (Message, FailNotification, PartitionMarker)):
+            if self.joining:
+                # not yet a participant: hold protocol traffic until
+                # install_state() replays it in arrival order
+                self._join_buffer.append(msg)
+                return
+            if isinstance(msg, Message):
+                if msg.kind == MsgKind.BCAST:
+                    self._handle_bcast(msg)
+                elif msg.kind == MsgKind.RBCAST:
+                    self._handle_rbcast(msg)
+            elif isinstance(msg, FailNotification):
+                self._handle_fail(msg.target, msg.owner, eon=msg.eon)
+            else:
+                self._handle_marker(msg)
+        elif self.app_handler is not None:
+            # catch-up traffic (SnapshotRequest/SnapshotChunk/LogSuffix, ...)
+            # is processed even while joining — it is what ends the join
+            self.app_handler(msg)
 
     def on_failure_detected(self, target: int) -> None:
         """Local FD reports a failed predecessor (owner = self)."""
+        if self.joining:
+            return
         self._handle_fail(target, self.sid, eon=self.eon)
+
+    def send_app(self, dst: int, msg: Any) -> None:
+        """Queue an application (non-protocol) message on the same transport
+        the protocol uses, so catch-up traffic shares channel FIFO order and
+        byte accounting with everything else."""
+        self._send(dst, msg)
 
     # ------------------------------------------------- Algorithm 2 (BCAST)
     def _handle_bcast(self, m: Message) -> None:
@@ -235,6 +270,8 @@ class AllConcurServer:
         # e == epoch, r == round -> we must be in an unreliable round (III.2)
         if self.rtype != RoundType.UNRELIABLE:
             return  # defensive (cannot occur among non-faulty under P)
+        if m.src not in self.ov_u:
+            return  # straggler from a server no longer in the membership
         self._broadcast_u(m)          # (1) send further via G_U
         self._maybe_abroadcast()      # (2) A-broadcast own message
         self._try_to_complete()       # (3) try to complete round
@@ -264,8 +301,20 @@ class AllConcurServer:
             return  # outdated
         if e > self.epoch:
             # e == epoch+1 and r == round+1 (Prop III.4): forward now,
-            # deliver later in [[e+1, r+1]]   (#6)
-            if e != self.epoch + 1 or r != self.round + 1:
+            # deliver later in [[e+1, r+1]]   (#6).  A *voluntary*
+            # transitional round (T_VR, §III-I) reruns the current round, so
+            # its premature messages arrive as (epoch+1, round) — or, in
+            # uniform mode, (epoch+1, round-1), the stability-pending round
+            # being rerun — at servers still completing it; those are not
+            # preceded by a failure notification (nothing failed), so they
+            # must be postponed here rather than dropped
+            premature_next = (e == self.epoch + 1 and r == self.round + 1)
+            premature_voluntary = (
+                e == self.epoch + 1
+                and self.rtype == RoundType.UNRELIABLE
+                and (r == self.round
+                     or (self.uniform and r == self.round - 1)))
+            if not (premature_next or premature_voluntary):
                 return
             if m.src in self.M_next and self.M_next[m.src].uid == m.uid:
                 return  # duplicate copy via another G_R path: already forwarded
@@ -293,6 +342,8 @@ class AllConcurServer:
             self._maybe_abroadcast()
             # fall through: re-handle m in the new current state (#8)
         # ---- current state [[e, r]] (#8) -----------------------------------
+        if m.src not in self.g_r:
+            return  # straggler from a server no longer in the membership
         self._broadcast_r(m)          # (1) send further via G_R (+track stop)
         self._maybe_abroadcast()      # (2) A-broadcast own message
         self._try_to_complete()       # (3) try to complete round
@@ -302,7 +353,13 @@ class AllConcurServer:
         if self.mode == Mode.UNRELIABLE_ONLY:
             return  # AllGather has no fault tolerance
         if eon != self.eon:
-            return  # eon-specific notifications (§III-I)
+            # eon-specific notifications (§III-I): stale eons are dropped;
+            # future eons are buffered — a server that has not flipped yet
+            # must not lose the only copies of a new-eon failure flood
+            if eon > self.eon:
+                self._next_eon_buffer.append(
+                    FailNotification(target, owner, eon=eon))
+            return
         if target not in self.g_r or owner not in self.g_r:
             return  # invalid notification
         if (target, owner) in self._fset:
@@ -311,7 +368,14 @@ class AllConcurServer:
         for q in self.g_r.successors(self.sid):   # (1) send further via G_R
             self._send(q, fn)
         if self.rtype == RoundType.UNRELIABLE:
-            # rollback to latest A-delivered round; rerun successor reliably
+            # rollback to latest A-delivered round; rerun successor reliably.
+            # Postponed *voluntary* transitional messages (T_VR, §III-I) are
+            # not preceded by a failure notification, so discarding them here
+            # could lose their only copies — re-handle them after the
+            # rollback (they resolve via the #6/#7 postpone machinery).
+            self._eon_replay.extend(
+                pm for pm in self.M_next.values()
+                if pm.kind == MsgKind.RBCAST)
             self.M = {}
             self.M_next = {}
             if self._uniform_pending is not None:
@@ -374,6 +438,11 @@ class AllConcurServer:
             elif self.M_prev:
                 self._adeliver_round(self.epoch, self.round - 1,
                                      RoundType.UNRELIABLE, self.M_prev)
+            if self._pending_gr_update is not None:
+                # an eon change was scheduled (possibly by the delivery
+                # callback just above): force the transitional reliable round
+                self._voluntary_reliable()
+                return
             self.M_prev = self.M
             self.round += 1
             self.first_unreliable = False
@@ -390,6 +459,51 @@ class AllConcurServer:
             self._check_uniform_stability()
         self._try_to_complete()
 
+    def _voluntary_reliable(self) -> None:
+        """§III-I: a scheduled eon change needs a completed reliable round to
+        act as the transitional round.  Called at completion of unreliable
+        round [e, r] (after delivering round r-1): transition
+        [e, r] -> [[e+1, r]] (T_VR) — the just-completed round is *rerun*
+        reliably, its unreliable messages discarded.  This is bit-for-bit
+        the state a failure rollback would produce had a notification
+        arrived right after completion (T_UR lands on the same [[e+1, r]]
+        when M_prev holds round r), so a failure racing the eon change is
+        reconciled by the existing rollback/skip machinery instead of
+        fighting it.  Requests of the discarded round simply ride in the
+        rerun payload (at-least-once batching upstream), so clients lose
+        nothing.
+
+        In uniform mode the stability-pending round (r-1) is rolled back
+        and rerun instead — it was never delivered unreliably anywhere, so
+        uniformity survives the flip."""
+        if self.uniform and self._uniform_pending is not None:
+            _, prnd, pmsgs = self._uniform_pending
+            self._uniform_pending = None
+            self.M_prev = pmsgs
+            self.round = prnd
+        else:
+            self.M_prev = dict(self.M)
+        self.epoch += 1
+        self.rtype = RoundType.RELIABLE
+        self.first_unreliable = False
+        self.transitions.append((Transition.T_VR, self.epoch, self.round))
+        self.tracking.reset(self.g_r)
+        # premature copies of this very transitional round (peers that
+        # completed — and flipped — first) were postponed into M_next
+        keep = {pm.src: pm for pm in self.M_next.values()
+                if pm.kind == MsgKind.RBCAST and pm.src in self.g_r
+                and (pm.epoch, pm.round) == (self.epoch, self.round)}
+        self._eon_replay.extend(
+            pm for pm in self.M_next.values()
+            if pm.kind == MsgKind.RBCAST and pm.src not in keep)
+        self.M = keep
+        self.M_next = {}
+        for pm in keep.values():
+            self.tracking.stop_tracking(pm.src)
+        self.tracking.apply_notifications([], list(self.F))
+        self._maybe_abroadcast()
+        self._try_to_complete()
+
     def _check_uniform_stability(self) -> None:
         if self._uniform_pending is None:
             return
@@ -399,6 +513,17 @@ class AllConcurServer:
             self._uniform_pending = None
 
     def _try_complete_reliable(self) -> None:
+        self._try_complete_reliable_inner()
+        # messages buffered for the new eon (premature RBCASTs, failure
+        # notifications) are replayed only after the post-flip transition has
+        # fully executed, in arrival order — channel FIFO guarantees each
+        # notification still precedes the rollback messages it explains
+        while self._eon_replay and not self.halted:
+            m = self._eon_replay.pop(0)
+            if getattr(m, "eon", 0) == self.eon:
+                self.on_message(m)
+
+    def _try_complete_reliable_inner(self) -> None:
         if not self.tracking.all_empty():
             return
         if self.primary_partition and not self._partition_commit_ready():
@@ -512,23 +637,98 @@ class AllConcurServer:
             self._try_to_complete()
 
     # --------------------------------------------------------- eons (§III-I)
-    def schedule_gr_update(self, builder: Callable[[Sequence[int]], Digraph]) -> None:
+    def schedule_gr_update(
+        self,
+        builder: Callable[[Sequence[int]], Digraph],
+        *,
+        add: Sequence[int] = (),
+        remove: Sequence[int] = (),
+    ) -> None:
         """Schedule an eon change: the next completed reliable round acts as
-        the transitional round; afterwards G_R is rebuilt by ``builder`` over
-        the surviving membership and the eon number increments."""
-        self._pending_gr_update = builder
+        the transitional round; afterwards the membership delta is applied,
+        G_R is rebuilt by ``builder`` over the new membership (G_U follows),
+        and the eon number increments.  In DUAL mode with no failure in
+        flight, the transitional round is forced voluntarily (T_VR) at the
+        next unreliable round completion.  Repeated calls before the flip
+        merge their deltas (the latest builder wins)."""
+        delta = ([("add", int(s)) for s in add]
+                 + [("remove", int(s)) for s in remove])
+        if self._pending_gr_update is None:
+            self._pending_gr_update = (builder, delta)
+        else:
+            _, old_delta = self._pending_gr_update
+            self._pending_gr_update = (builder, old_delta + delta)
 
     def _apply_eon_update(self) -> None:
-        builder = self._pending_gr_update
+        builder, delta = self._pending_gr_update
         self._pending_gr_update = None
-        self.g_r = builder(self.members)
+        members = list(self.members)
+        for action, s in delta:
+            if action == "add" and s not in members:
+                members.append(s)
+            elif action == "remove" and s in members:
+                members.remove(s)
+        self.members = sorted(members)
         self.eon += 1
+        if self.sid not in self.members:
+            self.halted = True   # gracefully removed by an agreed command
+            return
+        self.g_r = builder(self.members)
+        self.ov_u = self.ov_u.rebuild(self.members)
+        self._n0 = len(self.members)
         # failure notifications are eon-specific: drop all (re-detection will
         # re-issue any still-relevant ones on the new digraph)
         self.F = []
         self._fset = set()
         self.tracking.reset(self.g_r)
-        buf, self._next_eon_buffer = list(self._next_eon_buffer), []
+        if self.on_eon_change is not None:
+            # install point for joiners: F was just cleared, so the
+            # post-transition state is deterministic — DUAL takes T_R|>
+            # (same epoch, round+1, unreliable), RELIABLE_ONLY takes T_RR
+            if self.mode == Mode.RELIABLE_ONLY:
+                self.on_eon_change(self.eon, list(self.members),
+                                   self.epoch + 1, self.round + 1)
+            else:
+                self.on_eon_change(self.eon, list(self.members),
+                                   self.epoch, self.round + 1)
+        # hand buffered new-eon traffic to the post-transition replay loop
+        self._eon_replay.extend(self._next_eon_buffer)
+        self._next_eon_buffer = []
+
+    def install_state(
+        self,
+        *,
+        members: Sequence[int],
+        g_r: Digraph,
+        eon: int,
+        epoch: int,
+        round: int,
+    ) -> None:
+        """End a join: adopt the peers' agreed post-flip state and start
+        participating at the first round of the new eon.  Protocol messages
+        buffered while joining are replayed in arrival order."""
+        self.members = sorted(members)
+        self.g_r = g_r
+        self.ov_u = self.ov_u.rebuild(self.members)
+        self._n0 = len(self.members)
+        self.eon = eon
+        self.epoch = epoch
+        self.round = round
+        if self.mode == Mode.RELIABLE_ONLY:
+            self.rtype = RoundType.RELIABLE
+            self.first_unreliable = False
+        else:
+            self.rtype = RoundType.UNRELIABLE
+            self.first_unreliable = True
+        self.M = {}
+        self.M_prev = {}
+        self.M_next = {}
+        self._uniform_pending = None
+        self.F = []
+        self._fset = set()
+        self.tracking.reset(self.g_r)
+        self.joining = False
+        self._maybe_abroadcast()
+        buf, self._join_buffer = self._join_buffer, []
         for m in buf:
-            if m.eon == self.eon:
-                self.on_message(m)
+            self.on_message(m)

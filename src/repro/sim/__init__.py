@@ -1,10 +1,12 @@
 from .network import FatTreeSDC, MultiDC, NetworkModel, UniformNetwork, make_network
 from .runner import (Metrics, Simulation, SMRMetrics, build_simulation,
-                     build_smr_simulation, wire_size)
+                     build_smr_simulation, schedule_membership_change,
+                     wire_size)
 from .baselines import LCRServer, LibpaxosNode
 
 __all__ = [
     "FatTreeSDC", "LCRServer", "LibpaxosNode", "Metrics", "MultiDC",
     "NetworkModel", "SMRMetrics", "Simulation", "UniformNetwork",
-    "build_simulation", "build_smr_simulation", "make_network", "wire_size",
+    "build_simulation", "build_smr_simulation", "make_network",
+    "schedule_membership_change", "wire_size",
 ]

@@ -123,7 +123,14 @@ class Simulation:
         self._seq = itertools.count()
         self.tx_free: Dict[int, float] = {sid: 0.0 for sid in servers}
         self.crashed: Set[int] = set()
+        self.crash_hooks: List[Callable[[int, float], None]] = []
         self.events_processed = 0
+
+    def register_server(self, sid: int, srv: Any) -> None:
+        """Add a dynamically joining server mid-run (eon membership)."""
+        self.servers[sid] = srv
+        self.tx_free.setdefault(sid, 0.0)
+        self.crashed.discard(sid)
 
     def post(self, t: float, kind: str, data: Any) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, data))
@@ -180,20 +187,29 @@ class Simulation:
                     continue
                 self.drain(sid, limit=partial)
                 self.crashed.add(sid)
-                srv = self.servers[sid]
-                g_r = getattr(srv, "g_r", None)
-                if g_r is not None and sid in g_r:
+                # perfect FD: detection by every alive server whose *own*
+                # current G_R view has the edge sid->det (views can differ
+                # transiently across an eon flip)
+                dets = {det for det, dsrv in self.servers.items()
+                        if det not in self.crashed
+                        and not getattr(dsrv, "halted", False)
+                        and not getattr(dsrv, "joining", False)
+                        and getattr(dsrv, "g_r", None) is not None
+                        and sid in dsrv.g_r
+                        and det in dsrv.g_r.successors(sid)}
+                if dets:
                     # heartbeats share the FIFO channel: detection can only
                     # fire after everything sid sent is delivered
                     last_inflight = max(
                         [tt for (tt, _, kk, dd) in self._heap
-                         if kk == "recv" and dd[0] in g_r.successors(sid)]
+                         if kk == "recv" and dd[0] in dets]
                         or [t])
-                    for det in g_r.successors(sid):
-                        if det not in self.crashed:
-                            self.post(max(t + self.fd_timeout,
-                                          last_inflight + 1e-9),
-                                      "fd", (det, sid))
+                    for det in dets:
+                        self.post(max(t + self.fd_timeout,
+                                      last_inflight + 1e-9),
+                                  "fd", (det, sid))
+                for hook in self.crash_hooks:
+                    hook(sid, t)
             elif kind == "fd":
                 det, target = data
                 if det in self.crashed:
@@ -314,6 +330,7 @@ class SMRMetrics:
         self.latencies: List[float] = []
         self.read_latencies: List[float] = []
         self.write_latencies: List[float] = []
+        self.ack_log: List[Tuple[float, float]] = []   # (t_ack, latency)
         self.acked = 0
         self.first_ack = float("inf")
         self.last_ack = 0.0
@@ -328,9 +345,24 @@ class SMRMetrics:
         lat = t - t0
         self.latencies.append(lat)
         (self.read_latencies if is_read else self.write_latencies).append(lat)
+        self.ack_log.append((t, lat))
         self.acked += 1
         self.first_ack = min(self.first_ack, t)
         self.last_ack = max(self.last_ack, t)
+
+    # ---- disruption analysis (eon flips, failovers) ------------------------
+    def latencies_in(self, t0: float, t1: float) -> List[float]:
+        """Latencies of requests acked inside [t0, t1]."""
+        return [lat for (t, lat) in self.ack_log if t0 <= t <= t1]
+
+    def max_ack_gap(self, t0: float = 0.0,
+                    t1: float = float("inf")) -> float:
+        """Longest gap between consecutive acks in the window — the
+        client-perceived service interruption across a disruption."""
+        ts = sorted(t for (t, _lat) in self.ack_log if t0 <= t <= t1)
+        if len(ts) < 2:
+            return float("nan")
+        return max(b - a for a, b in zip(ts, ts[1:]))
 
     @staticmethod
     def _pct(xs: List[float], p: float) -> float:
@@ -366,6 +398,9 @@ def build_smr_simulation(
     network: str = "sdc",
     d: Optional[int] = None,
     fd_timeout: float = 10e-3,
+    membership: bool = True,
+    client_failover: bool = False,
+    failover_delay: Optional[float] = None,
 ) -> Tuple[Simulation, SMRMetrics, Dict[int, Any]]:
     """Timed end-to-end SMR deployment: AllConcur+ servers (mode from
     ``algo`` in {allconcur+, allconcur, allgather}) each hosting an
@@ -373,7 +408,19 @@ def build_smr_simulation(
     co-located round-robin.  Closed-loop clients submit their next request
     on ack; open-loop clients follow their exponential arrival process.
     Returns ``(sim, smr_metrics, services)`` — crash injection mid-workload
-    goes through ``sim.schedule_crash`` as usual."""
+    goes through ``sim.schedule_crash`` as usual.
+
+    ``membership=True`` attaches a
+    :class:`~repro.smr.membership.MembershipManager` per replica (so
+    ``add_server``/``remove_server`` commands flip eons; see
+    :func:`schedule_membership_change`) and records every flip in
+    ``sim.eon_flips`` as ``(time, sid, eon)``.
+
+    ``client_failover=True`` re-homes the clients of a crashed server to a
+    live replica ``failover_delay`` (default: the FD timeout) after the
+    crash, resubmitting their in-flight request — the ``(client_id, seq)``
+    exactly-once dedup makes the retry safe, and the tail latency through
+    the failover lands in the returned metrics."""
     from ..smr.service import SMRService
     from ..smr.workload import WorkloadConfig, WorkloadGenerator
 
@@ -391,6 +438,7 @@ def build_smr_simulation(
     home: Dict[int, int] = {c.client_id: sid
                             for sid, cs in assignment.items() for c in cs}
     is_read_req: Dict[Tuple[int, int], bool] = {}
+    inflight: Dict[int, Any] = {}      # client_id -> outstanding request
 
     def mk_local_ack(client, uid):
         def fire():
@@ -405,7 +453,9 @@ def build_smr_simulation(
         sid = home[client.client_id]
         sim = sim_holder[0]
         if sid in sim.crashed:
-            return                     # co-located client dies with its server
+            # without failover the co-located client dies with its server;
+            # with failover it goes dormant until re-homed
+            return
         if client.issued >= requests_per_client:
             return
         req = client.next_request()
@@ -423,12 +473,18 @@ def build_smr_simulation(
             # staleness bound violated: escalate through the log (the req is
             # already a plain "get", so it orders like a linearizable read)
         is_read_req[req.uid] = is_read
+        inflight[client.client_id] = req
         services[sid].submit(req)
 
     def mk_ack(sid: int):
         def on_ack(req, result, rnd):
             sim = sim_holder[0]
+            if req.client_id not in home:
+                return   # not a workload session (e.g. the membership admin)
             client = gen.client(req.client_id)
+            cur = inflight.get(req.client_id)
+            if cur is not None and cur.uid == req.uid:
+                del inflight[req.client_id]
             client.acked += 1
             smr.on_ack(req.uid, sim.now, is_read_req.pop(req.uid, False))
             if cfg.arrival == "closed":
@@ -440,6 +496,9 @@ def build_smr_simulation(
                                    compact_every=compact_every,
                                    stale_bound=stale_bound,
                                    on_ack=mk_ack(sid))
+        # seed the replicated config so admin-command results (and their
+        # digest coverage) match across harnesses and catch-up replays
+        services[sid].sm.bootstrap_config(members)
 
     servers: Dict[int, Any] = {}
     dd = d if d is not None else resilience_degree(n)
@@ -457,6 +516,82 @@ def build_smr_simulation(
     sim = Simulation(servers, net, Metrics(n=n, batch=batch_max),
                      fd_timeout=fd_timeout)
     sim_holder.append(sim)
+
+    # ---- client failover: re-home the clients of a dead/removed server ----
+    fo_delay = failover_delay if failover_delay is not None else fd_timeout
+    rehomed: set = set()
+
+    def rehome_clients(dead_sid: int, at: float) -> None:
+        if not client_failover or dead_sid in rehomed:
+            return
+        rehomed.add(dead_sid)
+        simn = sim_holder[0]
+
+        def failover():
+            alive = sorted(
+                s for s, srv in simn.servers.items()
+                if s in services and s not in simn.crashed
+                and not getattr(srv, "halted", False)
+                and not getattr(srv, "joining", False))
+            if not alive:
+                return
+            moved = sorted(cid for cid, h in home.items() if h == dead_sid)
+            for i, cid in enumerate(moved):
+                new_home = alive[(cid + i) % len(alive)]
+                home[cid] = new_home
+                req = inflight.get(cid)
+                if req is not None:
+                    # retry the outstanding request at the new home —
+                    # exactly-once dedup absorbs it if it committed
+                    # through the old home's last rounds
+                    services[new_home].submit(req)
+                elif cfg.arrival == "closed":
+                    submit(gen.client(cid))
+        simn.post(at, "call", failover)
+
+    # ---- dynamic membership: managers, flip log, per-eon FD re-arm --------
+    def wrap_eon_cb(srv):
+        prev = srv.on_eon_change
+
+        def cb(eon, mems, epoch, rnd):
+            if prev is not None:
+                prev(eon, mems, epoch, rnd)
+            simn = sim_holder[0]
+            simn.eon_flips.append((simn.now, srv.sid, eon))
+            # failure notifications are eon-specific (§III-I): once this
+            # server's view flips, re-announce still-crashed predecessors
+            # on the new digraph (a real FD keeps suspecting them)
+            for c in simn.crashed:
+                if c in srv.g_r and srv.sid in srv.g_r.successors(c):
+                    simn.post(simn.now, "fd", (srv.sid, c))
+            # clients of a gracefully removed (halted) server reconnect
+            # immediately — no failure detection involved
+            for s, other in simn.servers.items():
+                if getattr(other, "halted", False):
+                    rehome_clients(s, simn.now)
+        srv.on_eon_change = cb
+
+    sim.eon_flips = []
+    sim.smr_managers = {}
+    if membership:
+        from ..smr.membership import MembershipManager
+        for sid in members:
+            sim.smr_managers[sid] = MembershipManager(
+                services[sid], servers[sid], d=dd)
+            wrap_eon_cb(servers[sid])
+    sim.smr_wrap_eon_cb = wrap_eon_cb
+
+    def make_service(sid: int) -> SMRService:
+        svc = SMRService(sid, batch_max=batch_max,
+                         compact_every=compact_every,
+                         stale_bound=stale_bound, on_ack=mk_ack(sid))
+        services[sid] = svc
+        return svc
+    sim.smr_make_service = make_service
+
+    if client_failover:
+        sim.crash_hooks.append(
+            lambda sid, t: rehome_clients(sid, t + fo_delay))
 
     # arrival processes: closed loop primes one outstanding request per
     # client at t=0; open loop schedules the whole arrival chain
@@ -478,3 +613,82 @@ def build_smr_simulation(
     sim.workload = gen              # inspection handles for benches/tests
     sim.client_home = home
     return sim, smr, services
+
+
+def schedule_membership_change(
+    sim: Simulation,
+    services: Dict[int, Any],
+    t: float,
+    *,
+    add: Optional[int] = None,
+    remove: Optional[int] = None,
+    via: int = 0,
+    seeds: Tuple[int, ...] = (),
+    admin: Optional[Any] = None,
+) -> Dict[str, Any]:
+    """Post a ``membership_change`` timed event at ``t`` on an SMR
+    simulation built with ``membership=True``.
+
+    ``add=k`` boots a joining server ``k`` at ``t`` (buffering protocol
+    traffic, requesting catch-up from ``seeds`` — default: two live
+    replicas) and submits the ``add_server`` admin command through
+    ``services[via]``; ``remove=k`` submits the ``remove_server`` command.
+    The eon flips at the transitional reliable round; flip times land in
+    ``sim.eon_flips`` so client-perceived disruption can be measured around
+    them.  Returns a handle dict (``admin``, and after the event fires,
+    ``service``/``manager`` of an added server)."""
+    from ..core.digraph import Digraph
+    from ..core.overlay import make_overlay
+    from ..smr.membership import AdminClient, MembershipManager
+    from ..smr.service import SMRService
+
+    adm = admin if admin is not None else AdminClient()
+    handle: Dict[str, Any] = {"t": t, "admin": adm,
+                              "service": None, "manager": None}
+
+    def fire() -> None:
+        alive = sorted(
+            s for s, srv in sim.servers.items()
+            if s in services and s not in sim.crashed
+            and not getattr(srv, "halted", False)
+            and not getattr(srv, "joining", False))
+        if not alive:
+            return
+        target = via if via in alive else alive[0]
+        if add is not None:
+            ref = sim.servers[target]
+            mk = getattr(sim, "smr_make_service", None)
+            svc = mk(add) if mk is not None else SMRService(add)
+            srv = AllConcurServer(
+                add, [add],
+                overlay_u=make_overlay("binomial", [add]),
+                g_r=Digraph([add]),
+                mode=ref.mode,
+                payload_for=svc.payload_for,
+                on_deliver=svc.on_deliver,
+                f=ref.f,
+                joining=True,
+            )
+            svc.server = srv
+            # the joiner must rebuild the same G_R the established managers
+            # agree on, so it adopts their degree parameter
+            mgrs = getattr(sim, "smr_managers", {})
+            dd = (next(iter(mgrs.values())).d if mgrs
+                  else max(ref.g_r.degree(), 1))
+            mgr = MembershipManager(svc, srv, d=dd)
+            wrap = getattr(sim, "smr_wrap_eon_cb", None)
+            if wrap is not None:
+                wrap(srv)
+            sim.register_server(add, srv)
+            services[add] = svc
+            if mgrs is not None:
+                mgrs[add] = mgr
+            mgr.begin_join(list(seeds) if seeds else alive[:2])
+            sim.drain(add)
+            adm.add(services[target], add)
+            handle["service"], handle["manager"] = svc, mgr
+        if remove is not None:
+            adm.remove(services[target], remove)
+
+    sim.post(t, "call", fire)
+    return handle

@@ -27,14 +27,18 @@ machine's rolling digest: after any common applied round, every correct
 replica reports an identical digest.
 """
 from .log import DeliveredRoundLog, LogEntry
-from .service import ClientRequest, ReadResult, SMRService, build_smr_cluster
+from .membership import (ADMIN_CLIENT_ID, AdminClient, MembershipManager,
+                         add_smr_server)
+from .service import (ADMIN_OPS, ClientRequest, ReadResult, SMRService,
+                      build_smr_cluster)
 from .state_machine import KVStateMachine, Snapshot
 from .workload import (WorkloadClient, WorkloadConfig, WorkloadGenerator,
                        ZipfianGenerator)
 
 __all__ = [
-    "ClientRequest", "DeliveredRoundLog", "KVStateMachine", "LogEntry",
+    "ADMIN_CLIENT_ID", "ADMIN_OPS", "AdminClient", "ClientRequest",
+    "DeliveredRoundLog", "KVStateMachine", "LogEntry", "MembershipManager",
     "ReadResult", "SMRService", "Snapshot", "WorkloadClient",
     "WorkloadConfig", "WorkloadGenerator", "ZipfianGenerator",
-    "build_smr_cluster",
+    "add_smr_server", "build_smr_cluster",
 ]

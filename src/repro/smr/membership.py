@@ -1,0 +1,241 @@
+"""Dynamic membership: client-visible eon changes with snapshot catch-up.
+
+The paper's §III-I makes AllConcur+ reconfigurable by swapping the dual
+digraphs over a completed reliable round (an *eon* change).  This module
+exposes that mechanism as a first-class SMR operation:
+
+* an ``{"op": "add_server"|"remove_server", "server": s}`` admin command is
+  submitted like any write and travels the log; on delivery, *every*
+  replica's :class:`MembershipManager` schedules the same
+  ``schedule_gr_update`` on its co-located server, so the whole cluster
+  flips eons deterministically at the same transitional reliable round
+  (forced voluntarily — ``T_VR`` — when no failure is in flight);
+* a joining (or recovering) server boots with ``joining=True``, asks one or
+  more seed peers for state (:class:`~repro.core.messages.SnapshotRequest`),
+  and receives the peer's base snapshot + delivered-round-log suffix
+  (:class:`~repro.core.messages.SnapshotChunk` chunks +
+  :class:`~repro.core.messages.LogSuffix`) captured at the eon flip.  It
+  replays the suffix to the peer's digest (bit-identical or the install
+  fails), adopts the session tables for exactly-once dedup, and enters the
+  overlay at the first round of the new eon via
+  :meth:`~repro.core.server.AllConcurServer.install_state`.
+
+Peers that receive a ``SnapshotRequest`` before the requester is a member
+hold it and reply at the eon flip that admits it; the reply rides the same
+FIFO transport as protocol traffic, so the snapshot always precedes the
+peer's first new-eon round message on that channel.
+
+Reconfiguration requires reliable rounds, so it is supported in DUAL and
+RELIABLE_ONLY modes; UNRELIABLE_ONLY (AllGather) has no fault tolerance and
+admin commands are applied to the replicated config but trigger no overlay
+change.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.digraph import Digraph, gs_digraph
+from ..core.messages import LogSuffix, SnapshotChunk, SnapshotRequest
+from ..core.overlay import make_overlay
+from ..core.server import AllConcurServer, Mode
+from .service import ClientRequest, SMRService
+
+#: client id reserved for the membership admin session (far above any
+#: workload client id, so the (client_id, seq) dedup spaces never collide)
+ADMIN_CLIENT_ID = 1 << 30
+
+
+class AdminClient:
+    """A tiny admin session: issues add/remove commands with its own
+    monotonically increasing seq, so retries stay exactly-once like any
+    other client's."""
+
+    def __init__(self, client_id: int = ADMIN_CLIENT_ID):
+        self.client_id = client_id
+        self.seq = 0
+
+    def _request(self, op: str, server_id: int) -> ClientRequest:
+        req = ClientRequest(self.client_id, self.seq,
+                            {"op": op, "server": int(server_id)})
+        self.seq += 1
+        return req
+
+    def add(self, service: SMRService, server_id: int) -> bool:
+        return service.submit(self._request("add_server", server_id))
+
+    def remove(self, service: SMRService, server_id: int) -> bool:
+        return service.submit(self._request("remove_server", server_id))
+
+
+class MembershipManager:
+    """Per-replica glue between an :class:`SMRService` and its
+    :class:`AllConcurServer` for eon changes and catch-up."""
+
+    def __init__(self, service: SMRService, server: AllConcurServer, *,
+                 d: int = 3, chunk_records: int = 64):
+        self.service = service
+        self.server = server
+        self.d = d
+        self.chunk_records = max(chunk_records, 1)
+        self.installed = not server.joining
+        #: install point of the latest eon flip seen (or adopted at join):
+        #: (eon, members, epoch, round)
+        self.last_flip: Optional[Tuple[int, List[int], int, int]] = None
+        self._flip_applied_round = -1   # service.applied_round at that flip
+        self.flips: List[Tuple[int, Tuple[int, ...]]] = []
+        self._waiting_joiners: List[int] = []
+        self._assembly: Dict[int, Dict[str, Any]] = {}   # per replying peer
+        service.on_membership = self._on_admin
+        service.membership = self
+        server.app_handler = self._on_app_message
+        server.on_eon_change = self._on_eon_change
+
+    # ------------------------------------------------------------ gr builder
+    def gr_builder(self, members: Sequence[int]) -> Digraph:
+        """Deterministic G_R for a membership — every replica builds the
+        identical digraph for the new eon."""
+        members = sorted(members)
+        return gs_digraph(members, min(self.d, max(len(members) - 1, 1)))
+
+    # ------------------------------------------------- admin command delivery
+    def _on_admin(self, op: Any, rec: Any) -> None:
+        if self.server.mode == Mode.UNRELIABLE_ONLY:
+            return   # no reliable rounds to flip over (no fault tolerance)
+        s = int(op.get("server"))
+        if op.get("op") == "add_server":
+            self.server.schedule_gr_update(self.gr_builder, add=(s,))
+        else:
+            self.server.schedule_gr_update(self.gr_builder, remove=(s,))
+
+    # --------------------------------------------------------- peer (server)
+    def _on_eon_change(self, eon: int, members: List[int], epoch: int,
+                       rnd: int) -> None:
+        self.last_flip = (eon, list(members), epoch, rnd)
+        self._flip_applied_round = self.service.applied_round
+        self.flips.append((eon, tuple(members)))
+        waiting, self._waiting_joiners = self._waiting_joiners, []
+        for js in waiting:
+            if js in members:
+                self._send_catchup(js)
+            else:
+                self._waiting_joiners.append(js)
+
+    def _send_catchup(self, dst: int) -> None:
+        eon, members, epoch, rnd = self.last_flip
+        records, entries = self.service.export_catchup()
+        chunks = [records[i:i + self.chunk_records]
+                  for i in range(0, len(records), self.chunk_records)] or [()]
+        for i, chunk in enumerate(chunks):
+            self.server.send_app(dst, SnapshotChunk(
+                src=self.server.sid, eon=eon, epoch=epoch, round=rnd,
+                members=tuple(members), chunk=i, nchunks=len(chunks),
+                data=tuple(chunk)))
+        self.server.send_app(dst, LogSuffix(
+            src=self.server.sid, from_round=self.service.log.snapshot_round,
+            entries=tuple(entries)))
+
+    # -------------------------------------------------------- joiner (client)
+    def begin_join(self, seeds: Sequence[int]) -> None:
+        """Ask one or more established peers for catch-up state; the first
+        complete reply wins (extras are ignored once installed)."""
+        for s in seeds:
+            self.server.send_app(s, SnapshotRequest(
+                src=self.server.sid,
+                applied_round=self.service.applied_round))
+
+    def _on_app_message(self, msg: Any) -> None:
+        if isinstance(msg, SnapshotRequest):
+            # Reply immediately only while still *at* the flip that admitted
+            # the requester (no A-delivered progress since) — the race where
+            # the cluster flipped first and now stalls awaiting the joiner's
+            # round message, so exported state and install point coincide.
+            # A request from a stale member (e.g. an undetected crash
+            # re-joining under its old id mid-eon) must NOT get the current
+            # state stamped with an old install point; it stays queued until
+            # a flip re-admits it (operator remediation: remove + add).
+            at_flip = (self.last_flip is not None
+                       and msg.src in self.last_flip[1]
+                       and not self.server.joining
+                       and self.server.eon == self.last_flip[0]
+                       and self.service.applied_round
+                       == self._flip_applied_round)
+            if at_flip:
+                self._send_catchup(msg.src)
+            elif msg.src not in self._waiting_joiners:
+                self._waiting_joiners.append(msg.src)
+        elif isinstance(msg, SnapshotChunk):
+            if self.installed:
+                return
+            st = self._assembly.setdefault(msg.src, {"chunks": {},
+                                                     "entries": None})
+            st["chunks"][msg.chunk] = msg
+            self._maybe_install(msg.src)
+        elif isinstance(msg, LogSuffix):
+            if self.installed:
+                return
+            st = self._assembly.setdefault(msg.src, {"chunks": {},
+                                                     "entries": None})
+            st["entries"] = tuple(msg.entries)
+            self._maybe_install(msg.src)
+
+    def _maybe_install(self, src: int) -> None:
+        st = self._assembly.get(src)
+        if st is None or st["entries"] is None or not st["chunks"]:
+            return
+        nchunks = next(iter(st["chunks"].values())).nchunks
+        if len(st["chunks"]) < nchunks:
+            return
+        records: List[Any] = []
+        for i in range(nchunks):
+            records.extend(st["chunks"][i].data)
+        head = st["chunks"][0]
+        self.service.install_catchup(tuple(records), st["entries"])
+        self.server.install_state(
+            members=head.members, g_r=self.gr_builder(head.members),
+            eon=head.eon, epoch=head.epoch, round=head.round)
+        self.installed = True
+        self.last_flip = (head.eon, list(head.members), head.epoch,
+                          head.round)
+        self._flip_applied_round = self.service.applied_round
+        self.flips.append((head.eon, tuple(head.members)))
+        self._assembly.clear()
+
+
+# ---------------------------------------------------------------------------
+# cluster harness integration (schedule-randomized correctness)
+# ---------------------------------------------------------------------------
+
+def add_smr_server(cluster, services: Dict[int, SMRService], new_sid: int, *,
+                   seeds: Sequence[int], d: int = 3, batch_max: int = 64,
+                   compact_every: int = 64,
+                   stale_bound: Optional[int] = None,
+                   on_ack: Optional[Any] = None,
+                   overlay: str = "binomial") -> SMRService:
+    """Boot a joining SMR server into a running :class:`Cluster` and send
+    its catch-up requests.  The caller still has to get an ``add_server``
+    admin command committed (see :class:`AdminClient`) — the joiner installs
+    only at the eon flip that admits it."""
+    ref = next(s for sid, s in cluster.servers.items()
+               if sid not in cluster.crashed)
+    svc = SMRService(new_sid, batch_max=batch_max,
+                     compact_every=compact_every, stale_bound=stale_bound,
+                     on_ack=on_ack)
+    srv = AllConcurServer(
+        new_sid, [new_sid],
+        overlay_u=make_overlay(overlay, [new_sid]),
+        g_r=Digraph([new_sid]),
+        mode=ref.mode,
+        payload_for=svc.payload_for,
+        on_deliver=svc.on_deliver,
+        uniform=ref.uniform,
+        f=ref.f,
+        primary_partition=ref.primary_partition,
+        joining=True,
+    )
+    svc.server = srv
+    mgr = MembershipManager(svc, srv, d=d)
+    cluster.add_server(srv)
+    services[new_sid] = svc
+    mgr.begin_join(seeds)
+    cluster._drain(srv)
+    return svc

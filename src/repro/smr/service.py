@@ -34,7 +34,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 from ..core.cluster import Cluster
 from ..core.server import DeliveryRecord, Mode
 from .log import DeliveredRoundLog, LogEntry
-from .state_machine import KVStateMachine
+from .state_machine import KVStateMachine, Snapshot
 
 
 @dataclass(frozen=True)
@@ -51,6 +51,9 @@ class ClientRequest:
 
 
 KNOWN_OPS = frozenset({"put", "get", "del", "incr", "noop"})
+# membership commands travel the log like writes (§III-I via SMR)
+ADMIN_OPS = frozenset({"add_server", "remove_server"})
+VALID_OPS = KNOWN_OPS | ADMIN_OPS
 
 
 @dataclass(frozen=True)
@@ -88,6 +91,11 @@ class SMRService:
         self.last_result: Dict[int, Tuple[int, Any]] = {}
 
         self.server: Any = None       # optional backref for staleness bound
+        # membership hook: called once per applied admin command so the
+        # co-located server can schedule the agreed eon change (set by
+        # repro.smr.membership.MembershipManager)
+        self.on_membership: Optional[Callable[[Mapping[str, Any],
+                                               DeliveryRecord], None]] = None
         self.applied_round = -1       # highest A-delivered round applied
         self.highest_seen_round = -1  # freshest round heard of (staleness ref)
         self.applied_digests: Dict[int, str] = {}    # round -> digest after
@@ -101,7 +109,7 @@ class SMRService:
         it is a duplicate of an already-committed request — in which case
         the cached result is re-acked immediately (exactly-once under
         retry)."""
-        if req.op.get("op") not in KNOWN_OPS:
+        if req.op.get("op") not in VALID_OPS:
             return False              # reject before it can enter the log
         if self.applied_seq.get(req.client_id, -1) >= req.seq:
             seq, result = self.last_result.get(req.client_id, (req.seq, None))
@@ -153,8 +161,16 @@ class SMRService:
             for cid, seq, op in payload.get("reqs", ()):
                 if self.applied_seq.get(cid, -1) >= seq:
                     self.duplicates_dropped += 1
+                    # the command already committed (e.g. the client failed
+                    # over and its retry won through another replica, or a
+                    # later seq superseded it): clear it from our pending
+                    # queue and re-ack the cached result instead of letting
+                    # it ride payloads forever
+                    last = self.last_result.get(cid)
+                    cached = last[1] if last and last[0] == seq else None
+                    self._ack(cid, seq, op, cached, rec.round)
                     continue
-                if op.get("op") not in KNOWN_OPS:
+                if op.get("op") not in VALID_OPS:
                     # a faulty peer batched garbage: skip it *deterministically*
                     # (every replica sees the same payload) so one bad request
                     # cannot poison the apply loop cluster-wide
@@ -178,6 +194,10 @@ class SMRService:
                 self.applied_seq[cid] = seq
                 self.last_result[cid] = (seq, result)
                 commands.append((cid, seq, op))
+                if op.get("op") in ADMIN_OPS and self.on_membership is not None:
+                    # every replica sees the same command in the same round,
+                    # so every replica schedules the same eon change here
+                    self.on_membership(op, rec)
                 self._ack(cid, seq, op, result, rec.round)
         self.applied_round = rec.round
         self.applied_digests[rec.round] = self.sm.digest()
@@ -209,6 +229,90 @@ class SMRService:
     def digest_at(self, rnd: int) -> Optional[str]:
         return self.applied_digests.get(rnd)
 
+    # ------------------------------------------------------ catch-up transfer
+    def export_catchup(self) -> Tuple[Tuple[Any, ...], Tuple[Any, ...]]:
+        """Flatten this replica's state for a joining/recovering peer:
+        ``(records, entries)`` where records is wire-encodable flat state
+        (meta + base-snapshot kv + session table) and entries is the live
+        delivered-round-log suffix after the base snapshot.  Restoring the
+        snapshot and replaying the suffix reproduces the current digest."""
+        snap = self.log.snapshot
+        meta = {
+            "has_snapshot": snap is not None,
+            "snap_version": snap.version if snap else 0,
+            "snap_digest": snap.digest if snap else "",
+            "snap_config": tuple(snap.config) if snap else (),
+            "init_config": tuple(self.sm.initial_config),
+            "snapshot_round": self.log.snapshot_round,
+            "applied_round": self.applied_round,
+            "digest": self.sm.digest(),
+        }
+        records: List[Any] = [("meta", meta)]
+        if snap is not None:
+            kver = dict(snap.versions)
+            for key, value in snap.data:
+                records.append(("kv", key, value, kver.get(key, 0)))
+        for cid, seq in sorted(self.applied_seq.items()):
+            lseq, lres = self.last_result.get(cid, (seq, None))
+            records.append(("session", cid, seq, lseq, lres))
+        entries = tuple((e.round, e.epoch, e.digest, e.commands)
+                        for e in self.log.entries)
+        return tuple(records), entries
+
+    def install_catchup(self, records: Tuple[Any, ...],
+                        entries: Tuple[Any, ...]) -> str:
+        """Rebuild state from a peer's export: restore the base snapshot,
+        replay the log suffix through the state machine (continuing the
+        digest chain), then adopt the session tables.  Returns the resulting
+        digest; raises ``ValueError`` if it does not match the peer's."""
+        meta = None
+        kv: List[Tuple[Any, Any, int]] = []
+        sessions: List[Tuple[int, int, int, Any]] = []
+        for rec in records:
+            tag = rec[0]
+            if tag == "meta":
+                meta = rec[1]
+            elif tag == "kv":
+                kv.append((rec[1], rec[2], rec[3]))
+            elif tag == "session":
+                sessions.append((rec[1], rec[2], rec[3], rec[4]))
+        if meta is None:
+            raise ValueError("catch-up records carry no meta record")
+        if meta["has_snapshot"]:
+            snap = Snapshot(
+                version=meta["snap_version"], digest=meta["snap_digest"],
+                data=tuple((k, v) for k, v, _ in kv),
+                versions=tuple((k, kv_ver) for k, _, kv_ver in kv),
+                config=tuple(meta["snap_config"]),
+            )
+            self.sm = KVStateMachine.from_snapshot(snap)
+        else:
+            snap = None
+            self.sm = KVStateMachine()
+            self.sm.bootstrap_config(meta.get("init_config", ()))
+        self.sm.initial_config = tuple(meta.get("init_config", ()))
+        self.log = DeliveredRoundLog(compact_every=self.log.compact_every)
+        self.log.snapshot = snap
+        self.log.snapshot_round = meta["snapshot_round"]
+        for rnd, epoch, digest, commands in entries:
+            for _cid, _seq, op in commands:
+                self.sm.apply(op)
+            self.log.entries.append(LogEntry(round=rnd, epoch=epoch,
+                                             digest=digest,
+                                             commands=tuple(commands)))
+        if self.sm.digest() != meta["digest"]:
+            raise ValueError(
+                f"catch-up replay digest {self.sm.digest()} != peer digest "
+                f"{meta['digest']}")
+        self.applied_seq = {cid: seq for cid, seq, _ls, _lr in sessions}
+        self.last_result = {cid: (lseq, lres)
+                            for cid, _seq, lseq, lres in sessions}
+        self.applied_round = meta["applied_round"]
+        self.highest_seen_round = max(self.highest_seen_round,
+                                      self.applied_round)
+        self.applied_digests[self.applied_round] = self.sm.digest()
+        return self.sm.digest()
+
 
 # ---------------------------------------------------------------------------
 # cluster integration: schedule-randomized correctness harness
@@ -224,10 +328,17 @@ def build_smr_cluster(
     compact_every: int = 64,
     stale_bound: Optional[int] = None,
     on_ack: Optional[Callable[[int, ClientRequest, Any, int], None]] = None,
+    membership: bool = True,
     **cluster_kwargs: Any,
 ) -> Tuple[Cluster, Dict[int, SMRService]]:
     """A :class:`Cluster` whose servers run the SMR service: payloads come
-    from each service's pending batch, deliveries are applied to it."""
+    from each service's pending batch, deliveries are applied to it.
+
+    ``membership=True`` (default) attaches a
+    :class:`~repro.smr.membership.MembershipManager` to every service
+    (available as ``service.membership``) so ``add_server`` /
+    ``remove_server`` commands delivered through the log trigger the agreed
+    eon change and serve catch-up snapshots to joiners."""
     services: Dict[int, SMRService] = {
         sid: SMRService(sid, batch_max=batch_max, compact_every=compact_every,
                         stale_bound=stale_bound,
@@ -244,4 +355,9 @@ def build_smr_cluster(
     )
     for sid, svc in services.items():
         svc.server = cluster.servers[sid]
+        svc.sm.bootstrap_config(range(n))
+    if membership:
+        from .membership import MembershipManager
+        for sid, svc in services.items():
+            MembershipManager(svc, cluster.servers[sid], d=d)
     return cluster, services

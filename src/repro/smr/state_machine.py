@@ -14,6 +14,13 @@ Supported ops (plain dicts so payloads stay picklable/serializable):
     {"op": "del",  "key": k}               -> deleted value (or None)
     {"op": "incr", "key": k, "delta": d}   -> new counter value
     {"op": "noop"}                         -> None
+
+Membership is part of the replicated state (the Raft-style "configuration
+as a logged operation" discipline): admin commands travel the log like
+writes, are covered by the rolling digest, and replay deterministically —
+
+    {"op": "add_server",    "server": s}   -> new config tuple
+    {"op": "remove_server", "server": s}   -> new config tuple
 """
 from __future__ import annotations
 
@@ -41,6 +48,7 @@ class Snapshot:
     digest: str
     data: Tuple[Tuple[Any, Any], ...]      # sorted (key, value) pairs
     versions: Tuple[Tuple[Any, int], ...]  # sorted (key, last-write version)
+    config: Tuple[int, ...] = ()           # agreed membership
 
 
 class KVStateMachine:
@@ -49,8 +57,18 @@ class KVStateMachine:
     def __init__(self) -> None:
         self.data: Dict[Any, Any] = {}
         self.key_version: Dict[Any, int] = {}
+        self.config: Tuple[int, ...] = ()
+        self.initial_config: Tuple[int, ...] = ()
         self.version = 0          # total commands applied
         self._digest = _EMPTY_DIGEST
+
+    def bootstrap_config(self, members) -> None:
+        """Seed the initial membership (identical on every replica at
+        deployment time, so the digest chain stays aligned — admin-command
+        results depend on the config they start from, so a replica
+        replaying a log prefix from scratch must seed the same one)."""
+        self.config = tuple(sorted(int(m) for m in members))
+        self.initial_config = self.config
 
     # ------------------------------------------------------------ application
     def apply(self, cmd: Mapping[str, Any]) -> Any:
@@ -73,6 +91,16 @@ class KVStateMachine:
             self.key_version[key] = self.version + 1
         elif op == "noop":
             result = None
+        elif op == "add_server":
+            cfg = set(self.config)
+            cfg.add(int(cmd.get("server")))
+            self.config = tuple(sorted(cfg))
+            result = self.config
+        elif op == "remove_server":
+            cfg = set(self.config)
+            cfg.discard(int(cmd.get("server")))
+            self.config = tuple(sorted(cfg))
+            result = self.config
         else:
             raise ValueError(f"unknown op: {op!r}")
         self.version += 1
@@ -102,11 +130,13 @@ class KVStateMachine:
             data=tuple(sorted(self.data.items(), key=lambda kv: repr(kv[0]))),
             versions=tuple(sorted(self.key_version.items(),
                                   key=lambda kv: repr(kv[0]))),
+            config=self.config,
         )
 
     def restore(self, snap: Snapshot) -> None:
         self.data = dict(snap.data)
         self.key_version = dict(snap.versions)
+        self.config = tuple(snap.config)
         self.version = snap.version
         self._digest = snap.digest
 

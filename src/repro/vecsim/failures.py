@@ -17,6 +17,16 @@ aggregation: AllConcur+ messages normally see ~2 du (A-delivery lags one
 round); messages of a crashed round are delivered at the end of the first
 recovery round.  Passing per-membership ``du_by_f`` / ``dr_by_f`` (round
 lengths after f crashes, from the engine) makes the splice membership-aware.
+
+**Eon transitions (§III-I).**  ``eon_round=k`` splices a mid-run topology
+swap: round ``k`` becomes the transitional *reliable* round (length ``dr``
+of the pre-flip tables, messages delivered at its completion), and every
+later round draws from the post-flip tables ``du2_by_f`` / ``dr2_by_f``
+(round lengths measured on the new dual digraphs, e.g. after an
+``add_server``) with post-flip membership size ``n2``.  Monte-Carlo
+robustness sweeps therefore cover reconfiguration the same way they cover
+crash schedules — a crash sampled inside or after the transition composes
+with the swapped cost tables.
 """
 from __future__ import annotations
 
@@ -53,7 +63,11 @@ def monte_carlo(du: float, dr: float, *, n: int, batch: int,
                 rounds: int = 200, n_schedules: int = 2048, seed: int = 0,
                 max_failures: int = 4,
                 du_by_f: Optional[Sequence[float]] = None,
-                dr_by_f: Optional[Sequence[float]] = None) -> MonteCarloResult:
+                dr_by_f: Optional[Sequence[float]] = None,
+                eon_round: Optional[int] = None,
+                du2_by_f: Optional[Sequence[float]] = None,
+                dr2_by_f: Optional[Sequence[float]] = None,
+                n2: Optional[int] = None) -> MonteCarloResult:
     """Estimate AllConcur+ performance under sampled crash times.
 
     ``mtbf`` is the mean time between crashes across the deployment (the
@@ -61,6 +75,9 @@ def monte_carlo(du: float, dr: float, *, n: int, batch: int,
     failures" lambda = mtbf / du).  Crash times are i.i.d. exponential gaps;
     at most ``max_failures`` crashes are spliced per schedule (f <= d - 1
     keeps G_R connected, matching the protocol's resilience assumption).
+
+    ``eon_round`` (with ``du2_by_f``/``dr2_by_f``/``n2``) splices an eon
+    transition: see the module docstring.
     """
     import jax
     import jax.numpy as jnp
@@ -72,6 +89,17 @@ def monte_carlo(du: float, dr: float, *, n: int, batch: int,
                       else [dr] * (max_failures + 1), dtype=np.float64)
     if len(du_f) != max_failures + 1 or len(dr_f) != max_failures + 1:
         raise ValueError("du_by_f/dr_by_f must have max_failures+1 entries")
+    du2_f = np.asarray(du2_by_f if du2_by_f is not None else du_f,
+                       dtype=np.float64)
+    dr2_f = np.asarray(dr2_by_f if dr2_by_f is not None else dr_f,
+                       dtype=np.float64)
+    if len(du2_f) != max_failures + 1 or len(dr2_f) != max_failures + 1:
+        raise ValueError("du2_by_f/dr2_by_f must have max_failures+1 entries")
+    if eon_round is not None and not 0 <= eon_round < rounds:
+        raise ValueError(f"eon_round {eon_round} outside [0, {rounds})")
+    # a sentinel past the horizon disables the splice without a branch
+    eon_idx = rounds + 1 if eon_round is None else int(eon_round)
+    n_post = n if n2 is None else int(n2)
 
     with enable_x64():
         key = jax.random.PRNGKey(seed)
@@ -81,13 +109,20 @@ def monte_carlo(du: float, dr: float, *, n: int, batch: int,
 
         du_a = jnp.asarray(du_f)
         dr_a = jnp.asarray(dr_f)
+        du2_a = jnp.asarray(du2_f)
+        dr2_a = jnp.asarray(dr2_f)
 
         def one_schedule(crashes):
-            def step(state, _):
+            def step(state, idx):
                 t, ptr, f, lat_sum, msg_sum = state
-                du_k = du_a[f]
-                dr_k = dr_a[f]
-                t_end = t + du_k
+                post = idx > eon_idx           # new eon's dual digraphs
+                at_eon = idx == eon_idx        # the transitional round
+                du_k = jnp.where(post, du2_a[f], du_a[f])
+                dr_k = jnp.where(post, dr2_a[f], dr_a[f])
+                # the transitional round runs reliably on the *old* G_R
+                # (§III-I: the swap applies after its completion)
+                dur = jnp.where(at_eon, dr_a[f], du_k)
+                t_end = t + dur
                 nxt = jnp.where(ptr < max_failures,
                                 crashes[jnp.minimum(ptr, max_failures - 1)],
                                 BIG)
@@ -99,8 +134,11 @@ def monte_carlo(du: float, dr: float, *, n: int, batch: int,
                 # round start so latency/duration stay positive.
                 t_rec1 = jnp.maximum(nxt, t) + fd_timeout + dr_k
                 t_next = jnp.where(crashed, t_rec1 + dr_k, t_end)
-                lat = jnp.where(crashed, t_rec1 - t, 2.0 * du_k)
-                alive = n - f
+                # reliable rounds deliver at completion (1x), unreliable
+                # A-delivery lags one round (2x)
+                lat = jnp.where(crashed, t_rec1 - t,
+                                jnp.where(at_eon, dur, 2.0 * du_k))
+                alive = jnp.where(post, n_post, n) - f
                 new_f = jnp.minimum(f + crashed.astype(jnp.int32),
                                     max_failures)
                 return ((t_next, ptr + crashed.astype(jnp.int32), new_f,
@@ -110,7 +148,7 @@ def monte_carlo(du: float, dr: float, *, n: int, batch: int,
             init = (jnp.float64(0.0), jnp.int32(0), jnp.int32(0),
                     jnp.float64(0.0), jnp.int64(0))
             (t, ptr, f, lat_sum, msg_sum), _ = jax.lax.scan(
-                step, init, None, length=rounds)
+                step, init, jnp.arange(rounds))
             thr = msg_sum * batch / t            # txn / s / server
             return thr, lat_sum / msg_sum, ptr, t
 

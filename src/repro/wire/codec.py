@@ -20,7 +20,19 @@ The CRC covers every byte from MAGIC through the end of BODY.  Frame kinds:
 0x04  PartitionMarker       forward (1 byte, strict 0/1), src/epoch (u32),
                             round (u64)
 0x05  baseline tuple        tuple (value), modeled padding section
+0x06  SnapshotRequest       src (u32), applied_round (value int)
+0x07  SnapshotChunk         src/eon/epoch (u32), round (u64),
+                            chunk/nchunks (u32), members (value tuple),
+                            data (value)
+0x08  LogSuffix             src (u32), from_round (value int),
+                            entries (value tuple)
 ====  ====================  ===========================================
+
+The catch-up frames (0x06-0x08, §III-I replica catch-up) carry rounds that
+may be -1 ("nothing applied yet"), so those ride the signed value encoding
+rather than a fixed-width header field; they are rare control traffic, not
+per-round protocol cost, so the constant-frame-length discipline of kinds
+0x01-0x04 does not apply to their payload sections.
 
 Protocol header fields are fixed-width (little-endian) rather than varints
 so that frame length is invariant in the round/server counters — vecsim's
@@ -49,8 +61,9 @@ from __future__ import annotations
 import struct
 from typing import Any, List, Mapping, Optional, Tuple
 
-from ..core.messages import (FailNotification, Heartbeat, Message, MsgKind,
-                             PartitionMarker)
+from ..core.messages import (FailNotification, Heartbeat, LogSuffix, Message,
+                             MsgKind, PartitionMarker, SnapshotChunk,
+                             SnapshotRequest)
 from .crc32c import crc32c
 from .errors import (BadMagicError, ChecksumError, FrameTooLargeError,
                      MalformedFieldError, TrailingBytesError,
@@ -67,6 +80,9 @@ FRAME_FAIL = 0x02
 FRAME_HEARTBEAT = 0x03
 FRAME_MARKER = 0x04
 FRAME_BASELINE = 0x05
+FRAME_SNAP_REQUEST = 0x06
+FRAME_SNAP_CHUNK = 0x07
+FRAME_LOG_SUFFIX = 0x08
 
 _T_NONE, _T_FALSE, _T_TRUE = 0x00, 0x01, 0x02
 _T_INT, _T_FLOAT, _T_STR, _T_BYTES = 0x03, 0x04, 0x05, 0x06
@@ -336,6 +352,25 @@ def _body(msg: Any, n: int) -> Tuple[int, bytearray, int]:
         _write_u32(out, msg.epoch, "epoch")
         _write_u64(out, msg.round, "round")
         return FRAME_MARKER, out, 0
+    if isinstance(msg, SnapshotRequest):
+        _write_u32(out, msg.src, "src")
+        _encode_value(out, msg.applied_round)
+        return FRAME_SNAP_REQUEST, out, 0
+    if isinstance(msg, SnapshotChunk):
+        _write_u32(out, msg.src, "src")
+        _write_u32(out, msg.eon, "eon")
+        _write_u32(out, msg.epoch, "epoch")
+        _write_u64(out, msg.round, "round")
+        _write_u32(out, msg.chunk, "chunk")
+        _write_u32(out, msg.nchunks, "nchunks")
+        _encode_value(out, tuple(msg.members))
+        _encode_value(out, msg.data)
+        return FRAME_SNAP_CHUNK, out, 0
+    if isinstance(msg, LogSuffix):
+        _write_u32(out, msg.src, "src")
+        _encode_value(out, msg.from_round)
+        _encode_value(out, tuple(msg.entries))
+        return FRAME_LOG_SUFFIX, out, 0
     if isinstance(msg, tuple):
         _encode_value(out, msg)
         pad = _baseline_pad(msg, n)
@@ -442,6 +477,39 @@ def decode_frame(buf: bytes, pos: int = 0) -> Tuple[Any, int]:
             raise MalformedFieldError(f"forward flag must be 0/1, got {fwd}")
         msg = PartitionMarker(bool(fwd), r.u32("src"),
                               r.u32("epoch"), r.u64("round"))
+    elif kind == FRAME_SNAP_REQUEST:
+        src = r.u32("src")
+        ar = r.value()
+        if not isinstance(ar, int) or isinstance(ar, bool):
+            raise MalformedFieldError("applied_round must be an int")
+        msg = SnapshotRequest(src, applied_round=ar)
+    elif kind == FRAME_SNAP_CHUNK:
+        src = r.u32("src")
+        eon = r.u32("eon")
+        epoch = r.u32("epoch")
+        rnd = r.u64("round")
+        chunk = r.u32("chunk")
+        nchunks = r.u32("nchunks")
+        if nchunks < 1 or chunk >= nchunks:
+            raise MalformedFieldError(
+                f"chunk index {chunk} out of range for {nchunks} chunks")
+        members = r.value()
+        if not isinstance(members, tuple) or not all(
+                isinstance(m, int) and not isinstance(m, bool)
+                for m in members):
+            raise MalformedFieldError("members must be a tuple of ints")
+        data = r.value()
+        msg = SnapshotChunk(src, eon, epoch, rnd, members=members,
+                            chunk=chunk, nchunks=nchunks, data=data)
+    elif kind == FRAME_LOG_SUFFIX:
+        src = r.u32("src")
+        fr = r.value()
+        if not isinstance(fr, int) or isinstance(fr, bool):
+            raise MalformedFieldError("from_round must be an int")
+        entries = r.value()
+        if not isinstance(entries, tuple):
+            raise MalformedFieldError("log-suffix entries must be a tuple")
+        msg = LogSuffix(src, from_round=fr, entries=entries)
     elif kind == FRAME_BASELINE:
         t = r.value()
         if not isinstance(t, tuple):

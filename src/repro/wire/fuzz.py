@@ -35,8 +35,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from ..core.messages import (FailNotification, Heartbeat, Message, MsgKind,
-                             PartitionMarker)
+from ..core.messages import (FailNotification, Heartbeat, LogSuffix, Message,
+                             MsgKind, PartitionMarker, SnapshotChunk,
+                             SnapshotRequest)
 from .codec import FrameSplitter, decode, encode
 from .errors import WireDecodeError
 
@@ -63,8 +64,26 @@ def corpus_messages() -> List[Tuple[str, object, int]]:
         ("msg_str_payload", Message(MsgKind.BCAST, 5, 1, 2,
                                     payload="p5:r2"), 8),
         ("msg_none_payload", Message(MsgKind.FWD, 1, 1, 4), 8),
+        ("msg_admin", Message(MsgKind.BCAST, 1, 1, 5,
+                              payload={"kind": "smr", "src": 1, "round": 5,
+                                       "batch": 1,
+                                       "reqs": ((1 << 30, 0,
+                                                 {"op": "add_server",
+                                                  "server": 8}),)}), 8),
         ("fail", FailNotification(4, 6, eon=2), 8),
         ("heartbeat", Heartbeat(src=3, seq=17), 8),
+        ("snap_request", SnapshotRequest(8, applied_round=-1), 8),
+        ("snap_chunk", SnapshotChunk(
+            2, 1, 2, 9, members=(0, 1, 2, 3, 8), chunk=0, nchunks=2,
+            data=(("meta", {"has_snapshot": False, "digest": "0" * 16,
+                            "applied_round": 9, "init_config": (0, 1, 2, 3),
+                            "snapshot_round": -1}),
+                  ("session", 7, 3, 3, "v7"))), 8),
+        ("log_suffix", LogSuffix(
+            2, from_round=-1,
+            entries=((9, 2, "ab" * 8,
+                      ((7, 3, {"op": "put", "key": 1, "value": "v7"}),)),)),
+         8),
         ("marker_fwd", PartitionMarker(True, 0, 2, 5), 8),
         ("marker_bwd", PartitionMarker(False, 7, 2, 5), 8),
         ("lcr_m", ("lcr_m", 0, 1, 0, 4), 16),

@@ -1,0 +1,453 @@
+"""Dynamic membership (§III-I as an SMR operation): client-visible eon
+changes with snapshot catch-up, plus the membership chaos suite.
+
+Acceptance surface:
+
+* an ``add_server`` issued mid-workload completes with zero lost or
+  duplicated client ops, and the joining replica's post-catch-up digest is
+  bit-identical to its peers' — verified in both the schedule-randomized
+  ``Cluster`` and the timed ``Simulation``;
+* ``remove_server`` halts the victim at the eon flip and the survivors
+  converge;
+* a crashed-and-removed replica can recover by re-joining under its old id
+  (snapshot + delivered-round-log suffix replay to the digest);
+* randomized schedules interleaving writes, crashes and add/remove commands
+  keep every eon ending with identical rolling digests and never lose or
+  double-apply a client op (seeded chaos here; a hypothesis variant runs
+  where hypothesis is installed, and the slow-marked wide sweeps back the
+  CI ``membership-chaos`` stage).
+"""
+import random
+
+import pytest
+
+from repro.core import Cluster, Mode, Transition
+from repro.smr import (ADMIN_CLIENT_ID, AdminClient, ClientRequest,
+                       KVStateMachine, SMRService, add_smr_server,
+                       build_smr_cluster)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # container lacks it
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------- helpers
+
+def established(c):
+    return [s for s in c.alive() if not c.servers[s].joining]
+
+
+def assert_membership_invariants(c, svcs, ctx=""):
+    alive = established(c)
+    assert alive, "no surviving servers"
+    # per-round set agreement (uid + payload) across every alive server
+    per_round = {}
+    for s in alive:
+        for rec in c.servers[s].delivered:
+            sig = tuple((m.uid, repr(m.payload)) for m in rec.msgs)
+            assert per_round.setdefault(rec.round, sig) == sig, \
+                f"{ctx}: set disagreement at round {rec.round} (server {s})"
+    # rolling digests bit-identical at every common applied round
+    commons = set.intersection(*(set(svcs[s].applied_digests) for s in alive))
+    for r in sorted(commons):
+        digs = {svcs[s].applied_digests[r] for s in alive}
+        assert len(digs) == 1, f"{ctx}: digest divergence at round {r}: {digs}"
+    # membership views: at most one failure-removal step of skew per eon
+    eons = {c.servers[s].eon for s in alive}
+    if len(eons) == 1:
+        views = {tuple(c.servers[s].members) for s in alive}
+        assert len(views) <= 2, f"{ctx}: divergent membership views {views}"
+
+
+def pump_writes(svcs, targets, rng, cid_seq, count=1):
+    for _ in range(count):
+        cid = rng.randrange(4)
+        seq = cid_seq.get(cid, 0)
+        cid_seq[cid] = seq + 1
+        svcs[rng.choice(targets)].submit(
+            ClientRequest(cid, seq, {"op": "incr", "key": cid}))
+
+
+# ------------------------------------------- add/remove through the log
+
+def test_add_server_mid_workload_catches_up_bit_identical():
+    """Acceptance: AddServer mid-workload, zero lost/duplicated ops, the
+    joiner's post-catch-up digest bit-identical to its peers'."""
+    c, svcs = build_smr_cluster(6, d=2, seed=3)
+    c.start()
+    for cid in range(4):
+        for seq in range(3):
+            svcs[cid % 6].submit(ClientRequest(
+                cid, seq, {"op": "incr", "key": cid}))
+    c.run_until(lambda: min(len(s.delivered) for s in c.servers.values()) >= 2)
+
+    admin = AdminClient()
+    add_smr_server(c, svcs, 6, seeds=[0, 1], d=2)
+    assert admin.add(svcs[2], 6)
+    for cid in range(4):                      # traffic *during* the flip
+        svcs[cid % 6].submit(ClientRequest(
+            cid, 3, {"op": "incr", "key": cid}))
+
+    assert c.run_until(
+        lambda: not c.servers[6].joining
+        and all(c.servers[s].eon == 1 for s in c.alive())
+        and all(not svcs[s].pending for s in established(c)),
+        max_steps=400_000)
+    alive = established(c)
+    assert 6 in alive and 6 in c.servers[0].members
+    # zero lost or duplicated: every increment applied exactly once
+    for s in alive:
+        sm = svcs[s].sm
+        for cid in range(4):
+            assert sm.data[cid] == 4, (s, cid, sm.data)
+    # the joiner's digest is bit-identical to its peers' *now*
+    digs = {svcs[s].digest() for s in alive}
+    assert len(digs) == 1
+    assert svcs[6].applied_round == svcs[0].applied_round
+    # config is replicated state
+    assert all(svcs[s].sm.config == (0, 1, 2, 3, 4, 5, 6) for s in alive)
+    assert_membership_invariants(c, svcs, "add")
+
+
+def test_add_server_flips_without_any_failure_via_t_vr():
+    """DUAL mode with no crash: the transitional reliable round is forced
+    voluntarily (T_VR) — reconfiguration must not wait for a failure."""
+    c, svcs = build_smr_cluster(7, d=3, seed=11)
+    c.start()
+    c.run_until(lambda: min(len(s.delivered) for s in c.servers.values()) >= 1)
+    admin = AdminClient()
+    add_smr_server(c, svcs, 7, seeds=[0], d=3)
+    assert admin.add(svcs[0], 7)
+    assert c.run_until(lambda: not c.servers[7].joining, max_steps=400_000)
+    assert any(tr[0] == Transition.T_VR
+               for tr in c.servers[0].transitions)
+    assert_membership_invariants(c, svcs, "t_vr")
+
+
+def test_remove_server_halts_victim_and_survivors_converge():
+    c, svcs = build_smr_cluster(7, d=3, seed=5)
+    c.start()
+    rng = random.Random(0)
+    cid_seq = {}
+    pump_writes(svcs, list(range(7)), rng, cid_seq, count=6)
+    c.run_until(lambda: min(len(s.delivered) for s in c.servers.values()) >= 1)
+    admin = AdminClient()
+    assert admin.remove(svcs[1], 4)
+    assert c.run_until(
+        lambda: c.servers[4].halted
+        and all(c.servers[s].eon == 1 for s in established(c)),
+        max_steps=400_000)
+    alive = established(c)
+    assert 4 not in alive
+    assert all(4 not in c.servers[s].members for s in alive)
+    assert all(svcs[s].sm.config == (0, 1, 2, 3, 5, 6) for s in alive)
+    c.run_until(lambda: all(not svcs[s].pending for s in alive),
+                max_steps=200_000)
+    assert_membership_invariants(c, svcs, "remove")
+
+
+def test_crashed_replica_recovers_by_rejoining_under_old_id():
+    """Crash -> failure removal -> re-add the same id: the recovering
+    replica fetches snapshot + log suffix and replays to the digest."""
+    c, svcs = build_smr_cluster(7, d=3, seed=9)
+    c.start()
+    rng = random.Random(1)
+    cid_seq = {}
+    pump_writes(svcs, [0, 1, 2, 3], rng, cid_seq, count=8)
+    c.run_until(lambda: min(len(s.delivered) for s in c.servers.values()) >= 2)
+    c.crash(5)
+    assert c.run_until(
+        lambda: all(5 not in c.servers[s].members for s in established(c)),
+        max_steps=400_000)
+    pump_writes(svcs, [0, 1, 2, 3], rng, cid_seq, count=4)
+    admin = AdminClient()
+    add_smr_server(c, svcs, 5, seeds=[0, 1], d=3)
+    assert admin.add(svcs[0], 5)
+    assert c.run_until(lambda: not c.servers[5].joining, max_steps=400_000)
+    c.run_until(lambda: all(not svcs[s].pending for s in established(c)),
+                max_steps=200_000)
+    alive = established(c)
+    assert 5 in alive
+    digs = {svcs[s].digest() for s in alive}
+    assert len(digs) == 1
+    assert_membership_invariants(c, svcs, "recover")
+
+
+def test_catchup_chunking_reassembles_multiple_snapshot_chunks():
+    """A small chunk size forces the snapshot across several SnapshotChunk
+    frames; FIFO reassembly still replays to the identical digest."""
+    c, svcs = build_smr_cluster(5, d=2, seed=2, compact_every=4)
+    c.start()
+    for cid in range(4):
+        for seq in range(6):
+            svcs[cid % 5].submit(ClientRequest(
+                cid, seq, {"op": "put", "key": 100 + (cid * 7 + seq) % 23,
+                           "value": f"v{cid}.{seq}"}))
+    c.run_until(lambda: min(svcs[s].applied_round for s in range(5)) >= 8)
+    assert any(svcs[s].log.compactions for s in range(5))
+
+    admin = AdminClient()
+    svc5 = add_smr_server(c, svcs, 5, seeds=[0], d=2)
+    svc5.membership.chunk_records = 1     # not used by the joiner side
+    for s in range(5):
+        svcs[s].membership.chunk_records = 3
+    assert admin.add(svcs[1], 5)
+    assert c.run_until(lambda: not c.servers[5].joining, max_steps=400_000)
+    digs = {svcs[s].digest() for s in established(c)}
+    assert len(digs) == 1
+    # the joiner's log mirrors the peer's snapshot + suffix structure
+    assert svcs[5].log.snapshot is not None
+    assert svcs[5].log.snapshot_round >= 0
+
+
+def test_export_install_catchup_roundtrip_and_digest_check():
+    src = SMRService(0, compact_every=6)   # 10 rounds -> snapshot + suffix
+    src.sm.bootstrap_config([0, 1, 2])
+    from repro.core.server import DeliveryRecord
+    from repro.core.messages import Message, MsgKind, RoundType
+    for rnd in range(10):
+        payload = {"kind": "smr", "src": 0, "round": rnd, "batch": 1,
+                   "reqs": ((7, rnd, {"op": "incr", "key": rnd % 3}),)}
+        rec = DeliveryRecord(1, rnd, RoundType.UNRELIABLE,
+                             (Message(MsgKind.BCAST, 0, 1, rnd,
+                                      payload=payload),))
+        src.on_deliver(rec)
+    records, entries = src.export_catchup()
+    dst = SMRService(9)
+    digest = dst.install_catchup(records, entries)
+    assert digest == src.digest()
+    assert dst.applied_round == src.applied_round
+    assert dst.applied_seq == src.applied_seq
+    assert dst.sm.data == src.sm.data
+    assert dst.sm.config == src.sm.config
+    # a corrupted suffix must be rejected, not silently installed
+    bad = list(entries)
+    rnd, epoch, dig, _commands = bad[-1]
+    bad[-1] = (rnd, epoch, dig,
+               ((7, rnd, {"op": "incr", "key": 999}),))
+    with pytest.raises(ValueError):
+        SMRService(10).install_catchup(records, tuple(bad))
+
+
+def test_admin_ops_are_replicated_state_with_digest_coverage():
+    a, b = KVStateMachine(), KVStateMachine()
+    for sm in (a, b):
+        sm.bootstrap_config([0, 1, 2])
+    assert a.digest() == b.digest()
+    assert a.apply({"op": "add_server", "server": 3}) == (0, 1, 2, 3)
+    assert a.config == (0, 1, 2, 3)
+    # same command -> same digest; different command -> different digest
+    b.apply({"op": "add_server", "server": 3})
+    assert a.digest() == b.digest()
+    a.apply({"op": "remove_server", "server": 0})
+    assert a.config == (1, 2, 3)
+    assert a.digest() != b.digest()
+    # snapshots carry the config
+    snap = a.snapshot()
+    c = KVStateMachine.from_snapshot(snap)
+    assert c.config == (1, 2, 3)
+
+
+def test_admin_command_is_exactly_once_under_retry():
+    c, svcs = build_smr_cluster(5, d=2, seed=8)
+    c.start()
+    c.run_until(lambda: min(len(s.delivered) for s in c.servers.values()) >= 1)
+    req = ClientRequest(ADMIN_CLIENT_ID, 0, {"op": "remove_server",
+                                             "server": 4})
+    assert svcs[0].submit(req)
+    assert not svcs[0].submit(req)        # in-flight retry coalesces
+    assert c.run_until(lambda: c.servers[4].halted, max_steps=300_000)
+    # late retry of the committed command re-acks without a second flip
+    assert not svcs[1].submit(req)
+    c.run(max_steps=50_000)
+    assert all(c.servers[s].eon == 1 for s in established(c))
+
+
+def test_allgather_mode_applies_config_but_never_flips():
+    c, svcs = build_smr_cluster(6, d=2, seed=1, mode=Mode.UNRELIABLE_ONLY)
+    c.start()
+    admin = AdminClient()
+    assert admin.remove(svcs[0], 5)
+    c.run_until(lambda: all(svcs[s].sm.config == (0, 1, 2, 3, 4)
+                            for s in range(6)), max_steps=200_000)
+    assert all(c.servers[s].eon == 0 for s in c.alive())
+    assert not c.servers[5].halted        # no reliable round to flip over
+
+
+# --------------------------------------------------- timed simulation
+
+def _run_sim_eonflip(n=8, rpc=50, num_clients=16, seed=1):
+    from repro.sim import build_smr_simulation, schedule_membership_change
+    from repro.smr import WorkloadConfig
+    cfg = WorkloadConfig(num_clients=num_clients, read_ratio=0.5,
+                         arrival="closed", seed=seed)
+    sim, smr, svcs = build_smr_simulation("allconcur+", n, workload=cfg,
+                                          requests_per_client=rpc,
+                                          batch_max=16)
+    handle = schedule_membership_change(sim, svcs, 0.002, add=n, via=1)
+    sim.start()
+    sim.run(until=lambda: all(c.acked >= rpc for c in sim.workload.clients),
+            max_time=5.0)
+    return sim, smr, svcs, handle
+
+
+def test_simulation_eon_flip_mid_workload():
+    """Acceptance (timed layer): AddServer mid-workload — every client op
+    acked exactly once, joiner digest bit-identical, flip recorded so the
+    client-perceived disruption window is measurable."""
+    n, rpc, num_clients = 8, 50, 16
+    sim, smr, svcs, handle = _run_sim_eonflip(n, rpc, num_clients)
+    assert smr.acked == rpc * num_clients          # zero lost, zero duplicated
+    assert not sim.servers[n].joining
+    alive = [s for s in svcs
+             if s not in sim.crashed and not sim.servers[s].halted]
+    assert n in alive
+    digs = {svcs[s].digest() for s in alive}
+    assert len(digs) == 1
+    assert sim.eon_flips and len({e for (_t, _s, e) in sim.eon_flips}) == 1
+    # the disruption window isolates the flip: it must be a strict subset
+    # of the run's acks (a window wider than the run would just reproduce
+    # the overall distribution), observable but bounded
+    t_flip = min(t for (t, _s, _e) in sim.eon_flips)
+    win = smr.latencies_in(t_flip - 0.0005, t_flip + 0.002)
+    assert win, "no acks recorded around the eon flip"
+    assert len(win) < len(smr.ack_log), "window swallowed the whole run"
+    assert max(win) < 1.0
+
+
+def test_simulation_client_failover_tail_latency():
+    from repro.sim import build_smr_simulation
+    from repro.smr import WorkloadConfig
+    n, rpc, num_clients = 8, 40, 16
+    cfg = WorkloadConfig(num_clients=num_clients, read_ratio=0.5,
+                         arrival="closed", seed=2)
+    sim, smr, svcs = build_smr_simulation("allconcur+", n, workload=cfg,
+                                          requests_per_client=rpc,
+                                          batch_max=16, client_failover=True)
+    sim.schedule_crash(1, 0.0005, partial_sends=1)
+    sim.start()
+    sim.run(until=lambda: all(c.acked >= rpc for c in sim.workload.clients),
+            max_time=8.0)
+    # crashed-home clients finish their workload at a new replica, with the
+    # (client_id, seq) dedup guaranteeing exactly-once across the retry
+    assert smr.acked == rpc * num_clients
+    digs = {svcs[s].digest() for s in svcs
+            if s not in sim.crashed and not sim.servers[s].halted}
+    assert len(digs) == 1
+    # the failover tail is visible: p99 >= the failover delay, p50 is not
+    assert smr.p99() >= sim.fd_timeout
+    assert smr.p50() < sim.fd_timeout
+
+
+def test_simulation_remove_server_rehomes_clients():
+    from repro.sim import build_smr_simulation, schedule_membership_change
+    from repro.smr import WorkloadConfig
+    n, rpc, num_clients = 7, 30, 14
+    cfg = WorkloadConfig(num_clients=num_clients, read_ratio=0.5,
+                         arrival="closed", seed=3)
+    sim, smr, svcs = build_smr_simulation("allconcur+", n, workload=cfg,
+                                          requests_per_client=rpc,
+                                          batch_max=16, client_failover=True)
+    schedule_membership_change(sim, svcs, 0.002, remove=n - 1, via=0)
+    sim.start()
+    sim.run(until=lambda: all(c.acked >= rpc for c in sim.workload.clients),
+            max_time=6.0)
+    assert sim.servers[n - 1].halted
+    assert smr.acked == rpc * num_clients
+
+
+# ----------------------------------------------------- chaos suite
+
+def run_membership_chaos(seed, mode=Mode.DUAL, uniform=False,
+                         codec=False, max_steps=600_000):
+    """One randomized schedule interleaving writes, crashes and add/remove
+    admin commands; asserts the safety invariants and quiescence."""
+    rng = random.Random(seed)
+    n = rng.randint(5, 9)
+    d = min(3, n - 2)
+    c, svcs = build_smr_cluster(n, d=d, seed=seed, mode=mode,
+                                uniform=uniform, codec=codec)
+    c.start()
+    admin = AdminClient()
+    next_sid = n
+    cid_seq = {}
+    ops = []
+    f_budget = d - 1
+    plan = rng.sample(["write"] * 6 + ["crash", "add", "remove", "add"], 8)
+    for action in plan:
+        for _ in range(rng.randrange(200)):
+            c.step()
+        alive = established(c)
+        if action == "write":
+            pump_writes(svcs, alive, rng, cid_seq)
+        elif action == "crash" and f_budget > 0 and len(alive) > 4:
+            victim = rng.choice(alive)
+            c.crash(victim, partial_sends=rng.choice([None, 0, 1, 2]))
+            f_budget -= 1
+            ops.append(("crash", victim))
+        elif action == "add":
+            seeds = rng.sample(alive, min(2, len(alive)))
+            add_smr_server(c, svcs, next_sid, seeds=seeds, d=d)
+            admin.add(svcs[rng.choice(alive)], next_sid)
+            ops.append(("add", next_sid))
+            next_sid += 1
+        elif action == "remove" and len(alive) > 5:
+            victim = rng.choice(alive)
+            admin.remove(svcs[rng.choice(alive)], victim)
+            ops.append(("remove", victim))
+
+    def settled():
+        alive = established(c)
+        if len({c.servers[s].eon for s in alive}) != 1:
+            return False
+        return all(not svcs[s].pending for s in alive)
+
+    ok = c.run_until(settled, max_steps=max_steps)
+    assert_membership_invariants(c, svcs, f"chaos seed {seed} ops {ops}")
+    # no duplicate application: per client, counter == distinct seqs applied
+    for s in established(c):
+        sm = svcs[s].sm
+        for cid in range(4):
+            assert sm.data.get(cid, 0) <= svcs[s].applied_seq.get(cid, -1) + 1
+    assert ok, (f"chaos seed {seed} ops {ops}: no quiescence; states "
+                f"{[(s, c.servers[s].state, c.servers[s].eon) for s in c.alive()]}")
+
+
+@pytest.mark.parametrize("seed", [3, 14, 34, 56, 110, 142])
+def test_membership_chaos_fast(seed):
+    """Seeds that historically exposed liveness bugs (postponed-message
+    drops, per-eon FD re-arming) plus a sample of plain ones."""
+    run_membership_chaos(seed)
+
+
+def test_membership_chaos_over_codec():
+    """The same chaos machinery with every message round-tripped through
+    the wire codec — catch-up frames included."""
+    run_membership_chaos(3, codec=True)
+    run_membership_chaos(19, codec=True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("block", [0, 1, 2, 3])
+def test_membership_chaos_wide(block):
+    for seed in range(block * 40, (block + 1) * 40):
+        run_membership_chaos(seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,uniform", [(Mode.RELIABLE_ONLY, False),
+                                          (Mode.DUAL, True)])
+def test_membership_chaos_modes(mode, uniform):
+    for seed in range(25):
+        run_membership_chaos(seed, mode=mode, uniform=uniform)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(min_value=0, max_value=100_000))
+    def test_membership_chaos_hypothesis(seed):
+        run_membership_chaos(seed)

@@ -147,6 +147,84 @@ def test_eon_gr_update():
         assert c.servers[s].g_r.degree() == 4
 
 
+def test_eon_gr_update_without_failure_takes_t_vr():
+    """§III-I without a crash: the transitional reliable round is forced
+    voluntarily (T_VR) at the next unreliable round completion, so a
+    failure-free cluster still flips eons."""
+    c = Cluster(9, d=3, seed=7)
+    c.start()
+    c.run_until(lambda: c.min_delivered_rounds() >= 2)
+    for s in c.alive():
+        c.servers[s].schedule_gr_update(lambda m: gs_digraph(m, 4))
+    assert c.run_until(lambda: all(c.servers[s].eon == 1 for s in c.alive())
+                       and c.min_delivered_rounds() >= 6)
+    assert streams_agree(c) and no_duplicates(c)
+    for s in c.alive():
+        srv = c.servers[s]
+        assert srv.g_r.degree() == 4
+        assert any(tr[0] == Transition.T_VR for tr in srv.transitions)
+        # no server was removed by the voluntary transition
+        assert len(srv.members) == 9
+
+
+def test_next_eon_buffer_replays_in_order_and_drops_stale_fn():
+    """§III-I edge cases: future-eon traffic (reliable messages AND failure
+    notifications) is buffered and replayed in arrival order at the flip;
+    stale-eon FailNotifications are dropped outright."""
+    from repro.core import FailNotification
+
+    c = Cluster(9, d=3, seed=2)
+    c.start()
+    c.run_until(lambda: c.min_delivered_rounds() >= 2)
+    srv = c.servers[0]
+    # future-eon failure notifications arrive before server 0 flips
+    fn1 = FailNotification(5, 7, eon=1)
+    fn2 = FailNotification(4, 2, eon=1)
+    srv.on_message(fn1)
+    srv.on_message(fn2)
+    assert srv._next_eon_buffer == [fn1, fn2]   # buffered, in arrival order
+    assert (5, 7) not in srv._fset              # ...and NOT applied yet
+    # flip the whole cluster (voluntary transitional round)
+    for s in c.alive():
+        c.servers[s].schedule_gr_update(lambda m: gs_digraph(m, 3))
+    assert c.run_until(lambda: srv.eon == 1, max_steps=400_000)
+    # the buffered notifications were replayed in order at the flip
+    assert srv.F[:2] == [(5, 7), (4, 2)]
+    assert not srv._next_eon_buffer
+    # stale-eon notification after the flip: dropped, no state change
+    before_f = list(srv.F)
+    srv.on_message(FailNotification(3, 1, eon=0))
+    assert srv.F == before_f
+    assert (3, 1) not in srv._fset
+    # the falsely-suspected servers are handled by the normal removal path;
+    # the survivors still agree
+    assert c.run_until(lambda: c.min_delivered_rounds() >= 7,
+                       max_steps=400_000)
+    assert streams_agree(c)
+
+
+def test_failure_during_eon_transition_converges():
+    """A crash racing the transitional round: the voluntary T_VR and the
+    rollback machinery must reconcile instead of deadlocking."""
+    for seed, partial in [(5, 1), (11, None), (23, 0)]:
+        c = Cluster(9, d=3, seed=seed)
+        c.start()
+        c.run_until(lambda: c.min_delivered_rounds() >= 2)
+        for s in c.alive():
+            c.servers[s].schedule_gr_update(lambda m: gs_digraph(m, 3))
+        # crash while every server holds a pending eon update
+        assert any(c.servers[s]._pending_gr_update is not None
+                   for s in c.alive())
+        c.crash(6, partial_sends=partial)
+        assert c.run_until(lambda: all(c.servers[s].eon == 1
+                                       for s in c.alive())
+                           and c.min_delivered_rounds() >= 6,
+                           max_steps=500_000), f"seed {seed} stalled"
+        assert streams_agree(c) and no_duplicates(c)
+        for s in c.alive():
+            assert 6 not in c.servers[s].members
+
+
 def test_ring_overlay_mode():
     c = Cluster(8, d=3, overlay="ring", seed=1)
     c.start()

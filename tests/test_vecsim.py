@@ -235,3 +235,51 @@ def test_sweep_empty_returns_empty_result():
     res = sweep([])
     assert res.configs == []
     assert res.throughput.shape == (0,)
+
+
+def test_monte_carlo_eon_splice_exact_failure_free():
+    """§III-I eon transitions in the Monte-Carlo splice: the transitional
+    round is one reliable round on the old tables; later rounds draw from
+    the post-flip tables and membership."""
+    du, dr = 100e-6, 300e-6
+    # identical tables: exactly one du replaced by dr
+    base = monte_carlo(du, dr, n=16, batch=8, mtbf=1e9, rounds=50,
+                       n_schedules=4, seed=0)
+    flip = monte_carlo(du, dr, n=16, batch=8, mtbf=1e9, rounds=50,
+                       n_schedules=4, seed=0, eon_round=20)
+    np.testing.assert_allclose(base.total_time, 50 * du, rtol=1e-12)
+    np.testing.assert_allclose(flip.total_time, 49 * du + dr, rtol=1e-12)
+    # topology swap: slower post-flip rounds and one extra member
+    du2, dr2 = 150e-6, 450e-6
+    sw = monte_carlo(du, dr, n=16, batch=8, mtbf=1e9, rounds=50,
+                     n_schedules=4, seed=0, eon_round=20,
+                     du2_by_f=[du2] * 5, dr2_by_f=[dr2] * 5, n2=17)
+    exp_t = 20 * du + dr + 29 * du2
+    np.testing.assert_allclose(sw.total_time, exp_t, rtol=1e-12)
+    msgs = 21 * 16 + 29 * 17
+    np.testing.assert_allclose(sw.throughput, msgs * 8 / exp_t, rtol=1e-12)
+
+
+def test_monte_carlo_eon_splice_composes_with_crashes():
+    du, dr = 100e-6, 300e-6
+    mc = monte_carlo(du, dr, n=16, batch=8, mtbf=5e-3, rounds=100,
+                     n_schedules=512, seed=1, eon_round=30,
+                     du2_by_f=[120e-6] * 5, dr2_by_f=[350e-6] * 5, n2=17)
+    assert np.isfinite(mc.throughput).all()
+    assert (mc.mean_latency > 0).all()
+    assert (mc.total_time > 0).all()
+    # disabling the splice reproduces the original recurrence bit-for-bit
+    a = monte_carlo(du, dr, n=16, batch=8, mtbf=5e-3, rounds=100,
+                    n_schedules=512, seed=1)
+    b = monte_carlo(du, dr, n=16, batch=8, mtbf=5e-3, rounds=100,
+                    n_schedules=512, seed=1, du2_by_f=[1.0] * 5,
+                    dr2_by_f=[1.0] * 5, n2=99)   # ignored without eon_round
+    np.testing.assert_array_equal(a.throughput, b.throughput)
+    np.testing.assert_array_equal(a.mean_latency, b.mean_latency)
+
+
+def test_monte_carlo_eon_round_bounds_validated():
+    import pytest
+    with pytest.raises(ValueError):
+        monte_carlo(1e-4, 3e-4, n=8, batch=4, mtbf=1.0, rounds=10,
+                    n_schedules=2, eon_round=10)

@@ -14,8 +14,9 @@ The acceptance surface for the codec subsystem:
 import pytest
 
 from repro.core.cluster import Cluster
-from repro.core.messages import (FailNotification, Heartbeat, Message,
-                                 MsgKind, PartitionMarker)
+from repro.core.messages import (FailNotification, Heartbeat, LogSuffix,
+                                 Message, MsgKind, PartitionMarker,
+                                 SnapshotChunk, SnapshotRequest)
 from repro.sim.runner import wire_size
 from repro.wire import (MAX_FRAME_BODY, BadMagicError, ChecksumError,
                         FrameSplitter, FrameTooLargeError,
@@ -52,6 +53,21 @@ CASE_TABLE = [
     ("pax_client", 0, 1, 4),
     ("pax_accept", 0, 1, 4),
     ("pax_accepted", 0, 1, 4),
+    # §III-I catch-up traffic (dynamic membership)
+    SnapshotRequest(8),
+    SnapshotRequest(8, applied_round=-1),
+    SnapshotRequest(3, applied_round=2**40),
+    SnapshotChunk(2, 1, 2, 9, members=(0, 1, 2, 3, 8), chunk=0, nchunks=1,
+                  data=(("meta", {"has_snapshot": False, "digest": "0" * 16,
+                                  "applied_round": 9,
+                                  "init_config": (0, 1, 2, 3),
+                                  "snapshot_round": -1}),)),
+    SnapshotChunk(0, 3, 4, 2**33, members=(), chunk=6, nchunks=7, data=()),
+    LogSuffix(2, from_round=-1, entries=()),
+    LogSuffix(5, from_round=12,
+              entries=((13, 2, "ab" * 8,
+                        ((7, 3, {"op": "put", "key": 1, "value": "v"}),
+                         (1 << 30, 0, {"op": "add_server", "server": 9}))),)),
 ]
 
 
@@ -158,6 +174,48 @@ def test_padding_mismatch_rejected():
     body += bytes([0])                             # pad_len = 0 (lie)
     with pytest.raises(MalformedFieldError):
         decode(_raw_frame(0x01, bytes(body)))
+
+
+def test_catchup_frames_are_strict():
+    # chunk index out of range (chunk >= nchunks)
+    body = bytearray()
+    body += (2).to_bytes(4, "little")       # src
+    body += (1).to_bytes(4, "little")       # eon
+    body += (2).to_bytes(4, "little")       # epoch
+    body += (9).to_bytes(8, "little")       # round
+    body += (3).to_bytes(4, "little")       # chunk
+    body += (3).to_bytes(4, "little")       # nchunks (chunk must be < this)
+    body += bytes([0x08, 0])                # members: empty tuple
+    body += bytes([0x00])                   # data: None
+    with pytest.raises(MalformedFieldError):
+        decode(_raw_frame(0x07, bytes(body)))
+    # members must be a tuple of ints
+    body[20:28] = (0).to_bytes(4, "little") + (1).to_bytes(4, "little")
+    bad = bytes(body[:28]) + bytes([0x08, 1, 0x05, 1, 0x78, 0x00])  # ("x",)
+    with pytest.raises(MalformedFieldError):
+        decode(_raw_frame(0x07, bad))
+    # SnapshotRequest applied_round must be an int value
+    with pytest.raises(MalformedFieldError):
+        decode(_raw_frame(0x06, (8).to_bytes(4, "little") + bytes([0x01])))
+    # LogSuffix entries must be a tuple
+    with pytest.raises(MalformedFieldError):
+        decode(_raw_frame(0x08, (2).to_bytes(4, "little")
+                          + bytes([0x03, 0])            # from_round = 0
+                          + bytes([0x07, 0])))          # list, not tuple
+
+
+def test_every_bit_flip_rejected_on_catchup_frames():
+    for msg in (SnapshotChunk(1, 1, 2, 9, members=(0, 1, 2), chunk=0,
+                              nchunks=1, data=(("kv", 3, "v", 1),)),
+                LogSuffix(4, from_round=2,
+                          entries=((3, 1, "d" * 16, ()),))):
+        sample = encode(msg)
+        for pos in range(len(sample)):
+            for bit in range(8):
+                mut = bytearray(sample)
+                mut[pos] ^= 1 << bit
+                with pytest.raises(WireDecodeError):
+                    decode(bytes(mut))
 
 
 def test_frame_too_large_rejected_before_allocation():
@@ -275,12 +333,21 @@ if HAVE_HYPOTHESIS:
         max_leaves=20)
     u32 = st.integers(min_value=0, max_value=2**32 - 1)   # ids/epochs/eons
     u64 = st.integers(min_value=0, max_value=2**64 - 1)   # round/seq counters
+    i64 = st.integers(min_value=-(2**63), max_value=2**63 - 1)
     messages = st.one_of(
         st.builds(Message, st.sampled_from(list(MsgKind)), u32, u32, u64,
                   payload=values, eon=u32),
         st.builds(FailNotification, u32, u32, eon=u32),
         st.builds(Heartbeat, u32, u64, eon=u32),
-        st.builds(PartitionMarker, st.booleans(), u32, u32, u64))
+        st.builds(PartitionMarker, st.booleans(), u32, u32, u64),
+        st.builds(SnapshotRequest, u32, applied_round=i64),
+        st.builds(SnapshotChunk, u32, u32, u32, u64,
+                  members=st.lists(u32, max_size=4).map(tuple),
+                  chunk=st.just(0),
+                  nchunks=st.integers(min_value=1, max_value=5),
+                  data=values),
+        st.builds(LogSuffix, u32, from_round=i64,
+                  entries=st.lists(values, max_size=3).map(tuple)))
 
     @settings(max_examples=300, deadline=None)
     @given(msg=messages, n=st.integers(min_value=0, max_value=256))

@@ -1,0 +1,72 @@
+"""Observability overhead: zero-when-off, bounded-when-on — measured.
+
+The obs layer's contract (``src/repro/obs/README.md``) is that a harness
+built with ``obs=None`` pays only dormant ``is None`` guards, and a fully
+instrumented run (trace recorder + metrics registry + wire observer) stays
+under 2x the uninstrumented wall time.  This bench runs the same seeded
+``Cluster(codec=True)`` workload both ways (best-of-``repeats`` wall time to
+tame scheduler noise) and emits one row:
+
+* ``us_per_call`` — tracing-*disabled* wall microseconds per delivered
+  round.  Flagged ``wall_clock=1``, so :mod:`scripts.check_bench` applies
+  its looser wall band; a regression here means the dormant guards got
+  expensive, which is exactly what the gate must catch.
+* ``overhead_x`` — tracing-*enabled* / disabled wall-time ratio.  The bench
+  itself enforces ``overhead_x < 2``; CI fails on the spot if tracing gets
+  heavy, no baseline comparison needed.
+
+The simulated protocol schedule is identical in both runs (tracing adds no
+simulated time and consumes no RNG draws), so every deterministic bench row
+elsewhere is untouched by instrumentation.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.cluster import Cluster
+from repro.obs import Observability
+
+from .common import emit
+
+MAX_OVERHEAD_X = 2.0
+
+
+def _run_once(rounds: int, obs) -> None:
+    cluster = Cluster(8, codec=True, seed=7, obs=obs)
+    cluster.start()
+    done = cluster.run_until(
+        lambda: cluster.min_delivered_rounds() >= rounds)
+    if not done:
+        raise RuntimeError("obs_overhead workload did not complete")
+
+
+def _best_wall(rounds: int, repeats: int, make_obs) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        obs = make_obs()
+        t0 = time.perf_counter()
+        _run_once(rounds, obs)
+        dt = time.perf_counter() - t0
+        if obs is not None:
+            obs.uninstall_wire()    # the codec hook is module-global
+        best = min(best, dt)
+    return best
+
+
+def main(full: bool = False) -> None:
+    rounds = 40 if full else 15
+    repeats = 5 if full else 3
+    t_off = _best_wall(rounds, repeats, lambda: None)
+    t_on = _best_wall(rounds, repeats, Observability)
+    overhead = t_on / t_off
+    emit("obs_overhead", t_off * 1e6 / rounds,
+         f"overhead_x={overhead:.2f};on_ms={t_on*1e3:.1f};"
+         f"off_ms={t_off*1e3:.1f};rounds={rounds};wall_clock=1")
+    if overhead >= MAX_OVERHEAD_X:
+        raise RuntimeError(
+            f"observability overhead {overhead:.2f}x >= "
+            f"{MAX_OVERHEAD_X}x allowed (off={t_off:.3f}s on={t_on:.3f}s)")
+
+
+if __name__ == "__main__":
+    main(full=True)

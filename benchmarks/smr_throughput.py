@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import time
 
+from repro.obs import Observability
+from repro.obs.work import work_from_harness
 from repro.sim import build_smr_simulation, schedule_membership_change
 from repro.smr import WorkloadConfig
 
@@ -34,10 +36,13 @@ def run_smr(algo: str, n: int, *, batch_max: int, read_ratio: float,
     cfg = WorkloadConfig(num_clients=num_clients, read_ratio=read_ratio,
                          distribution="zipfian", arrival="closed", seed=seed,
                          linearizable_reads=linearizable)
+    # metrics-only observability: counters feed the msgs/bytes-per-delivery
+    # columns at O(1) cost; the full trace recorder stays off in benches
+    obs = Observability(trace=False)
     sim, smr, services = build_smr_simulation(
         algo, n, workload=cfg, requests_per_client=requests_per_client,
         batch_max=batch_max, network=network, stale_bound=4,
-        client_failover=client_failover)
+        client_failover=client_failover, obs=obs)
     if add_server_at is not None:
         schedule_membership_change(sim, services, add_server_at, add=n, via=1)
     crashed = set()
@@ -69,12 +74,15 @@ def main(full: bool = False) -> None:
     for algo in ALGOS:
         # ---- scaling in n (fixed batch, mixed workload) --------------------
         for n in ns:
-            _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+            sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
                                 num_clients=clients_per_server * n,
                                 requests_per_client=rpc)
+            work = work_from_harness(sim)
             emit(f"smr_{algo}_scale_n{n}", smr.p50() * 1e6,
                  f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
                  f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
+                 f"msgs_per_delivery={work['msgs_per_delivery']:.2f};"
+                 f"bytes_per_delivery={work['bytes_per_delivery']:.0f};"
                  f"wall_s={wall:.1f}")
         # ---- batch-size sweep (client population scales with batch) -------
         n = ns[0]

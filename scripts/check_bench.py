@@ -6,8 +6,12 @@ Usage::
     python scripts/check_bench.py FRESH.json [--baseline BENCH_ci.json]
     python scripts/check_bench.py FRESH.json --update-baseline
 
-Rows are matched by ``name``.  The gate fails (exit 1) when, on any row
-present in both files:
+Rows are matched by ``name``.  Only ``us_per_call``, ``speedup_x`` and the
+``wall_clock`` flag are interpreted — any other field a bench emits
+(``msgs_per_delivery``, ``overhead_x``, future columns) is carried for
+humans and ignored by the gate, on either side of the comparison, so
+benches can grow new derived columns without invalidating the committed
+baseline.  The gate fails (exit 1) when, on any row present in both files:
 
 * ``us_per_call`` regresses by more than ``--max-us-regress`` (default 25%),
 * ``speedup_x`` drops by more than ``--max-speedup-drop`` (default 20%),

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Staged CI pipeline.  Run everything:        scripts/ci.sh
 #                      Run a single stage:    scripts/ci.sh <stage>
-# Stages (fail-fast, in order): lint tier1 kernels-smoke wire-fuzz-smoke bench
+# Stages (fail-fast, in order):
+#   lint tier1 kernels-smoke wire-fuzz-smoke obs-smoke membership-chaos bench
 #
 # Slow tests (>60 s) stay behind pytest --runslow and are not part of this
 # default gate.  The bench stage writes BENCH_ci.fresh.json (gitignored) and
@@ -55,6 +56,19 @@ stage_wire_fuzz_smoke() {
   python -m repro.wire.fuzz --time 10 --corpus tests/corpus/wire
 }
 
+stage_obs_smoke() {
+  echo "== obs-smoke: traced eon-flip run -> trace_report + invariant check =="
+  local tmp
+  tmp="$(mktemp -d)"
+  trap 'rm -rf "$tmp"; trap - RETURN' RETURN
+  # examples/trace_run.py drives a codec cluster through a crash + an
+  # add_server eon flip with full observability, writing JSONL + Chrome
+  # trace; trace_report re-derives work and re-proves safety from the file
+  python examples/trace_run.py "$tmp"
+  python scripts/trace_report.py "$tmp/trace_run.jsonl"
+  python scripts/trace_report.py "$tmp/trace_run.jsonl" --check
+}
+
 stage_membership_chaos() {
   echo "== membership-chaos: slow-marked chaos suite (time-boxed 600 s) =="
   # randomized schedules interleaving writes, crashes and add/remove
@@ -64,8 +78,11 @@ stage_membership_chaos() {
 }
 
 stage_bench() {
-  echo "== bench: SMR throughput + vectorized sweep (CI size) =="
-  python -m benchmarks.run --only smr,sweep_vec --json BENCH_ci.fresh.json
+  echo "== bench: SMR throughput + vectorized sweep + obs overhead (CI size) =="
+  # --json merges by row name into an existing file; start from scratch so
+  # the gate sees exactly this run
+  rm -f BENCH_ci.fresh.json
+  python -m benchmarks.run --only smr,sweep_vec,obs --json BENCH_ci.fresh.json
   echo "== bench-regression gate (vs committed BENCH_ci.json) =="
   # CHECK_BENCH_FLAGS loosens the wall-clock-sensitive bounds on foreign
   # hardware (the GitHub workflow sets it); unset = full strictness on the
@@ -77,7 +94,8 @@ stage_bench() {
   python -c "import json; [print(' ', r['name'], {k: v for k, v in r.items() if k != 'name'}) for r in json.load(open('BENCH_ci.fresh.json'))]"
 }
 
-ALL_STAGES=(lint tier1 kernels-smoke wire-fuzz-smoke membership-chaos bench)
+ALL_STAGES=(lint tier1 kernels-smoke wire-fuzz-smoke obs-smoke
+            membership-chaos bench)
 
 run_stage() {
   case "$1" in
@@ -85,6 +103,7 @@ run_stage() {
     tier1)            stage_tier1 ;;
     kernels-smoke)    stage_kernels_smoke ;;
     wire-fuzz-smoke)  stage_wire_fuzz_smoke ;;
+    obs-smoke)        stage_obs_smoke ;;
     membership-chaos) stage_membership_chaos ;;
     bench)            stage_bench ;;
     *) echo "unknown stage: $1 (choose from: ${ALL_STAGES[*]})" >&2; exit 2 ;;

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Render a recorded protocol trace: spans, work table, safety check.
+
+Usage::
+
+    python scripts/trace_report.py TRACE.jsonl            # full report
+    python scripts/trace_report.py TRACE.jsonl --check    # invariants only
+    python scripts/trace_report.py TRACE.jsonl --work     # work table only
+    python scripts/trace_report.py TRACE.jsonl --slowest 8
+
+Input is the JSONL written by ``TraceRecorder.to_jsonl`` (one event object
+per line).  The full report prints, in order: the event census, the
+lifecycle timeline (crashes, failure notifications, eon flips, joins,
+catch-up, installs), the work-per-broadcast accounting, the slowest rounds
+by completion span, and the atomic-broadcast invariant-check verdict.
+
+Exit codes: 0 = report rendered (and, when checking, all invariants hold);
+2 = an invariant failed — the diagnostic line starts with the stable typed
+code (``[agreement]``, ``[duplicate_delivery]``, ...) so CI logs are
+greppable; 1 = bad input / usage.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from collections import Counter
+from typing import Any, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.check import TraceInvariantError, check_trace   # noqa: E402
+from repro.obs.trace import load_jsonl                         # noqa: E402
+from repro.obs.work import work_from_trace                     # noqa: E402
+
+#: lifecycle events worth a timeline line each (send/recv/transition/abcast/
+#: deliver are bulk traffic — they appear in the census and tables instead)
+LIFECYCLE = ("crash", "fd", "fail_notify", "eon_flip", "join_begin",
+             "catchup_send", "catchup_install", "install", "smr_batch")
+
+
+def _census(events: List[Dict[str, Any]]) -> None:
+    counts = Counter(ev.get("ev") for ev in events)
+    sids = sorted({ev.get("sid") for ev in events if ev.get("sid") is not None})
+    t0 = min((ev.get("t", 0.0) for ev in events), default=0.0)
+    t1 = max((ev.get("t", 0.0) for ev in events), default=0.0)
+    print(f"trace: {len(events)} events, {len(sids)} servers "
+          f"(sid {sids[0]}..{sids[-1]}), clock span {t0:g} .. {t1:g}")
+    row = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"  {row}")
+
+
+def _timeline(events: List[Dict[str, Any]], limit: int = 40) -> None:
+    rows = [ev for ev in events if ev.get("ev") in LIFECYCLE
+            and ev.get("ev") != "smr_batch"]
+    if not rows:
+        print("lifecycle: none (failure-free static-membership run)")
+        return
+    print(f"lifecycle ({len(rows)} events"
+          + (f", first {limit}" if len(rows) > limit else "") + "):")
+    for ev in rows[:limit]:
+        kind, sid = ev["ev"], ev.get("sid")
+        detail = {k: v for k, v in ev.items() if k not in ("t", "ev", "sid")}
+        body = ", ".join(f"{k}={v}" for k, v in detail.items())
+        print(f"  t={ev.get('t', 0.0):<12g} s{sid:<3} {kind:<16} {body}")
+
+
+def _work(events: List[Dict[str, Any]], slowest: int) -> None:
+    w = work_from_trace(events)
+    print(f"work: {w.delivered} delivered broadcasts, "
+          f"{w.msgs_sent} protocol sends "
+          f"(G_U {w.msgs_gu} / G_R {w.msgs_gr}), "
+          f"{w.overhead_msgs} overhead (FN/markers/heartbeats), "
+          f"{w.catchup_msgs} catch-up")
+    print(f"  msgs_per_delivery  = {w.msgs_per_delivery:.2f}")
+    if w.have_bytes:
+        print(f"  bytes_per_delivery = {w.bytes_per_delivery:.1f}")
+    fanouts = [bw.max_fanout for bw in w.broadcasts.values() if bw.sends]
+    if fanouts:
+        print(f"  relay fan-out: max {max(fanouts)}, "
+              f"mean {sum(fanouts)/len(fanouts):.2f}")
+    rows = w.slowest_rounds(slowest)
+    if rows:
+        print(f"slowest {len(rows)} rounds by completion span:")
+        for r in rows:
+            print(f"  eon {r['eon']} round {r['round']:<6} "
+                  f"kinds={r['kinds']:<12} msgs={r['msgs']:<6} "
+                  f"srcs={r['srcs']:<3} span={r['span']:g}")
+
+
+def _check(events: List[Dict[str, Any]]) -> int:
+    try:
+        report = check_trace(events)
+    except TraceInvariantError as exc:
+        print(f"[{exc.code}] INVARIANT VIOLATION: {exc}", file=sys.stderr)
+        return 2
+    print(f"invariants: {report}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace file (TraceRecorder.to_jsonl)")
+    ap.add_argument("--check", action="store_true",
+                    help="run only the invariant checker (exit 2 on violation)")
+    ap.add_argument("--work", action="store_true",
+                    help="print only the work-per-broadcast table")
+    ap.add_argument("--slowest", type=int, default=5, metavar="K",
+                    help="rows in the slowest-rounds table (default 5)")
+    args = ap.parse_args(argv)
+
+    try:
+        events = load_jsonl(args.trace)
+    except (OSError, ValueError) as exc:
+        print(f"trace_report: cannot read {args.trace}: {exc}",
+              file=sys.stderr)
+        return 1
+    if not events:
+        print(f"trace_report: {args.trace} holds no events", file=sys.stderr)
+        return 1
+
+    if args.check:
+        return _check(events)
+    if args.work:
+        _work(events, args.slowest)
+        return 0
+    _census(events)
+    _timeline(events)
+    _work(events, args.slowest)
+    return _check(events)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,6 +41,7 @@ class Cluster:
         on_deliver_fn: Optional[Callable[[int, DeliveryRecord], None]] = None,
         seed: int = 0,
         codec: bool = False,
+        obs: Optional[Any] = None,
     ):
         self.codec = codec
         self.wire_frames = 0          # frames round-tripped (codec=True)
@@ -50,6 +51,25 @@ class Cluster:
             # is itself imported while the core package initializes
             from ..wire import decode as _wire_decode, encode as _wire_encode
             self._wire_encode, self._wire_decode = _wire_encode, _wire_decode
+        # observability (repro.obs.Observability, or None = zero overhead):
+        # the recorder gets the step counter as its logical clock; sends are
+        # recorded at drain, receives (with bytes when codec=True) at step
+        self.obs = obs
+        self._rec = obs.recorder if obs is not None else None
+        if self._rec is not None:
+            self._rec.clock = lambda: float(self.steps)
+        if obs is not None and obs.registry is not None:
+            reg = obs.registry
+            self._c_msgs = reg.counter("cluster.msgs_sent")
+            self._c_over = reg.counter("cluster.overhead_msgs_sent")
+            self._c_app = reg.counter("cluster.app_msgs_sent")
+            self._c_bytes = reg.counter("cluster.bytes_sent")
+            self._c_steps = reg.counter("cluster.steps")
+            self._c_fd = reg.counter("cluster.fd_events")
+            if codec:
+                obs.install_wire()
+        else:
+            self._c_msgs = None
         self.n = n
         self.members = list(range(n))
         self.rng = random.Random(seed)
@@ -70,6 +90,11 @@ class Cluster:
                 f=f,
                 primary_partition=primary_partition,
             )
+        if obs is not None:
+            from ..obs.trace import mdesc as _mdesc
+            self._mdesc = _mdesc
+            for srv in self.servers.values():
+                obs.attach_server(srv)
         self.channels: Dict[Tuple[int, int], deque] = {}
         self.crashed: Set[int] = set()
         # delivered FD events, keyed (target, det, det's eon): failure
@@ -94,10 +119,24 @@ class Cluster:
             if allow is None:
                 return
             out = out[:allow]
+        rec = self._rec
+        count = self._c_msgs is not None
         for dst, msg in out:
             if dst == server.sid:
                 continue
             self.channels.setdefault((server.sid, dst), deque()).append(msg)
+            if rec is not None or count:
+                d = self._mdesc(msg)
+                if count:
+                    g = d["g"]
+                    if d["m"] == "msg":
+                        self._c_msgs.inc()
+                    elif g == "app":
+                        self._c_app.inc()
+                    else:
+                        self._c_over.inc()
+                if rec is not None:
+                    rec.emit("send", server.sid, dst=dst, **d)
 
     # ---------------------------------------------------------------- control
     def crash(self, sid: int, partial_sends: Optional[int] = None) -> None:
@@ -112,6 +151,8 @@ class Cluster:
         self._drain(srv, allow=(partial_sends if partial_sends is not None else None))
         self.crashed.add(sid)
         srv.outbox = []
+        if self._rec is not None:
+            self._rec.emit("crash", sid, partial_sends=partial_sends)
 
     def add_server(self, server: "AllConcurServer") -> None:
         """Register a dynamically added (joining) server.  For a recovering
@@ -119,6 +160,8 @@ class Cluster:
         bookkeeping are cleared so a later crash is detected afresh."""
         sid = server.sid
         self.servers[sid] = server
+        if self.obs is not None:
+            self.obs.attach_server(server)
         if sid not in self.members:
             self.members.append(sid)
         self.crashed.discard(sid)
@@ -166,11 +209,22 @@ class Cluster:
         if kind == "msg":
             src, dst = pick
             msg = self.channels[(src, dst)].popleft()
+            nbytes = None
             if self.codec:
                 frame = self._wire_encode(msg, n=self.n)
                 self.wire_frames += 1
                 self.wire_bytes += len(frame)
+                nbytes = len(frame)
                 msg = self._wire_decode(frame)
+            if self._c_msgs is not None:
+                self._c_steps.inc()
+                if nbytes is not None:
+                    self._c_bytes.inc(nbytes)
+            if self._rec is not None:
+                d = self._mdesc(msg)
+                if nbytes is not None:
+                    d["bytes"] = nbytes
+                self._rec.emit("recv", dst, src=src, **d)
             srv = self.servers[dst]
             if not srv.halted:
                 srv.on_message(msg)
@@ -179,6 +233,10 @@ class Cluster:
             target, det = pick
             srv = self.servers[det]
             self.fd_done.add((target, det, srv.eon))
+            if self._c_msgs is not None:
+                self._c_fd.inc()
+            if self._rec is not None:
+                self._rec.emit("fd", det, target=target)
             if not srv.halted and det not in self.crashed:
                 srv.on_failure_detected(target)
                 self._drain(srv)

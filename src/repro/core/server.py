@@ -20,6 +20,7 @@ Optional features (paper §III-H, §III-I, Appendix C):
 from __future__ import annotations
 
 import enum
+import zlib
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -139,6 +140,12 @@ class AllConcurServer:
         self.joining = joining
         self._join_buffer: List[Any] = []
 
+        # observability (repro.obs): ``tracer`` is a TraceRecorder (or None),
+        # ``obs_counters`` a dict of registry counters shared cluster-wide.
+        # Both default to None so the disabled cost is one identity check.
+        self.tracer: Optional[Any] = None
+        self.obs_counters: Optional[Dict[str, Any]] = None
+
         self.halted = False              # not in surviving partition / removed
 
     # ------------------------------------------------------------------ api
@@ -195,6 +202,9 @@ class AllConcurServer:
         kind = (MsgKind.RBCAST if self.rtype == RoundType.RELIABLE else MsgKind.BCAST)
         m = Message(kind, self.sid, self.epoch, self.round,
                     payload=self.payload_for(self.round), eon=self.eon)
+        if self.tracer is not None:
+            self.tracer.emit("abcast", self.sid, mkind=kind.name,
+                             epoch=self.epoch, round=self.round, eon=self.eon)
         if kind == MsgKind.BCAST:
             self._broadcast_u(m)
         else:
@@ -210,8 +220,31 @@ class AllConcurServer:
         self.delivered.append(rec)
         self._delivered_rounds.add(rnd)
         self.adelivered.extend(ordered)
+        if self.obs_counters is not None:
+            self.obs_counters["rounds"].inc()
+            self.obs_counters["msgs"].inc(len(ordered))
+        if self.tracer is not None:
+            canon = repr([(m.src, m.epoch, m.round, m.kind.value, m.eon,
+                           m.payload) for m in ordered])
+            self.tracer.emit(
+                "deliver", self.sid, epoch=epoch, round=rnd,
+                rtype=rtype.name, eon=self.eon, nmsgs=len(ordered),
+                srcs=tuple(m.src for m in ordered),
+                pdig=zlib.crc32(canon.encode("utf-8", "backslashreplace")))
         if self.on_deliver_cb:
             self.on_deliver_cb(rec)
+
+    def _note_transition(self, tr: Transition) -> None:
+        """Record a state-machine transition (at the already-updated
+        [epoch, round]) — the single hook the observability layer derives
+        round lifecycle spans from."""
+        self.transitions.append((tr, self.epoch, self.round))
+        if self.obs_counters is not None:
+            self.obs_counters["transitions"].inc()
+        if self.tracer is not None:
+            self.tracer.emit("transition", self.sid, tr=tr.value,
+                             epoch=self.epoch, round=self.round,
+                             eon=self.eon, rtype=self.rtype.name)
 
     # ---------------------------------------------------------------- events
     def on_message(self, msg: Any) -> None:
@@ -338,7 +371,7 @@ class AllConcurServer:
             self.tracking.reset(self.g_r)
             self.tracking.apply_notifications([], list(self.F))
             self.round += 1
-            self.transitions.append((Transition.T_SK, self.epoch, self.round))
+            self._note_transition(Transition.T_SK)
             self._maybe_abroadcast()
             # fall through: re-handle m in the new current state (#8)
         # ---- current state [[e, r]] (#8) -----------------------------------
@@ -365,6 +398,12 @@ class AllConcurServer:
         if (target, owner) in self._fset:
             return  # duplicate copy (R-broadcast dedup)
         fn = FailNotification(target, owner, eon=self.eon)
+        if self.obs_counters is not None:
+            self.obs_counters["fails"].inc()
+        if self.tracer is not None:
+            self.tracer.emit("fail_notify", self.sid, target=target,
+                             owner=owner, eon=self.eon, epoch=self.epoch,
+                             round=self.round)
         for q in self.g_r.successors(self.sid):   # (1) send further via G_R
             self._send(q, fn)
         if self.rtype == RoundType.UNRELIABLE:
@@ -386,14 +425,14 @@ class AllConcurServer:
                 self.M_prev = pmsgs
                 self.epoch += 1
                 self.round = prnd
-                self.transitions.append((Transition.T_UR, self.epoch, self.round))
+                self._note_transition(Transition.T_UR)
             elif self.M_prev:
                 self.epoch += 1                       # T_UR: [[e+1, r-1]]
                 self.round -= 1
-                self.transitions.append((Transition.T_UR, self.epoch, self.round))
+                self._note_transition(Transition.T_UR)
             else:
                 self.epoch += 1                       # T_|>R: [[e+1, r]]
-                self.transitions.append((Transition.T_NFR, self.epoch, self.round))
+                self._note_transition(Transition.T_NFR)
             self.rtype = RoundType.RELIABLE
             self.first_unreliable = False
             self.tracking.reset(self.g_r)
@@ -446,7 +485,7 @@ class AllConcurServer:
             self.M_prev = self.M
             self.round += 1
             self.first_unreliable = False
-            self.transitions.append((Transition.T_UU, self.epoch, self.round))
+            self._note_transition(Transition.T_UU)
         # handle postponed unreliable messages: forward + install as current
         postponed = [pm for pm in self.M_next.values()
                      if pm.kind == MsgKind.BCAST and pm.src in self.ov_u]
@@ -486,7 +525,7 @@ class AllConcurServer:
         self.epoch += 1
         self.rtype = RoundType.RELIABLE
         self.first_unreliable = False
-        self.transitions.append((Transition.T_VR, self.epoch, self.round))
+        self._note_transition(Transition.T_VR)
         self.tracking.reset(self.g_r)
         # premature copies of this very transitional round (peers that
         # completed — and flipped — first) were postponed into M_next
@@ -554,7 +593,7 @@ class AllConcurServer:
             # AllConcur: next round is always reliable
             self.epoch += 1
             self.round += 1
-            self.transitions.append((Transition.T_RR, self.epoch, self.round))
+            self._note_transition(Transition.T_RR)
             self.M = {}
             self.M_next = {}
             self.tracking.apply_notifications([], list(self.F))
@@ -567,7 +606,7 @@ class AllConcurServer:
             self.round += 1
             self.rtype = RoundType.UNRELIABLE
             self.first_unreliable = True
-            self.transitions.append((Transition.T_RNF, self.epoch, self.round))
+            self._note_transition(Transition.T_RNF)
             postponed = [pm for pm in self.M_next.values()
                          if pm.kind == MsgKind.BCAST and pm.src in self.ov_u]
             self.M = {}
@@ -580,7 +619,7 @@ class AllConcurServer:
             # ---- T_RR: remaining valid notifications => reliable again -----
             self.epoch += 1
             self.round += 1
-            self.transitions.append((Transition.T_RR, self.epoch, self.round))
+            self._note_transition(Transition.T_RR)
             has_stale_unreliable = any(pm.kind == MsgKind.BCAST
                                        for pm in self.M_next.values())
             if has_stale_unreliable:
@@ -681,6 +720,10 @@ class AllConcurServer:
         self.F = []
         self._fset = set()
         self.tracking.reset(self.g_r)
+        if self.tracer is not None:
+            self.tracer.emit("eon_flip", self.sid, eon=self.eon,
+                             members=tuple(self.members), epoch=self.epoch,
+                             round=self.round)
         if self.on_eon_change is not None:
             # install point for joiners: F was just cleared, so the
             # post-transition state is deterministic — DUAL takes T_R|>
@@ -728,6 +771,10 @@ class AllConcurServer:
         self._fset = set()
         self.tracking.reset(self.g_r)
         self.joining = False
+        if self.tracer is not None:
+            self.tracer.emit("install", self.sid, eon=self.eon,
+                             members=tuple(self.members), epoch=self.epoch,
+                             round=self.round)
         self._maybe_abroadcast()
         buf, self._join_buffer = self._join_buffer, []
         for m in buf:

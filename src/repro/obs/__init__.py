@@ -1,0 +1,164 @@
+"""Protocol observability: causal tracing, metrics, work accounting.
+
+One :class:`Observability` object bundles the two collection surfaces —
+a :class:`~repro.obs.trace.TraceRecorder` (structured causal event log,
+exportable as JSONL / Chrome trace-event) and a
+:class:`~repro.obs.metrics.MetricsRegistry` (counters / gauges / fixed-
+bucket histograms) — and is threaded through every harness::
+
+    from repro.obs import Observability
+    obs = Observability()
+    cluster = Cluster(8, obs=obs)                    # schedule-randomized
+    sim, met = build_simulation("allconcur+", 8, obs=obs)   # timed
+    ...
+    obs.recorder.to_jsonl("run.jsonl")
+    obs.recorder.to_chrome("run.trace.json")         # open in Perfetto
+    from repro.obs import check_trace, work_from_trace
+    check_trace(obs.recorder.events)                 # safety from the trace
+    work_from_trace(obs.recorder.events).msgs_per_delivery
+
+Everything is **zero-overhead when disabled**: the default ``obs=None``
+leaves a single ``is None`` test on each instrumented path, no recorder or
+registry is constructed, and the wire codec's module hook stays unset.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from .check import CheckReport, TraceInvariantError, check_trace
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import TraceRecorder, load_jsonl, mdesc, msg_id, payload_digest
+from .work import (BroadcastWork, WorkSummary, work_from_harness,
+                   work_from_trace)
+
+
+class WireObserver:
+    """Adapter installed into ``repro.wire.codec``: counts frames and bytes
+    per frame kind on encode/decode, and decode errors per typed
+    :class:`~repro.wire.errors.WireDecodeError` subclass."""
+
+    __slots__ = ("registry", "_enc", "_dec", "_err")
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        self._enc: Dict[str, Counter] = {}
+        self._dec: Dict[str, Counter] = {}
+        self._err: Dict[str, Counter] = {}
+
+    def on_encode(self, kind: str, nbytes: int) -> None:
+        c = self._enc.get(kind)
+        if c is None:
+            c = self._enc[kind] = self.registry.counter(
+                "wire.frames_encoded", kind=kind)
+            self.registry.counter("wire.bytes_encoded", kind=kind)
+        c.inc()
+        self.registry.counter("wire.bytes_encoded", kind=kind).inc(nbytes)
+
+    def on_decode(self, kind: str, nbytes: int) -> None:
+        c = self._dec.get(kind)
+        if c is None:
+            c = self._dec[kind] = self.registry.counter(
+                "wire.frames_decoded", kind=kind)
+        c.inc()
+
+    def on_decode_error(self, errname: str) -> None:
+        c = self._err.get(errname)
+        if c is None:
+            c = self._err[errname] = self.registry.counter(
+                "wire.decode_errors", error=errname)
+        c.inc()
+
+
+class Observability:
+    """Bundle of trace recorder + metrics registry for one harness run."""
+
+    def __init__(self, *, trace: bool = True, metrics: bool = True):
+        self.recorder: Optional[TraceRecorder] = (
+            TraceRecorder() if trace else None)
+        self.registry: Optional[MetricsRegistry] = (
+            MetricsRegistry() if metrics else None)
+        self._server_counters: Optional[Dict[str, Counter]] = None
+        self._service_counters: Optional[Dict[str, Counter]] = None
+        self._wire_installed = False
+
+    # ------------------------------------------------------------ attachment
+    def server_counters(self) -> Optional[Dict[str, Counter]]:
+        """Cluster-wide server counters (shared by every attached server);
+        per-server breakdowns come from the trace, not the registry."""
+        if self.registry is None:
+            return None
+        if self._server_counters is None:
+            reg = self.registry
+            self._server_counters = {
+                "rounds": reg.counter("server.rounds_delivered"),
+                "msgs": reg.counter("server.msgs_delivered"),
+                "transitions": reg.counter("server.transitions"),
+                "fails": reg.counter("server.fail_notifications"),
+            }
+        return self._server_counters
+
+    def attach_server(self, srv: Any) -> None:
+        """Wire an :class:`~repro.core.server.AllConcurServer` (tracer hook
+        + shared counters)."""
+        if self.recorder is not None:
+            srv.tracer = self.recorder
+        counters = self.server_counters()
+        if counters is not None:
+            srv.obs_counters = counters
+
+    def attach_service(self, svc: Any) -> None:
+        """Wire an :class:`~repro.smr.service.SMRService` (tracer hook +
+        shared service-layer counters)."""
+        svc.obs = self
+        if self.recorder is not None:
+            svc.tracer = self.recorder
+        if self.registry is not None:
+            if self._service_counters is None:
+                reg = self.registry
+                self._service_counters = {
+                    "batches": reg.counter("smr.batches"),
+                    "batched_reqs": reg.counter("smr.batched_requests"),
+                    "applies": reg.counter("smr.rounds_applied"),
+                    "acked": reg.counter("smr.requests_acked"),
+                    "dups": reg.counter("smr.duplicates_dropped"),
+                    "invalid": reg.counter("smr.invalid_dropped"),
+                }
+            svc.obs_counters = self._service_counters
+
+    def install_wire(self) -> None:
+        """Install the codec-level frame/byte/error counters (module-global
+        hook in ``repro.wire.codec`` — one codec, one observer)."""
+        if self.registry is None or self._wire_installed:
+            return
+        from ..wire import codec
+        codec.set_observer(WireObserver(self.registry))
+        self._wire_installed = True
+
+    def uninstall_wire(self) -> None:
+        if not self._wire_installed:
+            return
+        from ..wire import codec
+        codec.set_observer(None)
+        self._wire_installed = False
+
+    # ------------------------------------------------------------ inspection
+    def work(self) -> WorkSummary:
+        """Trace-derived work table for everything recorded so far."""
+        if self.recorder is None:
+            raise ValueError("work() needs the trace recorder enabled")
+        return work_from_trace(self.recorder.events)
+
+    def check(self) -> CheckReport:
+        """Run the atomic-broadcast invariant checker over the trace."""
+        if self.recorder is None:
+            raise ValueError("check() needs the trace recorder enabled")
+        return check_trace(self.recorder.events)
+
+
+__all__ = [
+    "BroadcastWork", "CheckReport", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "Observability", "TraceInvariantError",
+    "TraceRecorder", "WireObserver", "WorkSummary", "check_trace",
+    "load_jsonl", "mdesc", "msg_id", "payload_digest", "work_from_harness",
+    "work_from_trace",
+]

@@ -1,0 +1,197 @@
+"""Trace-based atomic-broadcast invariant checker.
+
+Verifies the safety properties of atomic broadcast from a recorded trace
+*alone* — no access to in-memory server state — so the same checks run on a
+live harness, on a JSONL file from another process, or in CI on a trace a
+benchmark produced:
+
+* **agreement / total order** — every pair of servers that A-delivered the
+  same round delivered the same message set with the same payload digest,
+  and each server's delivered rounds are strictly increasing (so the per-
+  round agreement lifts to a total order on the concatenated streams);
+* **exactly-once** — no server delivers a round twice, and no ``(src,
+  round)`` broadcast appears twice in one server's delivered stream;
+* **eon freshness** — a server never delivers a round tagged with an eon
+  older than the last eon it flipped to (no delivery from a stale eon),
+  and its eon tags never decrease;
+* **validity plumbing** — every delivered broadcast source was a member
+  the deliverer knew (src appears in ``srcs`` ⊆ last known membership, when
+  membership is recorded via ``eon_flip`` events).
+
+Violations raise :class:`TraceInvariantError` carrying a stable ``code``
+(``agreement`` / ``total_order`` / ``duplicate_delivery`` / ``stale_eon`` /
+``unknown_member`` / ``malformed_event``) — a typed diagnostic, not a bare
+assert — and :func:`check_trace` returns a :class:`CheckReport` summarizing
+what was verified when everything holds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+#: stable diagnostic codes (the CLI exit path prints these verbatim)
+CODES = ("agreement", "total_order", "duplicate_delivery", "stale_eon",
+         "unknown_member", "malformed_event")
+
+
+class TraceInvariantError(AssertionError):
+    """A safety property failed to verify from the trace."""
+
+    def __init__(self, code: str, detail: str, *,
+                 sid: Optional[int] = None,
+                 round: Optional[int] = None):
+        if code not in CODES:
+            raise ValueError(f"unknown diagnostic code {code!r}")
+        self.code = code
+        self.sid = sid
+        self.round = round
+        super().__init__(f"[{code}] {detail}")
+
+
+@dataclass
+class CheckReport:
+    """What the checker verified (all-clear summary)."""
+    servers: List[int] = field(default_factory=list)
+    rounds_checked: int = 0
+    deliveries: int = 0
+    pairwise_agreements: int = 0
+    eon_flips: int = 0
+    max_eon: int = 0
+
+    def __str__(self) -> str:
+        return (f"OK: {self.deliveries} deliveries across "
+                f"{len(self.servers)} servers, {self.rounds_checked} rounds "
+                f"agreement-checked ({self.pairwise_agreements} pairwise), "
+                f"{self.eon_flips} eon flips (max eon {self.max_eon})")
+
+
+def _iter_norm(events: Iterable[Any]):
+    """Yield (t, kind, sid, fields) from recorder tuples or JSONL dicts."""
+    for ev in events:
+        if isinstance(ev, dict):
+            yield ev.get("t", 0.0), ev.get("ev"), ev.get("sid"), ev
+        else:
+            yield ev
+
+
+def check_trace(events: Iterable[Any]) -> CheckReport:
+    """Run every invariant over a trace; raise :class:`TraceInvariantError`
+    on the first violation, return a :class:`CheckReport` otherwise."""
+    report = CheckReport()
+    # per server: delivered rounds in order, round -> (srcs, pdig, eon)
+    seq: Dict[int, List[int]] = {}
+    by_round: Dict[int, Dict[int, Tuple[Tuple[int, ...], Any, int]]] = {}
+    srcs_seen: Dict[int, set] = {}
+    cur_eon: Dict[int, int] = {}
+    members: Dict[int, Optional[set]] = {}
+
+    for t, kind, sid, fields in _iter_norm(events):
+        if kind == "eon_flip":
+            eon = fields.get("eon")
+            if eon is None:
+                raise TraceInvariantError(
+                    "malformed_event", f"eon_flip without eon at t={t}",
+                    sid=sid)
+            prev = cur_eon.get(sid, 0)
+            if eon < prev:
+                raise TraceInvariantError(
+                    "stale_eon",
+                    f"server {sid} flipped backwards: eon {prev} -> {eon}",
+                    sid=sid)
+            cur_eon[sid] = eon
+            mem = fields.get("members")
+            members[sid] = set(mem) if mem is not None else None
+            report.eon_flips += 1
+            report.max_eon = max(report.max_eon, eon)
+        elif kind in ("catchup_install", "install"):
+            # a joiner adopts the flip state wholesale
+            eon = fields.get("eon")
+            if eon is not None:
+                cur_eon[sid] = eon
+                report.max_eon = max(report.max_eon, eon)
+            mem = fields.get("members")
+            if mem is not None:
+                members[sid] = set(mem)
+        elif kind == "deliver":
+            rnd = fields.get("round")
+            srcs = fields.get("srcs")
+            if rnd is None or srcs is None:
+                raise TraceInvariantError(
+                    "malformed_event",
+                    f"deliver event missing round/srcs at t={t}", sid=sid)
+            srcs = tuple(srcs)
+            pdig = fields.get("pdig")
+            eon = fields.get("eon", 0)
+            report.deliveries += 1
+
+            # ---- exactly-once ------------------------------------------
+            my_rounds = seq.setdefault(sid, [])
+            my_by_round = by_round.setdefault(sid, {})
+            if rnd in my_by_round:
+                raise TraceInvariantError(
+                    "duplicate_delivery",
+                    f"server {sid} delivered round {rnd} twice",
+                    sid=sid, round=rnd)
+            my_srcs = srcs_seen.setdefault(sid, set())
+            for src in srcs:
+                if (src, rnd) in my_srcs:
+                    raise TraceInvariantError(
+                        "duplicate_delivery",
+                        f"server {sid} delivered broadcast (src={src}, "
+                        f"round={rnd}) twice", sid=sid, round=rnd)
+                my_srcs.add((src, rnd))
+
+            # ---- total order: rounds strictly increase -----------------
+            if my_rounds and rnd <= my_rounds[-1]:
+                raise TraceInvariantError(
+                    "total_order",
+                    f"server {sid} delivered round {rnd} after round "
+                    f"{my_rounds[-1]}", sid=sid, round=rnd)
+
+            # ---- eon freshness -----------------------------------------
+            known = cur_eon.get(sid, 0)
+            if eon < known:
+                raise TraceInvariantError(
+                    "stale_eon",
+                    f"server {sid} delivered round {rnd} from eon {eon} "
+                    f"after flipping to eon {known}", sid=sid, round=rnd)
+
+            # ---- membership validity -----------------------------------
+            mem = members.get(sid)
+            if mem is not None:
+                bad = [s for s in srcs if s not in mem]
+                if bad:
+                    raise TraceInvariantError(
+                        "unknown_member",
+                        f"server {sid} delivered round {rnd} from non-"
+                        f"members {bad} (view {sorted(mem)})",
+                        sid=sid, round=rnd)
+
+            # ---- agreement with every earlier deliverer of this round --
+            for other, other_by_round in by_round.items():
+                if other == sid:
+                    continue
+                got = other_by_round.get(rnd)
+                if got is None:
+                    continue
+                osrcs, opdig, _oeon = got
+                if osrcs != srcs:
+                    raise TraceInvariantError(
+                        "agreement",
+                        f"round {rnd}: server {sid} delivered srcs={srcs} "
+                        f"but server {other} delivered srcs={osrcs}",
+                        sid=sid, round=rnd)
+                if pdig is not None and opdig is not None and pdig != opdig:
+                    raise TraceInvariantError(
+                        "agreement",
+                        f"round {rnd}: payload digest mismatch between "
+                        f"servers {sid} ({pdig}) and {other} ({opdig})",
+                        sid=sid, round=rnd)
+                report.pairwise_agreements += 1
+
+            my_rounds.append(rnd)
+            my_by_round[rnd] = (srcs, pdig, eon)
+
+    report.servers = sorted(seq)
+    report.rounds_checked = len({r for m in by_round.values() for r in m})
+    return report

@@ -1,0 +1,174 @@
+"""Metrics registry: counters, gauges, fixed-bucket histograms.  No deps.
+
+Naming scheme (``src/repro/obs/README.md``): dotted lowercase
+``<subsystem>.<noun>_<verb>`` — e.g. ``sim.msgs_sent``, ``cluster.bytes_sent``,
+``server.rounds_delivered``, ``smr.reqs_applied``, ``wire.frames_encoded``,
+``membership.catchup_served``.  Dimensions ride as labels
+(``registry.counter("wire.frames_decoded", kind="Message")``); a metric's
+identity is ``(name, sorted(labels))``.
+
+Hot-path discipline: instrumented components fetch their ``Counter`` objects
+once at attach time and call ``.inc()`` directly — the registry dict lookup
+never happens per event, and when observability is disabled the attribute
+holding the counter is ``None`` so the cost is a single identity check.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+LabelKey = Tuple[str, Tuple[Tuple[str, Any], ...]]
+
+
+class Counter:
+    """Monotonic counter."""
+
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, Any], ...] = ()):
+        self.name = name
+        self.labels = labels
+        self.value = 0
+
+    def inc(self, k: int = 1) -> None:
+        self.value += k
+
+    def __repr__(self) -> str:
+        return f"Counter({self.name}{dict(self.labels)}={self.value})"
+
+
+class Gauge:
+    """Last-write-wins value (plus running min/max)."""
+
+    __slots__ = ("name", "labels", "value", "min", "max")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, Any], ...] = ()):
+        self.name = name
+        self.labels = labels
+        self.value: float = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def set(self, v: float) -> None:
+        self.value = v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+
+DEFAULT_BUCKETS = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0)
+
+
+class Histogram:
+    """Fixed-bucket histogram: ``counts[i]`` tallies observations
+    ``<= bounds[i]``; the last slot is the +inf overflow bucket."""
+
+    __slots__ = ("name", "labels", "bounds", "counts", "total", "n")
+
+    def __init__(self, name: str, bounds: Sequence[float] = DEFAULT_BUCKETS,
+                 labels: Tuple[Tuple[str, Any], ...] = ()):
+        self.name = name
+        self.labels = labels
+        self.bounds = tuple(sorted(bounds))
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.total = 0.0
+        self.n = 0
+
+    def observe(self, v: float) -> None:
+        i = 0
+        for b in self.bounds:
+            if v <= b:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.total += v
+        self.n += 1
+
+    def mean(self) -> float:
+        return self.total / self.n if self.n else float("nan")
+
+    def quantile(self, q: float) -> float:
+        """Upper bucket bound containing the q-quantile (inf if overflow)."""
+        if not self.n:
+            return float("nan")
+        target = q * self.n
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= target:
+                return self.bounds[i] if i < len(self.bounds) else float("inf")
+        return float("inf")
+
+
+class MetricsRegistry:
+    """Get-or-create registry; snapshots export to plain dicts."""
+
+    def __init__(self) -> None:
+        self._metrics: Dict[LabelKey, Any] = {}
+
+    @staticmethod
+    def _key(name: str, labels: Mapping[str, Any]) -> LabelKey:
+        return (name, tuple(sorted(labels.items())))
+
+    def counter(self, name: str, **labels: Any) -> Counter:
+        key = self._key(name, labels)
+        m = self._metrics.get(key)
+        if m is None:
+            m = self._metrics[key] = Counter(name, key[1])
+        elif not isinstance(m, Counter):
+            raise TypeError(f"{name} already registered as {type(m).__name__}")
+        return m
+
+    def gauge(self, name: str, **labels: Any) -> Gauge:
+        key = self._key(name, labels)
+        m = self._metrics.get(key)
+        if m is None:
+            m = self._metrics[key] = Gauge(name, key[1])
+        elif not isinstance(m, Gauge):
+            raise TypeError(f"{name} already registered as {type(m).__name__}")
+        return m
+
+    def histogram(self, name: str, bounds: Sequence[float] = DEFAULT_BUCKETS,
+                  **labels: Any) -> Histogram:
+        key = self._key(name, labels)
+        m = self._metrics.get(key)
+        if m is None:
+            m = self._metrics[key] = Histogram(name, bounds, key[1])
+        elif not isinstance(m, Histogram):
+            raise TypeError(f"{name} already registered as {type(m).__name__}")
+        return m
+
+    def get(self, name: str, **labels: Any) -> Optional[Any]:
+        return self._metrics.get(self._key(name, labels))
+
+    def value(self, name: str, default: float = 0.0, **labels: Any) -> float:
+        """Counter/gauge value, or ``default`` if never registered."""
+        m = self.get(name, **labels)
+        return default if m is None else m.value
+
+    def total(self, name: str) -> float:
+        """Sum of a counter's value across all label sets."""
+        return sum(m.value for (n, _l), m in self._metrics.items()
+                   if n == name and isinstance(m, Counter))
+
+    def snapshot(self) -> List[Dict[str, Any]]:
+        out: List[Dict[str, Any]] = []
+        for (name, labels), m in sorted(self._metrics.items()):
+            row: Dict[str, Any] = {"name": name, "labels": dict(labels)}
+            if isinstance(m, Counter):
+                row["type"] = "counter"
+                row["value"] = m.value
+            elif isinstance(m, Gauge):
+                row["type"] = "gauge"
+                row["value"] = m.value
+                if m.min <= m.max:
+                    row["min"], row["max"] = m.min, m.max
+            else:
+                row["type"] = "histogram"
+                row["count"] = m.n
+                row["mean"] = m.mean()
+                row["buckets"] = {f"le_{b:g}": c
+                                  for b, c in zip(m.bounds, m.counts)}
+                row["buckets"]["le_inf"] = m.counts[-1]
+            out.append(row)
+        return out

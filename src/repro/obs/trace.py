@@ -1,0 +1,222 @@
+"""Structured trace recorder: causal spans for every protocol event.
+
+The recorder is a flat append-only event log.  Each event is
+``(t, kind, sid, fields)`` where ``t`` comes from the harness clock
+(``Simulation.now`` in seconds, or the :class:`~repro.core.cluster.Cluster`
+step counter as a logical clock), ``kind`` is one of the event names below,
+``sid`` is the server the event happened *at*, and ``fields`` is a flat
+mapping of JSON-able values.
+
+Event vocabulary (see ``src/repro/obs/README.md`` for the span model):
+
+==============  ===========================================================
+``send``        one hop queued: ``dst``, message descriptor, ``g`` (GU/GR/
+                GRT/app), ``bytes`` (when the harness accounts bytes)
+``recv``        the hop arrived and was processed at ``sid``
+``abcast``      ``sid`` originated its A-broadcast message for a round
+``deliver``     ``sid`` A-delivered a round: ``epoch``/``round``/``rtype``/
+                ``eon``/``nmsgs``/``srcs``/``pdig`` (payload digest)
+``transition``  protocol state-machine transition (``tr``: uu/rr/ur/...)
+``fail_notify`` ``sid`` accepted + R-broadcast a new failure notification
+``fd``          the local failure detector fired at ``sid`` (``target``)
+``crash``       the harness crashed ``sid``
+``eon_flip``    ``sid`` applied an eon change (``eon``, ``members``,
+                install point ``epoch``/``round``)
+``join_begin``  a joining server requested catch-up from ``seeds``
+``catchup_send``    a peer exported snapshot+suffix to ``dst``
+``catchup_install`` the joiner installed state (``eon``, ``digest``)
+``smr_batch``   the SMR service batched ``nreqs`` requests into a payload
+``smr_apply``   the SMR service applied a delivered round (``applied``,
+                ``dups``, ``invalid``, ``digest``)
+==============  ===========================================================
+
+Message descriptors (:func:`mdesc`) identify a broadcast across hops:
+``msrc``/``epoch``/``round``/``mkind``/``eon`` name the message,
+``g`` names the digraph the hop travels (BCAST -> G_U, RBCAST/FAIL/FWD ->
+G_R, BWD -> G_R transpose, catch-up traffic -> app).
+
+Zero overhead when disabled: every instrumented call site guards with
+``if tracer is not None`` on a plain attribute — no recorder object is
+ever constructed unless observability was requested.
+"""
+from __future__ import annotations
+
+import json
+import zlib
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+from ..core.messages import (FailNotification, Heartbeat, LogSuffix, Message,
+                             MsgKind, PartitionMarker, SnapshotChunk,
+                             SnapshotRequest)
+
+#: protocol message kinds whose hops count as broadcast *work* (the §IV
+#: work-per-broadcast accounting); failure notifications and markers are
+#: resilience overhead, catch-up frames are reconfiguration overhead
+WORK_KINDS = ("BCAST", "RBCAST")
+
+
+def payload_digest(msgs: Iterable[Message]) -> int:
+    """Deterministic cross-process digest of a delivered round's content —
+    what the trace-based agreement check compares across servers."""
+    canon = repr([(m.src, m.epoch, m.round, m.kind.value, m.eon, m.payload)
+                  for m in msgs])
+    return zlib.crc32(canon.encode("utf-8", "backslashreplace"))
+
+
+def mdesc(msg: Any) -> Dict[str, Any]:
+    """Flat descriptor for any transportable object (protocol message,
+    failure notification, marker, catch-up frame, app message)."""
+    if isinstance(msg, Message):
+        return {"m": "msg", "mkind": msg.kind.name, "msrc": msg.src,
+                "epoch": msg.epoch, "round": msg.round, "eon": msg.eon,
+                "g": "GU" if msg.kind == MsgKind.BCAST else "GR"}
+    if isinstance(msg, FailNotification):
+        return {"m": "fail", "target": msg.target, "owner": msg.owner,
+                "eon": msg.eon, "g": "GR"}
+    if isinstance(msg, PartitionMarker):
+        return {"m": "marker", "fwd": msg.forward, "msrc": msg.src,
+                "epoch": msg.epoch, "round": msg.round,
+                "g": "GR" if msg.forward else "GRT"}
+    if isinstance(msg, Heartbeat):
+        return {"m": "heartbeat", "msrc": msg.src, "eon": msg.eon, "g": "GR"}
+    if isinstance(msg, SnapshotRequest):
+        return {"m": "snapreq", "msrc": msg.src, "g": "app"}
+    if isinstance(msg, SnapshotChunk):
+        return {"m": "snapchunk", "msrc": msg.src, "eon": msg.eon,
+                "chunk": msg.chunk, "nchunks": msg.nchunks, "g": "app"}
+    if isinstance(msg, LogSuffix):
+        return {"m": "logsuffix", "msrc": msg.src, "g": "app"}
+    if isinstance(msg, tuple) and msg and isinstance(msg[0], str):
+        # §IV baseline wire tuples: ("lcr_m", src, round, ...) etc.
+        return {"m": "baseline", "bkind": msg[0], "g": "ring"}
+    return {"m": type(msg).__name__, "g": "app"}
+
+
+def msg_id(fields: Dict[str, Any]) -> Optional[Tuple]:
+    """Broadcast identity of a send/recv event's fields (None for hops that
+    are not protocol broadcasts — markers, catch-up, heartbeats)."""
+    if fields.get("m") == "msg":
+        return (fields["msrc"], fields["epoch"], fields["round"],
+                fields["mkind"], fields.get("eon", 0))
+    if fields.get("m") == "fail":
+        return ("fn", fields["target"], fields["owner"], fields.get("eon", 0))
+    return None
+
+
+class TraceRecorder:
+    """Append-only structured event log shared by every instrumented
+    component of one harness run."""
+
+    __slots__ = ("events", "clock")
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self.events: List[Tuple[float, str, int, Dict[str, Any]]] = []
+        self.clock: Callable[[], float] = clock if clock is not None else (
+            lambda: float(len(self.events)))
+
+    # ------------------------------------------------------------- recording
+    def emit(self, kind: str, sid: int, **fields: Any) -> None:
+        self.events.append((self.clock(), kind, sid, fields))
+
+    def emit_at(self, t: float, kind: str, sid: int, **fields: Any) -> None:
+        """Emit with an explicit timestamp (e.g. a send whose NIC-serialized
+        departure time the harness already computed)."""
+        self.events.append((t, kind, sid, fields))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def clear(self) -> None:
+        self.events.clear()
+
+    # --------------------------------------------------------------- export
+    def iter_dicts(self) -> Iterable[Dict[str, Any]]:
+        for t, kind, sid, fields in self.events:
+            row = {"t": t, "ev": kind, "sid": sid}
+            row.update(fields)
+            yield row
+
+    def to_jsonl(self, path: str) -> int:
+        """Write one JSON object per line; returns the event count."""
+        with open(path, "w") as fh:
+            for row in self.iter_dicts():
+                fh.write(json.dumps(row, default=_json_default))
+                fh.write("\n")
+        return len(self.events)
+
+    def to_chrome(self, path: str, *, time_scale: float = 1e6) -> int:
+        """Write Chrome trace-event JSON (open in Perfetto / chrome://tracing).
+
+        Rounds become duration ("X") slices per server track (tid = sid),
+        derived from consecutive ``transition`` events; everything else is an
+        instant event on the server's track.  ``time_scale`` converts the
+        recorder clock to microseconds (1e6 for the second-based simulator;
+        use 1.0 for the Cluster's step clock, one step == one "us")."""
+        out: List[Dict[str, Any]] = []
+        sids = sorted({sid for (_t, _k, sid, _f) in self.events})
+        for sid in sids:
+            out.append({"ph": "M", "pid": 1, "tid": sid,
+                        "name": "thread_name",
+                        "args": {"name": f"server {sid}"}})
+        # round slices: transition -> next transition (or last event) per sid
+        last_t = max((t for (t, _k, _s, _f) in self.events), default=0.0)
+        open_tr: Dict[int, Tuple[float, Dict[str, Any]]] = {}
+        for t, kind, sid, fields in self.events:
+            if kind != "transition":
+                continue
+            if sid in open_tr:
+                t0, f0 = open_tr[sid]
+                out.append(_round_slice(sid, t0, t, f0, time_scale))
+            open_tr[sid] = (t, fields)
+        for sid, (t0, f0) in open_tr.items():
+            out.append(_round_slice(sid, t0, last_t, f0, time_scale))
+        for t, kind, sid, fields in self.events:
+            if kind == "transition":
+                continue
+            name = kind
+            if kind in ("send", "recv"):
+                mid = msg_id(fields)
+                name = f"{kind} {fields.get('m')}" if mid is None else (
+                    f"{kind} {fields.get('mkind', 'fn')} "
+                    f"src={fields.get('msrc', fields.get('target'))} "
+                    f"r={fields.get('round', '-')}")
+            out.append({"ph": "i", "s": "t", "pid": 1, "tid": sid,
+                        "ts": t * time_scale, "name": name,
+                        "args": _json_args(fields)})
+        with open(path, "w") as fh:
+            json.dump({"traceEvents": out,
+                       "displayTimeUnit": "ms"}, fh, default=_json_default)
+        return len(out)
+
+
+def _round_slice(sid: int, t0: float, t1: float, fields: Dict[str, Any],
+                 time_scale: float) -> Dict[str, Any]:
+    name = (f"[e{fields.get('epoch')},r{fields.get('round')}] "
+            f"{fields.get('tr')}")
+    return {"ph": "X", "pid": 1, "tid": sid, "ts": t0 * time_scale,
+            "dur": max((t1 - t0), 0.0) * time_scale, "name": name,
+            "args": _json_args(fields)}
+
+
+def _json_args(fields: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: (list(v) if isinstance(v, tuple) else v)
+            for k, v in fields.items()}
+
+
+def _json_default(v: Any):
+    if isinstance(v, tuple):
+        return list(v)
+    return repr(v)
+
+
+def load_jsonl(path: str) -> List[Dict[str, Any]]:
+    """Read a trace written by :meth:`TraceRecorder.to_jsonl` back into the
+    event-dict form every analyzer (work accountant, invariant checker,
+    ``scripts/trace_report.py``) consumes."""
+    events: List[Dict[str, Any]] = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events

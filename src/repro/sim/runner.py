@@ -113,7 +113,8 @@ class Metrics:
 
 class Simulation:
     def __init__(self, servers: Dict[int, Any], net: NetworkModel,
-                 metrics: Metrics, *, fd_timeout: float = 10e-3):
+                 metrics: Metrics, *, fd_timeout: float = 10e-3,
+                 obs: Optional[Any] = None):
         self.servers = servers
         self.net = net
         self.metrics = metrics
@@ -125,12 +126,33 @@ class Simulation:
         self.crashed: Set[int] = set()
         self.crash_hooks: List[Callable[[int, float], None]] = []
         self.events_processed = 0
+        # observability (repro.obs.Observability, or None = zero overhead):
+        # the recorder's clock is the simulated time; sends carry wire bytes
+        # (the simulator sizes every frame anyway for NIC serialization)
+        self.obs = obs
+        self._rec = obs.recorder if obs is not None else None
+        if self._rec is not None:
+            self._rec.clock = lambda: self.now
+        if obs is not None and obs.registry is not None:
+            reg = obs.registry
+            self._c_msgs = reg.counter("sim.msgs_sent")
+            self._c_over = reg.counter("sim.overhead_msgs_sent")
+            self._c_app = reg.counter("sim.app_msgs_sent")
+            self._c_bytes = reg.counter("sim.bytes_sent")
+            self._c_fd = reg.counter("sim.fd_events")
+        else:
+            self._c_msgs = None
+        if obs is not None:
+            from ..obs.trace import mdesc as _mdesc
+            self._mdesc = _mdesc
 
     def register_server(self, sid: int, srv: Any) -> None:
         """Add a dynamically joining server mid-run (eon membership)."""
         self.servers[sid] = srv
         self.tx_free.setdefault(sid, 0.0)
         self.crashed.discard(sid)
+        if self.obs is not None and isinstance(srv, AllConcurServer):
+            self.obs.attach_server(srv)
 
     def post(self, t: float, kind: str, data: Any) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, data))
@@ -141,16 +163,31 @@ class Simulation:
         if limit is not None:
             out = out[:limit]
         t = max(self.now, self.tx_free[sid])
+        rec = self._rec
+        count = self._c_msgs is not None
         for dst, msg in out:
             if dst == sid:
                 # loopback (e.g., the Libpaxos proposer proposing its own
                 # message): deliver without NIC serialization
                 self.post(self.now, "recv", (dst, msg))
                 continue
-            ser = self.net.serialization(wire_size(msg, self.metrics.n), sid, dst)
-            t += ser
+            size = wire_size(msg, self.metrics.n)
+            t += self.net.serialization(size, sid, dst)
             arrive = t + self.net.propagation(sid, dst)
             self.post(arrive, "recv", (dst, msg))
+            if rec is not None or count:
+                d = self._mdesc(msg)
+                if count:
+                    if d["m"] in ("msg", "baseline"):
+                        self._c_msgs.inc()
+                    elif d["g"] == "app":
+                        self._c_app.inc()
+                    else:
+                        self._c_over.inc()
+                    self._c_bytes.inc(size)
+                if rec is not None:
+                    rec.emit_at(self.now, "send", sid,
+                                dst=dst, bytes=size, **d)
         self.tx_free[sid] = t
 
     def start(self) -> None:
@@ -179,6 +216,8 @@ class Simulation:
                 srv = self.servers[dst]
                 if getattr(srv, "halted", False):
                     continue
+                if self._rec is not None:
+                    self._rec.emit("recv", dst, **self._mdesc(msg))
                 srv.on_message(msg)
                 self.drain(dst)
             elif kind == "crash":
@@ -187,6 +226,8 @@ class Simulation:
                     continue
                 self.drain(sid, limit=partial)
                 self.crashed.add(sid)
+                if self._rec is not None:
+                    self._rec.emit("crash", sid, partial_sends=partial)
                 # perfect FD: detection by every alive server whose *own*
                 # current G_R view has the edge sid->det (views can differ
                 # transiently across an eon flip)
@@ -217,6 +258,10 @@ class Simulation:
                 srv = self.servers[det]
                 if getattr(srv, "halted", False):
                     continue
+                if self._c_msgs is not None:
+                    self._c_fd.inc()
+                if self._rec is not None:
+                    self._rec.emit("fd", det, target=target)
                 srv.on_failure_detected(target)
                 self.drain(det)
             elif kind == "call":
@@ -244,6 +289,7 @@ def build_simulation(
     fd_timeout: float = 10e-3,
     uniform: bool = False,
     primary_partition: bool = False,
+    obs: Optional[Any] = None,
 ) -> Tuple[Simulation, Metrics]:
     """algo in {allconcur+, allconcur, allconcur-ea, allgather, lcr, libpaxos}."""
     members = list(range(n))
@@ -290,8 +336,11 @@ def build_simulation(
                 f=max(dd - 1, 0),
                 primary_partition=(primary_partition or algo == "allconcur-ea"),
             )
-        sim = Simulation(servers, net, metrics, fd_timeout=fd_timeout)
+        sim = Simulation(servers, net, metrics, fd_timeout=fd_timeout, obs=obs)
         sim_holder.append(sim)
+        if obs is not None:
+            for srv in servers.values():
+                obs.attach_server(srv)
         return sim, metrics
 
     if algo in ("lcr", "libpaxos"):
@@ -310,7 +359,9 @@ def build_simulation(
         for sid in members:
             servers[sid] = cls(sid, members, batch=batch,
                                on_deliver=on_deliver, on_abcast=on_abcast)
-        sim = Simulation(servers, net, metrics, fd_timeout=fd_timeout)
+        # baseline servers have no tracer hooks; harness-level send/recv
+        # events and counters still flow through the Simulation itself
+        sim = Simulation(servers, net, metrics, fd_timeout=fd_timeout, obs=obs)
         sim_holder2.append(sim)
         return sim, metrics
 
@@ -401,6 +452,7 @@ def build_smr_simulation(
     membership: bool = True,
     client_failover: bool = False,
     failover_delay: Optional[float] = None,
+    obs: Optional[Any] = None,
 ) -> Tuple[Simulation, SMRMetrics, Dict[int, Any]]:
     """Timed end-to-end SMR deployment: AllConcur+ servers (mode from
     ``algo`` in {allconcur+, allconcur, allgather}) each hosting an
@@ -514,8 +566,12 @@ def build_smr_simulation(
         )
         services[sid].server = servers[sid]
     sim = Simulation(servers, net, Metrics(n=n, batch=batch_max),
-                     fd_timeout=fd_timeout)
+                     fd_timeout=fd_timeout, obs=obs)
     sim_holder.append(sim)
+    if obs is not None:
+        for sid in members:
+            obs.attach_server(servers[sid])
+            obs.attach_service(services[sid])
 
     # ---- client failover: re-home the clients of a dead/removed server ----
     fo_delay = failover_delay if failover_delay is not None else fd_timeout
@@ -586,6 +642,8 @@ def build_smr_simulation(
                          compact_every=compact_every,
                          stale_bound=stale_bound, on_ack=mk_ack(sid))
         services[sid] = svc
+        if obs is not None:
+            obs.attach_service(svc)
         return svc
     sim.smr_make_service = make_service
 
@@ -659,6 +717,8 @@ def schedule_membership_change(
             ref = sim.servers[target]
             mk = getattr(sim, "smr_make_service", None)
             svc = mk(add) if mk is not None else SMRService(add)
+            if mk is None and sim.obs is not None:
+                sim.obs.attach_service(svc)
             srv = AllConcurServer(
                 add, [add],
                 overlay_u=make_overlay("binomial", [add]),

@@ -125,6 +125,11 @@ class MembershipManager:
         records, entries = self.service.export_catchup()
         chunks = [records[i:i + self.chunk_records]
                   for i in range(0, len(records), self.chunk_records)] or [()]
+        if self.server.tracer is not None:
+            self.server.tracer.emit(
+                "catchup_send", self.server.sid, dst=dst, eon=eon,
+                nchunks=len(chunks), nrecords=len(records),
+                nentries=len(entries))
         for i, chunk in enumerate(chunks):
             self.server.send_app(dst, SnapshotChunk(
                 src=self.server.sid, eon=eon, epoch=epoch, round=rnd,
@@ -138,6 +143,10 @@ class MembershipManager:
     def begin_join(self, seeds: Sequence[int]) -> None:
         """Ask one or more established peers for catch-up state; the first
         complete reply wins (extras are ignored once installed)."""
+        if self.server.tracer is not None:
+            self.server.tracer.emit(
+                "join_begin", self.server.sid, seeds=tuple(seeds),
+                applied_round=self.service.applied_round)
         for s in seeds:
             self.server.send_app(s, SnapshotRequest(
                 src=self.server.sid,
@@ -189,7 +198,11 @@ class MembershipManager:
         for i in range(nchunks):
             records.extend(st["chunks"][i].data)
         head = st["chunks"][0]
-        self.service.install_catchup(tuple(records), st["entries"])
+        digest = self.service.install_catchup(tuple(records), st["entries"])
+        if self.server.tracer is not None:
+            self.server.tracer.emit(
+                "catchup_install", self.server.sid, src=src, eon=head.eon,
+                members=tuple(head.members), digest=digest)
         self.server.install_state(
             members=head.members, g_r=self.gr_builder(head.members),
             eon=head.eon, epoch=head.epoch, round=head.round)
@@ -235,6 +248,8 @@ def add_smr_server(cluster, services: Dict[int, SMRService], new_sid: int, *,
     svc.server = srv
     mgr = MembershipManager(svc, srv, d=d)
     cluster.add_server(srv)
+    if cluster.obs is not None:
+        cluster.obs.attach_service(svc)
     services[new_sid] = svc
     mgr.begin_join(seeds)
     cluster._drain(srv)

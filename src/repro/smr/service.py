@@ -91,6 +91,12 @@ class SMRService:
         self.last_result: Dict[int, Tuple[int, Any]] = {}
 
         self.server: Any = None       # optional backref for staleness bound
+        # observability hooks (set by repro.obs.Observability.attach_service;
+        # None = zero overhead): tracer records smr_batch/smr_apply spans,
+        # obs_counters are shared service-layer counters
+        self.obs: Any = None
+        self.tracer: Any = None
+        self.obs_counters: Optional[Dict[str, Any]] = None
         # membership hook: called once per applied admin command so the
         # co-located server can schedule the agreed eon change (set by
         # repro.smr.membership.MembershipManager)
@@ -147,12 +153,20 @@ class SMRService:
         are *not* removed here — they leave the queue when applied."""
         reqs = tuple((r.client_id, r.seq, dict(r.op))
                      for r in self.pending[: self.batch_max])
+        if reqs:
+            if self.obs_counters is not None:
+                self.obs_counters["batches"].inc()
+                self.obs_counters["batched_reqs"].inc(len(reqs))
+            if self.tracer is not None:
+                self.tracer.emit("smr_batch", self.sid, round=rnd,
+                                 nreqs=len(reqs))
         return {"kind": "smr", "src": self.sid, "round": rnd,
                 "batch": len(reqs), "reqs": reqs}
 
     def on_deliver(self, rec: DeliveryRecord) -> None:
         """Apply one A-delivered round deterministically."""
         self.highest_seen_round = max(self.highest_seen_round, rec.round)
+        d0, i0 = self.duplicates_dropped, self.invalid_dropped
         commands: List[Tuple[int, int, Any]] = []
         for msg in rec.msgs:          # already src-sorted (DeliveryRecord)
             payload = msg.payload
@@ -201,6 +215,17 @@ class SMRService:
                 self._ack(cid, seq, op, result, rec.round)
         self.applied_round = rec.round
         self.applied_digests[rec.round] = self.sm.digest()
+        if self.obs_counters is not None:
+            c = self.obs_counters
+            c["applies"].inc()
+            c["dups"].inc(self.duplicates_dropped - d0)
+            c["invalid"].inc(self.invalid_dropped - i0)
+        if self.tracer is not None:
+            self.tracer.emit("smr_apply", self.sid, round=rec.round,
+                             applied=len(commands),
+                             dups=self.duplicates_dropped - d0,
+                             invalid=self.invalid_dropped - i0,
+                             digest=self.sm.digest())
         self.log.append(
             LogEntry(round=rec.round, epoch=rec.epoch, digest=self.sm.digest(),
                      commands=tuple(commands)),
@@ -219,6 +244,8 @@ class SMRService:
             self._pending_uids.discard(uid)
             self.pending = [r for r in self.pending if r.uid != uid]
             self.acked += 1
+            if self.obs_counters is not None:
+                self.obs_counters["acked"].inc()
             if self.on_ack:
                 self.on_ack(ClientRequest(cid, seq, op), result, rnd)
 
@@ -353,9 +380,12 @@ def build_smr_cluster(
         on_deliver_fn=lambda sid, rec: services[sid].on_deliver(rec),
         **cluster_kwargs,
     )
+    obs = cluster_kwargs.get("obs")
     for sid, svc in services.items():
         svc.server = cluster.servers[sid]
         svc.sm.bootstrap_config(range(n))
+        if obs is not None:
+            obs.attach_service(svc)
     if membership:
         from .membership import MembershipManager
         for sid, svc in services.items():

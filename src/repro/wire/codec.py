@@ -84,6 +84,25 @@ FRAME_SNAP_REQUEST = 0x06
 FRAME_SNAP_CHUNK = 0x07
 FRAME_LOG_SUFFIX = 0x08
 
+FRAME_KIND_NAMES = {
+    FRAME_MESSAGE: "message", FRAME_FAIL: "fail",
+    FRAME_HEARTBEAT: "heartbeat", FRAME_MARKER: "marker",
+    FRAME_BASELINE: "baseline", FRAME_SNAP_REQUEST: "snap_request",
+    FRAME_SNAP_CHUNK: "snap_chunk", FRAME_LOG_SUFFIX: "log_suffix",
+}
+
+# optional codec-level observer (repro.obs.WireObserver): counts frames,
+# bytes and typed decode errors per kind.  Module-global because the codec
+# is stateless — one process, one codec, at most one observer.  ``None``
+# keeps the hot paths at a single identity test.
+_OBS: Optional[Any] = None
+
+
+def set_observer(obs: Optional[Any]) -> None:
+    """Install (or clear, with None) the codec observer."""
+    global _OBS
+    _OBS = obs
+
 _T_NONE, _T_FALSE, _T_TRUE = 0x00, 0x01, 0x02
 _T_INT, _T_FLOAT, _T_STR, _T_BYTES = 0x03, 0x04, 0x05, 0x06
 _T_LIST, _T_TUPLE, _T_DICT = 0x07, 0x08, 0x09
@@ -392,7 +411,10 @@ def encode(msg: Any, *, n: int = 0) -> bytes:
     head = bytearray((MAGIC, kind))
     _write_uvarint(head, len(body) + pad, "body length")
     frame = bytes(head) + bytes(body) + _pad(pad)
-    return frame + crc32c(frame).to_bytes(4, "little")
+    frame = frame + crc32c(frame).to_bytes(4, "little")
+    if _OBS is not None:
+        _OBS.on_encode(FRAME_KIND_NAMES[kind], len(frame))
+    return frame
 
 
 def encoded_size(msg: Any, *, n: int = 0) -> int:
@@ -438,6 +460,18 @@ def _frame_extent(buf: bytes, pos: int) -> Optional[int]:
 
 def decode_frame(buf: bytes, pos: int = 0) -> Tuple[Any, int]:
     """Decode the frame at ``pos``; return ``(message, next_pos)``."""
+    if _OBS is None:
+        return _decode_frame(buf, pos)
+    try:
+        msg, nxt = _decode_frame(buf, pos)
+    except WireDecodeError as exc:
+        _OBS.on_decode_error(type(exc).__name__)
+        raise
+    _OBS.on_decode(FRAME_KIND_NAMES.get(buf[pos + 1], "unknown"), nxt - pos)
+    return msg, nxt
+
+
+def _decode_frame(buf: bytes, pos: int = 0) -> Tuple[Any, int]:
     ext = _frame_extent(buf, pos)
     if ext is None or len(buf) - pos < ext:
         raise TruncatedFrameError("incomplete frame")

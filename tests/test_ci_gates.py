@@ -95,6 +95,40 @@ def test_check_bench_fails_on_missing_row_but_not_new_row(tmp_path):
     assert "brand_new_bench" in r.stdout
 
 
+def test_check_bench_ignores_unknown_extra_fields(tmp_path):
+    """Benches may grow new derived columns (msgs_per_delivery, overhead_x,
+    ...) on either side of the diff; the gate interprets only us_per_call /
+    speedup_x / wall_clock and must pass regardless of extras."""
+    base_rows = [dict(BASELINE[0], msgs_per_delivery=7.1, overhead_x=1.3),
+                 BASELINE[1]]
+    base = _write(tmp_path, "base.json", base_rows)
+    fresh = [dict(BASELINE[0], bytes_per_delivery=310.5,
+                  some_future_field="text"),
+             dict(BASELINE[1], msgs_per_delivery=24.0)]
+    r = _run(_write(tmp_path, "fresh.json", fresh), "--baseline", base)
+    assert r.returncode == 0, r.stderr
+
+
+def test_bench_json_merges_by_row_name(tmp_path):
+    """benchmarks.run --json refines an existing results file: fresh rows
+    replace same-named ones in place, new rows append, rows from benches
+    that did not run this time survive."""
+    if REPO not in sys.path:        # benchmarks/ is a repo-root package
+        sys.path.insert(0, REPO)
+    from benchmarks.run import merge_rows
+    existing = [{"name": "a", "us_per_call": 1.0, "old": 1},
+                {"name": "b", "us_per_call": 2.0}]
+    fresh = [{"name": "b", "us_per_call": 5.0, "new": 1},
+             {"name": "c", "us_per_call": 3.0}]
+    merged = merge_rows(existing, fresh)
+    assert [r["name"] for r in merged] == ["a", "b", "c"]
+    assert merged[0]["old"] == 1                 # untouched row survives
+    assert merged[1] == fresh[0]                 # replaced wholesale, in place
+    assert merged[2] == fresh[1]                 # new row appended
+    assert merge_rows([], fresh) == fresh
+    assert merge_rows(existing, []) == existing
+
+
 def test_check_bench_update_baseline_waiver(tmp_path):
     base = _write(tmp_path, "base.json", BASELINE)
     worse = [dict(BASELINE[0], us_per_call=400.0), BASELINE[1]]

@@ -15,6 +15,13 @@ tame scheduler noise) and emits one row:
   itself enforces ``overhead_x < 2``; CI fails on the spot if tracing gets
   heavy, no baseline comparison needed.
 
+A second, fully deterministic row ``obs_trace_density`` reports recorded
+trace events per delivered round (plus the matched-hop and delivery
+counts) from the same seeded workload.  It carries no ``wall_clock`` flag,
+so the strict bench band applies: instrumentation silently growing the
+per-round event volume — the real cost driver of tracing — fails the gate
+even when wall time hides it.
+
 The simulated protocol schedule is identical in both runs (tracing adds no
 simulated time and consumes no RNG draws), so every deterministic bench row
 elsewhere is untouched by instrumentation.
@@ -24,7 +31,7 @@ from __future__ import annotations
 import time
 
 from repro.core.cluster import Cluster
-from repro.obs import Observability
+from repro.obs import Observability, match_hops
 
 from .common import emit
 
@@ -66,6 +73,18 @@ def main(full: bool = False) -> None:
         raise RuntimeError(
             f"observability overhead {overhead:.2f}x >= "
             f"{MAX_OVERHEAD_X}x allowed (off={t_off:.3f}s on={t_on:.3f}s)")
+
+    # deterministic event-count overhead: same seeded workload, counted
+    # instead of timed, so the strict (non-wall_clock) bench band gates it
+    obs = Observability()
+    _run_once(rounds, obs)
+    obs.uninstall_wire()
+    events = obs.recorder.events
+    deliveries = sum(1 for e in events if e[1] == "deliver")
+    nhops = len(match_hops(events).hops)
+    emit("obs_trace_density", len(events) / rounds,
+         f"events={len(events)};hops={nhops};deliveries={deliveries};"
+         f"rounds={rounds}")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ from __future__ import annotations
 import time
 
 from repro.obs import Observability
+from repro.obs.critpath import critical_paths
 from repro.obs.work import work_from_harness
 from repro.sim import build_smr_simulation, schedule_membership_change
 from repro.smr import WorkloadConfig
@@ -32,13 +33,15 @@ def run_smr(algo: str, n: int, *, batch_max: int, read_ratio: float,
             num_clients: int, requests_per_client: int, network: str = "sdc",
             crash=None, max_time: float = 5.0, seed: int = 0,
             linearizable: bool = True, add_server_at=None,
-            client_failover: bool = False):
+            client_failover: bool = False, trace: bool = False):
     cfg = WorkloadConfig(num_clients=num_clients, read_ratio=read_ratio,
                          distribution="zipfian", arrival="closed", seed=seed,
                          linearizable_reads=linearizable)
-    # metrics-only observability: counters feed the msgs/bytes-per-delivery
-    # columns at O(1) cost; the full trace recorder stays off in benches
-    obs = Observability(trace=False)
+    # metrics-only observability by default: counters feed the msgs/bytes-
+    # per-delivery columns at O(1) cost; rows that report critical-path
+    # columns opt into the full trace recorder (tracing adds no simulated
+    # time, so every deterministic column is unchanged by it)
+    obs = Observability(trace=trace)
     sim, smr, services = build_smr_simulation(
         algo, n, workload=cfg, requests_per_client=requests_per_client,
         batch_max=batch_max, network=network, stale_bound=4,
@@ -61,7 +64,19 @@ def run_smr(algo: str, n: int, *, batch_max: int, read_ratio: float,
     sim.run(until=lambda: all(c.acked >= requests_per_client
                               for c in alive_clients),
             max_time=max_time)
-    return sim, smr, time.time() - t0
+    return sim, smr, time.time() - t0, obs
+
+
+def _crit_cols(obs: Observability) -> str:
+    """The gated critical-path columns for one traced run: per-delivery
+    mean propagation / pred-wait / NIC-queueing milliseconds, exact
+    partitions of deterministic simulated time (see repro.obs.critpath)."""
+    report = critical_paths(obs.recorder.events)
+    assert report.paths and all(p.exact() for p in report.paths)
+    m = report.mean_components_ms()
+    return (f"crit_prop_ms={m['crit_prop_ms']:.5f};"
+            f"crit_wait_ms={m['crit_wait_ms']:.5f};"
+            f"crit_queue_ms={m['crit_queue_ms']:.5f}")
 
 
 def main(full: bool = False) -> None:
@@ -74,20 +89,21 @@ def main(full: bool = False) -> None:
     for algo in ALGOS:
         # ---- scaling in n (fixed batch, mixed workload) --------------------
         for n in ns:
-            sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+            sim, smr, wall, obs = run_smr(algo, n, batch_max=16,
+                                read_ratio=0.5,
                                 num_clients=clients_per_server * n,
-                                requests_per_client=rpc)
+                                requests_per_client=rpc, trace=True)
             work = work_from_harness(sim)
             emit(f"smr_{algo}_scale_n{n}", smr.p50() * 1e6,
                  f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
                  f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
                  f"msgs_per_delivery={work['msgs_per_delivery']:.2f};"
                  f"bytes_per_delivery={work['bytes_per_delivery']:.0f};"
-                 f"wall_s={wall:.1f}")
+                 f"{_crit_cols(obs)};wall_s={wall:.1f}")
         # ---- batch-size sweep (client population scales with batch) -------
         n = ns[0]
         for b in batches:
-            _sim, smr, wall = run_smr(algo, n, batch_max=b, read_ratio=0.5,
+            _sim, smr, wall, _ = run_smr(algo, n, batch_max=b, read_ratio=0.5,
                                 num_clients=b * n,
                                 requests_per_client=rpc)
             emit(f"smr_{algo}_batch_n{n}_b{b}", smr.p50() * 1e6,
@@ -96,7 +112,7 @@ def main(full: bool = False) -> None:
                  f"wall_s={wall:.1f}")
         # ---- read-ratio sweep: stale-bounded local reads vs log writes ----
         for rr in ratios:
-            _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=rr,
+            _sim, smr, wall, _ = run_smr(algo, n, batch_max=16, read_ratio=rr,
                                 num_clients=clients_per_server * n,
                                 requests_per_client=rpc, linearizable=False)
             emit(f"smr_{algo}_reads_n{n}_r{int(rr*100)}", smr.p50() * 1e6,
@@ -104,7 +120,7 @@ def main(full: bool = False) -> None:
                  f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
                  f"wall_s={wall:.1f}")
         # ---- linearizable reads: every get ordered through the log --------
-        _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+        _sim, smr, wall, _ = run_smr(algo, n, batch_max=16, read_ratio=0.5,
                             num_clients=clients_per_server * n,
                             requests_per_client=rpc, linearizable=True)
         emit(f"smr_{algo}_linreads_n{n}_r50", smr.p50() * 1e6,
@@ -113,17 +129,20 @@ def main(full: bool = False) -> None:
              f"wall_s={wall:.1f}")
         # ---- failure injection mid-workload (no FT in allgather) ----------
         if algo != "allgather":
-            _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+            _sim, smr, wall, obs = run_smr(algo, n, batch_max=16,
+                                read_ratio=0.5,
                                 num_clients=clients_per_server * n,
                                 requests_per_client=rpc,
-                                crash=[(1, 0.0005, 1)], max_time=8.0)
+                                crash=[(1, 0.0005, 1)], max_time=8.0,
+                                trace=True)
             emit(f"smr_{algo}_crash_n{n}", smr.p50() * 1e6,
                  f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"
                  f"p99_ms={smr.p99()*1e3:.3f};acked={smr.acked};"
-                 f"wall_s={wall:.1f}")
+                 f"{_crit_cols(obs)};wall_s={wall:.1f}")
         # ---- client failover: crashed server's clients finish elsewhere ---
         if algo != "allgather":
-            _sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+            _sim, smr, wall, _ = run_smr(algo, n, batch_max=16,
+                                      read_ratio=0.5,
                                       num_clients=clients_per_server * n,
                                       requests_per_client=rpc,
                                       crash=[(1, 0.0005, 1)], max_time=8.0,
@@ -134,7 +153,8 @@ def main(full: bool = False) -> None:
                  f"maxgap_ms={smr.max_ack_gap()*1e3:.3f};wall_s={wall:.1f}")
         # ---- eon flip: AddServer mid-workload, disruption around the flip -
         if algo == "allconcur+":
-            sim, smr, wall = run_smr(algo, n, batch_max=16, read_ratio=0.5,
+            sim, smr, wall, _ = run_smr(algo, n, batch_max=16,
+                                     read_ratio=0.5,
                                      num_clients=clients_per_server * n,
                                      requests_per_client=2 * rpc,
                                      add_server_at=0.002, max_time=8.0)

@@ -6,15 +6,22 @@ Usage::
     python scripts/check_bench.py FRESH.json [--baseline BENCH_ci.json]
     python scripts/check_bench.py FRESH.json --update-baseline
 
-Rows are matched by ``name``.  Only ``us_per_call``, ``speedup_x`` and the
-``wall_clock`` flag are interpreted — any other field a bench emits
-(``msgs_per_delivery``, ``overhead_x``, future columns) is carried for
-humans and ignored by the gate, on either side of the comparison, so
-benches can grow new derived columns without invalidating the committed
-baseline.  The gate fails (exit 1) when, on any row present in both files:
+Rows are matched by ``name``.  Only ``us_per_call``, ``speedup_x``, the
+``crit_*_ms`` critical-path columns and the ``wall_clock`` flag are
+interpreted — any other field a bench emits (``msgs_per_delivery``,
+``overhead_x``, future columns) is carried for humans and ignored by the
+gate, on either side of the comparison, so benches can grow new derived
+columns without invalidating the committed baseline.  The gate fails
+(exit 1) when, on any row present in both files:
 
 * ``us_per_call`` regresses by more than ``--max-us-regress`` (default 25%),
 * ``speedup_x`` drops by more than ``--max-speedup-drop`` (default 20%),
+* a ``crit_*_ms`` column (mean critical-path propagation / pred-wait /
+  NIC-queueing milliseconds per delivery, ``repro.obs.critpath``) grows by
+  more than the ``us_per_call`` band, or is present in the baseline row but
+  missing from the fresh one — like ``us_per_call`` on non-wall rows these
+  are deterministic simulated-time numbers, so the strict band always
+  applies (never the wall-clock band),
 
 or when a baseline row disappeared from the fresh run.  New rows are
 reported but never fail the gate (they have no baseline yet).
@@ -75,6 +82,19 @@ def compare(fresh: List[dict], baseline: List[dict], *,
             failures.append(
                 f"{name}: speedup_x {b_sp:g} -> {f_sp:g} "
                 f"({_fmt_pct(f_sp, b_sp)} < -{max_speedup_drop:.0%} allowed)")
+        # critical-path columns: deterministic simulated time, strict band
+        for key in sorted(k for k in base
+                          if k.startswith("crit_") and k.endswith("_ms")):
+            b_c, f_c = base[key], row.get(key)
+            if not isinstance(b_c, (int, float)):
+                continue
+            if not isinstance(f_c, (int, float)):
+                failures.append(
+                    f"{name}: {key} {b_c:g} -> missing from fresh run")
+            elif b_c > 0 and f_c > b_c * (1.0 + max_us_regress):
+                failures.append(
+                    f"{name}: {key} {b_c:g} -> {f_c:g} "
+                    f"({_fmt_pct(f_c, b_c)} > +{max_us_regress:.0%} allowed)")
     return failures
 
 

@@ -57,7 +57,7 @@ stage_wire_fuzz_smoke() {
 }
 
 stage_obs_smoke() {
-  echo "== obs-smoke: traced eon-flip run -> trace_report + invariant check =="
+  echo "== obs-smoke: traced eon-flip run -> report, critpath, golden diff =="
   local tmp
   tmp="$(mktemp -d)"
   trap 'rm -rf "$tmp"; trap - RETURN' RETURN
@@ -67,6 +67,14 @@ stage_obs_smoke() {
   python examples/trace_run.py "$tmp"
   python scripts/trace_report.py "$tmp/trace_run.jsonl"
   python scripts/trace_report.py "$tmp/trace_run.jsonl" --check
+  # critical-path decomposition must hold bit-exactly (exit 2 otherwise)
+  python scripts/trace_report.py "$tmp/trace_run.jsonl" --critpath --metrics
+  # regression gate: fresh run must be structurally identical to the
+  # committed golden fixture; bless intentional protocol changes with
+  #   PYTHONPATH=src python examples/trace_run.py tests/golden \
+  #     && rm tests/golden/trace_run.trace.json tests/golden/trace_run.metrics.json
+  python scripts/trace_report.py "$tmp/trace_run.jsonl" \
+    --diff tests/golden/trace_run.jsonl
 }
 
 stage_membership_chaos() {

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Render a recorded protocol trace: spans, work table, safety check.
+"""Render a recorded protocol trace: spans, work, critical paths, safety.
 
 Usage::
 
@@ -7,6 +7,9 @@ Usage::
     python scripts/trace_report.py TRACE.jsonl --check    # invariants only
     python scripts/trace_report.py TRACE.jsonl --work     # work table only
     python scripts/trace_report.py TRACE.jsonl --slowest 8
+    python scripts/trace_report.py TRACE.jsonl --critpath --top 10
+    python scripts/trace_report.py TRACE.jsonl --diff GOLDEN.jsonl
+    python scripts/trace_report.py TRACE.jsonl --metrics [SIDECAR.json]
 
 Input is the JSONL written by ``TraceRecorder.to_jsonl`` (one event object
 per line).  The full report prints, in order: the event census, the
@@ -14,14 +17,26 @@ lifecycle timeline (crashes, failure notifications, eon flips, joins,
 catch-up, installs), the work-per-broadcast accounting, the slowest rounds
 by completion span, and the atomic-broadcast invariant-check verdict.
 
-Exit codes: 0 = report rendered (and, when checking, all invariants hold);
-2 = an invariant failed — the diagnostic line starts with the stable typed
-code (``[agreement]``, ``[duplicate_delivery]``, ...) so CI logs are
-greppable; 1 = bad input / usage.
+``--critpath`` reconstructs the causal DAG and prints the per-delivery
+critical-path latency decomposition (``--top K`` slowest deliveries, plus
+the per-component means); ``--diff GOLDEN`` compares the trace structurally
+against a golden fixture (event census, per-broadcast hop sets,
+critical-path shapes); ``--metrics`` dumps the metrics-registry sidecar
+written next to the trace (default ``TRACE.metrics.json``).
+
+Exit codes (stable, CI-greppable):
+
+* **0** — report rendered; all requested checks hold.
+* **1** — bad input / usage (unreadable or empty trace, missing metrics
+  sidecar).
+* **2** — structural failure: an invariant violation (``[agreement]``,
+  ``[duplicate_delivery]``, ...), a corrupt causal DAG (``[orphan_recv]``,
+  ``[unmatched_send]``), or a ``--diff`` divergence from the golden trace.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 from collections import Counter
@@ -29,7 +44,10 @@ from typing import Any, Dict, List
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.obs.causal import CausalDagError                    # noqa: E402
 from repro.obs.check import TraceInvariantError, check_trace   # noqa: E402
+from repro.obs.critpath import COMPONENTS, critical_paths      # noqa: E402
+from repro.obs.diff import diff_traces                         # noqa: E402
 from repro.obs.trace import load_jsonl                         # noqa: E402
 from repro.obs.work import work_from_trace                     # noqa: E402
 
@@ -98,6 +116,82 @@ def _check(events: List[Dict[str, Any]]) -> int:
     return 0
 
 
+def _critpath(events: List[Dict[str, Any]], top: int) -> int:
+    try:
+        report = critical_paths(events)
+    except CausalDagError as exc:
+        print(f"[{exc.code}] CAUSAL DAG ERROR: {exc}", file=sys.stderr)
+        return 2
+    if not report.paths:
+        print("critical paths: no decomposable deliveries "
+              f"({report.skipped} skipped — no abcast anchor)")
+        return 0
+    inexact = sum(1 for p in report.paths if not p.exact())
+    means = report.mean_components_ms()
+    print(f"critical paths: {len(report.paths)} deliveries decomposed, "
+          f"{report.skipped} skipped (no abcast anchor), "
+          f"{inexact} inexact")
+    print("  mean per delivery: "
+          + ", ".join(f"{k}={v:.4f}" for k, v in means.items()))
+    rows = report.slowest(top)
+    print(f"slowest {len(rows)} deliveries (abcast -> deliver):")
+    hdr = (f"  {'sid':>3} {'eon':>3} {'ep':>3} {'round':>6} {'type':<10} "
+           f"{'lat_ms':>9} {'hops':>4} {'gu':>3} {'gr':>3} {'dom':<7} "
+           + " ".join(f"{c + '_ms':>10}" for c in COMPONENTS))
+    print(hdr)
+    for p in rows:
+        comps = p.component_seconds()
+        print(f"  {p.sid:>3} {p.eon:>3} {p.epoch:>3} {p.round:>6} "
+              f"{str(p.rtype):<10} {p.latency * 1e3:>9.4f} {p.nhops:>4} "
+              f"{p.hops_gu:>3} {p.hops_gr:>3} {p.dominant():<7} "
+              + " ".join(f"{comps[c] * 1e3:>10.4f}" for c in COMPONENTS))
+    if inexact:
+        print(f"[inexact_decomposition] {inexact} paths do not sum "
+              "bit-exactly to their latency", file=sys.stderr)
+        return 2
+    return 0
+
+
+def _diff(events: List[Dict[str, Any]], golden_path: str) -> int:
+    try:
+        golden = load_jsonl(golden_path)
+    except (OSError, ValueError) as exc:
+        print(f"trace_report: cannot read golden {golden_path}: {exc}",
+              file=sys.stderr)
+        return 1
+    d = diff_traces(golden, events, a_name="golden", b_name="trace")
+    if d.identical:
+        print(f"diff vs {golden_path}: traces structurally identical")
+        return 0
+    print(f"[trace_divergence] {len(d.divergences)} structural divergences "
+          f"vs {golden_path}:", file=sys.stderr)
+    print(d.summary(), file=sys.stderr)
+    return 2
+
+
+def _metrics(trace_path: str, sidecar: str) -> int:
+    path = sidecar or (os.path.splitext(trace_path)[0] + ".metrics.json")
+    try:
+        with open(path) as fh:
+            snap = json.load(fh)
+    except (OSError, ValueError) as exc:
+        print(f"trace_report: cannot read metrics sidecar {path}: {exc}",
+              file=sys.stderr)
+        return 1
+    print(f"metrics ({path}): {len(snap)} instruments")
+    for row in snap:
+        name = row.get("name")
+        labels = row.get("labels") or {}
+        lbl = ("{" + ", ".join(f"{k}={v}" for k, v in sorted(labels.items()))
+               + "}") if labels else ""
+        if row.get("type") == "histogram":
+            print(f"  {name}{lbl}: count={row.get('count')} "
+                  f"mean={row.get('mean'):g}")
+        else:
+            print(f"  {name}{lbl}: {row.get('value')}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="JSONL trace file (TraceRecorder.to_jsonl)")
@@ -107,6 +201,18 @@ def main(argv=None) -> int:
                     help="print only the work-per-broadcast table")
     ap.add_argument("--slowest", type=int, default=5, metavar="K",
                     help="rows in the slowest-rounds table (default 5)")
+    ap.add_argument("--critpath", action="store_true",
+                    help="per-delivery critical-path latency decomposition "
+                         "(exit 2 on a corrupt causal DAG)")
+    ap.add_argument("--top", type=int, default=5, metavar="K",
+                    help="rows in the --critpath slowest-deliveries table "
+                         "(default 5)")
+    ap.add_argument("--diff", metavar="GOLDEN",
+                    help="compare the trace structurally against a golden "
+                         "JSONL fixture (exit 2 on divergence)")
+    ap.add_argument("--metrics", nargs="?", const="", metavar="SIDECAR",
+                    help="dump the metrics-registry sidecar JSON (default "
+                         "TRACE-stem + .metrics.json)")
     args = ap.parse_args(argv)
 
     try:
@@ -124,6 +230,16 @@ def main(argv=None) -> int:
     if args.work:
         _work(events, args.slowest)
         return 0
+    if args.critpath or args.diff or args.metrics is not None:
+        # targeted modes compose: run each requested one, worst exit wins
+        rc = 0
+        if args.critpath:
+            rc = max(rc, _critpath(events, args.top))
+        if args.diff:
+            rc = max(rc, _diff(events, args.diff))
+        if args.metrics is not None:
+            rc = max(rc, _metrics(args.trace, args.metrics))
+        return rc
     _census(events)
     _timeline(events)
     _work(events, args.slowest)

@@ -25,7 +25,11 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional
 
+from .causal import CausalDag, CausalDagError, Hop, build_dag, match_hops
 from .check import CheckReport, TraceInvariantError, check_trace
+from .critpath import (COMPONENTS, CritPathReport, PathDecomposition,
+                       critical_paths)
+from .diff import TraceDiff, diff_traces
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .trace import TraceRecorder, load_jsonl, mdesc, msg_id, payload_digest
 from .work import (BroadcastWork, WorkSummary, work_from_harness,
@@ -156,9 +160,11 @@ class Observability:
 
 
 __all__ = [
-    "BroadcastWork", "CheckReport", "Counter", "Gauge", "Histogram",
-    "MetricsRegistry", "Observability", "TraceInvariantError",
-    "TraceRecorder", "WireObserver", "WorkSummary", "check_trace",
-    "load_jsonl", "mdesc", "msg_id", "payload_digest", "work_from_harness",
-    "work_from_trace",
+    "BroadcastWork", "COMPONENTS", "CausalDag", "CausalDagError",
+    "CheckReport", "Counter", "CritPathReport", "Gauge", "Histogram",
+    "Hop", "MetricsRegistry", "Observability", "PathDecomposition",
+    "TraceDiff", "TraceInvariantError", "TraceRecorder", "WireObserver",
+    "WorkSummary", "build_dag", "check_trace", "critical_paths",
+    "diff_traces", "load_jsonl", "match_hops", "mdesc", "msg_id",
+    "payload_digest", "work_from_harness", "work_from_trace",
 ]

@@ -1,0 +1,208 @@
+"""Causal hop DAG reconstruction from a recorded trace.
+
+A trace (:class:`~repro.obs.trace.TraceRecorder` tuples or JSONL dict rows)
+is a flat event log; this module rebuilds the causality that produced it:
+
+* **hop edges** — every ``send`` is matched to the ``recv`` that consumed it.
+  Matching is per directed channel ``(src, dst)`` and per message identity
+  (:func:`~repro.obs.trace.msg_id`, falling back to the descriptor kind for
+  non-broadcast traffic), in FIFO order — exact, because the harnesses
+  guarantee per-channel FIFO (serialization order + constant per-pair
+  propagation in the simulator; literal deques in the Cluster).
+* **trigger edges** — an event at a server was caused by the nearest
+  preceding *trigger-capable* event at the same server in log order: the
+  ``recv`` or ``fd`` whose processing emitted it.  Both harnesses emit the
+  trigger before the handler runs and the handler's sends after it returns,
+  so log order is processing order.
+* **wait edges** — an ``fd`` event was caused by the ``crash`` of its
+  target (the failure-detection timeout is the edge's duration), which is
+  how G_R pred-wait — a round blocked on a predecessor's failure — enters
+  the DAG.
+* **barrier nodes** — ``abcast`` and ``deliver`` events bound the
+  per-round A-broadcast -> A-deliver span the critical-path extractor
+  (:mod:`repro.obs.critpath`) decomposes.
+
+Corrupt traces surface as typed :class:`CausalDagError`\\ s: a ``recv``
+with no matching ``send`` (``orphan_recv``) is always an error — the log
+claims an effect without its cause; a ``send`` with no matching ``recv``
+(``unmatched_send``) is an error only under ``strict=True``, because
+truncated runs legitimately end with frames in flight and crashed
+destinations legitimately drop them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from .trace import msg_id
+
+#: event kinds whose processing can emit further events at the same server
+TRIGGER_KINDS = ("recv", "fd")
+
+ERROR_CODES = ("orphan_recv", "unmatched_send", "missing_crash")
+
+
+class CausalDagError(ValueError):
+    """A structural defect in the trace's causality, with a typed code."""
+
+    def __init__(self, code: str, detail: str, *, index: Optional[int] = None):
+        assert code in ERROR_CODES, code
+        self.code = code
+        self.index = index
+        super().__init__(f"[{code}] {detail}"
+                         + (f" (event #{index})" if index is not None else ""))
+
+
+def normalize(events: Iterable[Any]) -> List[Tuple[float, str, Any, Dict]]:
+    """Accept recorder tuples ``(t, kind, sid, fields)`` or JSONL dict rows
+    and return the tuple form (the dict rows keep t/ev/sid inside fields,
+    which is harmless — analyzers read named keys only)."""
+    out = []
+    for ev in events:
+        if isinstance(ev, dict):
+            out.append((ev.get("t", 0.0), ev.get("ev"), ev.get("sid"), ev))
+        else:
+            out.append(ev)
+    return out
+
+
+@dataclass
+class Hop:
+    """One matched message hop: the send (with its NIC serialization window
+    when the harness recorded one) and the recv that consumed it."""
+    send_idx: int
+    recv_idx: int
+    src: int
+    dst: int
+    t_send: float              # when the sender enqueued the frame
+    t_recv: float              # when the receiver processed it
+    txs: Optional[float]       # NIC serialization start (timed sim only)
+    txe: Optional[float]       # NIC serialization end == wire departure
+    g: str                     # digraph of the hop: GU / GR / GRT / app / ring
+
+
+@dataclass
+class HopMatch:
+    hops: List[Hop]
+    recv_hop: Dict[int, int]        # recv event index -> index into hops
+    unmatched_sends: List[int]      # send event indices never received
+
+
+def _hop_key(src: Any, dst: Any, fields: Dict[str, Any]) -> Tuple:
+    mid = msg_id(fields)
+    if mid is None:
+        mid = (fields.get("m"), fields.get("msrc"), fields.get("chunk"))
+    return (src, dst, mid)
+
+
+def match_hops(events: Iterable[Any], *, strict: bool = False) -> HopMatch:
+    """FIFO-match every ``send`` to its ``recv``.  Raises
+    :class:`CausalDagError` ``orphan_recv`` for a recv without a pending
+    send, and ``unmatched_send`` (strict only) for sends never received."""
+    norm = normalize(events)
+    pending: Dict[Tuple, List[int]] = {}
+    hops: List[Hop] = []
+    recv_hop: Dict[int, int] = {}
+    for i, (t, kind, sid, fields) in enumerate(norm):
+        if kind == "send":
+            key = _hop_key(sid, fields.get("dst"), fields)
+            pending.setdefault(key, []).append(i)
+        elif kind == "recv":
+            src = fields.get("src")
+            if src is None or src == sid:
+                continue    # loopback / src-less legacy trace: local event
+            key = _hop_key(src, sid, fields)
+            queue = pending.get(key)
+            if not queue:
+                raise CausalDagError(
+                    "orphan_recv",
+                    f"recv at server {sid} from {src} of {key[2]} has no "
+                    f"matching send", index=i)
+            si = queue.pop(0)
+            ts, _k, _s, sf = norm[si]
+            recv_hop[i] = len(hops)
+            hops.append(Hop(
+                send_idx=si, recv_idx=i, src=src, dst=sid,
+                t_send=ts, t_recv=t,
+                txs=sf.get("txs"), txe=sf.get("txe"),
+                g=fields.get("g", sf.get("g", "app"))))
+    unmatched = [i for q in pending.values() for i in q]
+    if strict and unmatched:
+        i = min(unmatched)
+        t, _k, sid, fields = norm[i]
+        raise CausalDagError(
+            "unmatched_send",
+            f"send at server {sid} to {fields.get('dst')} was never "
+            f"received ({len(unmatched)} unmatched sends total)", index=i)
+    unmatched.sort()
+    return HopMatch(hops=hops, recv_hop=recv_hop, unmatched_sends=unmatched)
+
+
+#: edge kinds on the parent chain
+EDGE_HOP = "hop"        # recv  <- matched send (network hop)
+EDGE_LOCAL = "local"    # event <- trigger event at the same server
+EDGE_WAIT = "wait"      # fd    <- crash of its target (detection timeout)
+
+
+@dataclass
+class CausalDag:
+    """The reconstructed DAG: for every event index, the edge to the event
+    that caused it (``None`` for roots — run start, exogenous crashes)."""
+    events: List[Tuple[float, str, Any, Dict]]
+    parent: List[Optional[Tuple[str, int]]]     # (edge_kind, parent index)
+    hops: List[Hop]
+    recv_hop: Dict[int, int]
+    unmatched_sends: List[int]
+
+    def parent_of(self, i: int) -> Optional[Tuple[str, int]]:
+        return self.parent[i]
+
+    def deliver_indices(self) -> List[int]:
+        return [i for i, (_t, k, _s, _f) in enumerate(self.events)
+                if k == "deliver"]
+
+    def abcast_index(self, sid: Any, rnd: Any) -> Optional[int]:
+        """First ``abcast`` of (sid, round) — the latency anchor, matching
+        the simulator's ``Metrics.on_abcast`` first-write semantics (a
+        rolled-back round re-abcast reliably keeps its original anchor)."""
+        return self._abcasts.get((sid, rnd))
+
+    def __post_init__(self):
+        self._abcasts: Dict[Tuple, int] = {}
+        for i, (_t, k, sid, f) in enumerate(self.events):
+            if k == "abcast":
+                self._abcasts.setdefault((sid, f.get("round")), i)
+
+
+def build_dag(events: Iterable[Any], *, strict: bool = False) -> CausalDag:
+    """Reconstruct the causal DAG.  See the module docstring for the edge
+    model; ``strict`` escalates unmatched sends to errors."""
+    norm = normalize(events)
+    hm = match_hops(norm, strict=strict)
+    crash_of: Dict[Any, int] = {}
+    last_trigger: Dict[Any, int] = {}
+    parent: List[Optional[Tuple[str, int]]] = [None] * len(norm)
+    for i, (t, kind, sid, fields) in enumerate(norm):
+        if kind == "recv":
+            hi = hm.recv_hop.get(i)
+            if hi is not None:
+                parent[i] = (EDGE_HOP, hm.hops[hi].send_idx)
+            else:
+                tr = last_trigger.get(sid)
+                parent[i] = (EDGE_LOCAL, tr) if tr is not None else None
+            last_trigger[sid] = i
+        elif kind == "fd":
+            ci = crash_of.get(fields.get("target"))
+            if ci is not None:
+                parent[i] = (EDGE_WAIT, ci)
+            # else: root — Cluster logical-clock traces or a crash that
+            # predates the recorder; the fd stands as an exogenous root
+            last_trigger[sid] = i
+        elif kind == "crash":
+            crash_of[sid] = i       # exogenous: a root by definition
+        else:
+            tr = last_trigger.get(sid)
+            parent[i] = (EDGE_LOCAL, tr) if tr is not None else None
+    return CausalDag(events=norm, parent=parent, hops=hm.hops,
+                     recv_hop=hm.recv_hop,
+                     unmatched_sends=hm.unmatched_sends)

@@ -1,0 +1,188 @@
+"""Critical-path extraction and exact per-component latency decomposition.
+
+For every ``deliver`` event the causal DAG (:mod:`repro.obs.causal`) is
+walked backwards — deliver -> triggering recv -> matched send -> the
+sender's trigger -> ... — yielding the *critical path*: the one causal
+chain whose completion released the delivery.  The abcast -> deliver span
+is then decomposed into named components:
+
+``prop``     propagation: frame in flight, wire departure -> arrival
+``ser``      NIC serialization: the sender clocking the frame out
+``queue``    NIC queueing: the frame waiting behind earlier frames on the
+             sender's (FIFO) NIC, enqueue -> serialization start
+``wait``     pred-wait: the path blocked on a predecessor's failure — the
+             crash -> failure-detector gap, plus any exogenous root gap
+             after the abcast anchor (a rolled-back round waiting out the
+             crash itself)
+``compute``  local compute: trigger processed -> caused event emitted
+             (identically zero in both harnesses' instantaneous-processing
+             model; a real transport fills it)
+
+**Exactness guarantee.**  Components are accumulated as
+:class:`fractions.Fraction` differences of the *recorded* float cut
+points, telescoping from the delivery back to the abcast anchor, so
+
+    sum(components) == Fraction(t_deliver) - Fraction(t_abcast)
+
+holds identically, and because IEEE-754 subtraction is correctly rounded,
+
+    float(sum(components)) == t_deliver - t_abcast
+
+bit-exactly — the decomposition is a true partition of the measured
+latency, not an approximation of it.  The paper's latency mechanism is
+then an assertable number: failure-free AllConcur+ paths are chains of
+G_U hops whose ``prop`` dominates (depth(G_U) x propagation), while a
+crash flips the dominant component to ``wait`` (the G_R flood blocked on
+failure detection of the predecessor).
+
+The walk's anchor is the *first* ``abcast`` of (sid, round) — the same
+first-write semantics as the simulator's ``Metrics.on_abcast`` — so a
+round re-abcast reliably after rollback keeps its original anchor and the
+pre-rollback blocked time lands in ``wait``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from fractions import Fraction
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from .causal import EDGE_HOP, EDGE_LOCAL, EDGE_WAIT, CausalDag, build_dag
+
+#: decomposition component names, in reporting order
+COMPONENTS = ("prop", "ser", "queue", "wait", "compute")
+
+
+@dataclass
+class PathDecomposition:
+    """One delivery's critical path and its exact latency partition."""
+    sid: Any
+    round: Any
+    epoch: Any
+    eon: Any
+    rtype: Optional[str]
+    t_abcast: float
+    t_deliver: float
+    components: Dict[str, Fraction]
+    shape: Tuple[str, ...]          # hop/wait edge labels, root -> deliver
+    nhops: int
+    hops_gu: int
+    hops_gr: int
+
+    @property
+    def latency(self) -> float:
+        return self.t_deliver - self.t_abcast
+
+    def component_seconds(self) -> Dict[str, float]:
+        return {k: float(v) for k, v in self.components.items()}
+
+    def dominant(self) -> str:
+        return max(COMPONENTS, key=lambda k: self.components[k])
+
+    def exact(self) -> bool:
+        """The guarantee, checked: components sum bit-exactly to the
+        measured latency."""
+        return float(sum(self.components.values())) == self.latency
+
+
+@dataclass
+class CritPathReport:
+    paths: List[PathDecomposition]
+    skipped: int        # deliveries without an abcast anchor (e.g. joiners)
+
+    def slowest(self, k: int = 5) -> List[PathDecomposition]:
+        return sorted(self.paths, key=lambda p: p.latency, reverse=True)[:k]
+
+    def mean_components_ms(self) -> Dict[str, float]:
+        """Per-component mean over all decomposed deliveries, in
+        milliseconds of the harness clock — the bench columns
+        ``crit_prop_ms`` / ``crit_wait_ms`` / ``crit_queue_ms`` / ... ."""
+        out = {f"crit_{k}_ms": 0.0 for k in COMPONENTS}
+        if not self.paths:
+            return out
+        n = len(self.paths)
+        for k in COMPONENTS:
+            tot = sum(p.components[k] for p in self.paths)
+            out[f"crit_{k}_ms"] = float(tot) / n * 1e3
+        return out
+
+    def by_key(self) -> Dict[Tuple, PathDecomposition]:
+        """Index by (sid, eon, epoch, round) for cross-trace comparison."""
+        return {(p.sid, p.eon, p.epoch, p.round): p for p in self.paths}
+
+
+def _decompose(dag: CausalDag, di: int) -> Optional[PathDecomposition]:
+    t_d, _k, sid, f = dag.events[di]
+    rnd = f.get("round")
+    ai = dag.abcast_index(sid, rnd)
+    if ai is None:
+        return None     # e.g. a joiner delivering rounds it never abcast
+    t_a = dag.events[ai][0]
+    comps = {k: Fraction(0) for k in COMPONENTS}
+    fa = Fraction(t_a)
+
+    def add(comp: str, lo: float, hi: float) -> None:
+        flo, fhi = Fraction(lo), Fraction(hi)
+        if flo < fa:
+            flo = fa
+        if fhi > flo:
+            comps[comp] += fhi - flo
+
+    shape: List[str] = []
+    nhops = gu = gr = 0
+    i, t_i = di, t_d
+    while t_i > t_a:
+        p = dag.parent[i]
+        if p is None:
+            # exogenous root after the anchor (a crash, or the recorder
+            # starting mid-run): the round was blocked waiting it out
+            add("wait", t_a, t_i)
+            shape.append("wait:root")
+            break
+        edge, pi = p
+        t_p = dag.events[pi][0]
+        if edge == EDGE_HOP:
+            hop = dag.hops[dag.recv_hop[i]]
+            if hop.txs is not None and hop.txe is not None:
+                add("prop", hop.txe, t_i)
+                add("ser", hop.txs, hop.txe)
+                add("queue", hop.t_send, hop.txs)
+            else:
+                # logical-clock harness (Cluster): no NIC model — the
+                # whole hop is transit
+                add("prop", hop.t_send, t_i)
+            nhops += 1
+            if hop.g == "GU":
+                gu += 1
+            elif hop.g in ("GR", "GRT"):
+                gr += 1
+            shape.append(f"hop:{hop.g}")
+        elif edge == EDGE_WAIT:
+            add("wait", t_p, t_i)
+            shape.append("wait:fd")
+        else:
+            assert edge == EDGE_LOCAL
+            add("compute", t_p, t_i)
+        i, t_i = pi, t_p
+    shape.reverse()
+    return PathDecomposition(
+        sid=sid, round=rnd, epoch=f.get("epoch"), eon=f.get("eon"),
+        rtype=f.get("rtype"), t_abcast=t_a, t_deliver=t_d,
+        components=comps, shape=tuple(shape),
+        nhops=nhops, hops_gu=gu, hops_gr=gr)
+
+
+def critical_paths(events: Iterable[Any], *,
+                   strict: bool = False) -> CritPathReport:
+    """Extract and decompose the critical path of every delivery in the
+    trace.  ``strict`` escalates unmatched sends to typed errors (see
+    :mod:`repro.obs.causal`)."""
+    dag = build_dag(events, strict=strict)
+    paths: List[PathDecomposition] = []
+    skipped = 0
+    for di in dag.deliver_indices():
+        d = _decompose(dag, di)
+        if d is None:
+            skipped += 1
+        else:
+            paths.append(d)
+    return CritPathReport(paths=paths, skipped=skipped)

@@ -1,0 +1,116 @@
+"""Structural trace diff — the regression gate for protocol behavior.
+
+Two traces of the same scenario (e.g. a fresh eon-flip run vs the
+committed golden fixture) are compared *structurally*, never by raw
+timestamps, so the gate is stable across machines and harness-clock
+changes while still catching real behavioral drift:
+
+1. **event census** — event counts per (kind, message type, digraph).
+   A protocol change that adds/removes hops, transitions, failure
+   notifications or deliveries moves this census.
+2. **per-broadcast hop sets** — for every broadcast identity
+   (:func:`~repro.obs.trace.msg_id`), the set of ``(src, dst, digraph)``
+   edges its copies traveled.  A dissemination-overlay change (different
+   tree shape, different G_R flood) moves these sets even when totals
+   happen to coincide.
+3. **critical-path shape** — per delivery ``(sid, eon, epoch, round)``,
+   the hop/wait label sequence of its critical path
+   (:mod:`repro.obs.critpath`).  Catches causality changes invisible to
+   counts (e.g. a delivery suddenly released by a different predecessor
+   chain).
+
+:func:`diff_traces` returns a :class:`TraceDiff` whose ``divergences``
+list is empty iff the traces are structurally equivalent; the obs-smoke
+CI stage exits non-zero on any divergence (``scripts/trace_report.py
+--diff``).
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Set, Tuple
+
+from .causal import CausalDagError, normalize
+from .critpath import critical_paths
+from .trace import msg_id
+
+
+@dataclass
+class TraceDiff:
+    divergences: List[str]
+
+    @property
+    def identical(self) -> bool:
+        return not self.divergences
+
+    def summary(self, max_lines: int = 20) -> str:
+        if self.identical:
+            return "traces structurally identical"
+        lines = self.divergences[:max_lines]
+        more = len(self.divergences) - len(lines)
+        if more > 0:
+            lines.append(f"... and {more} more divergences")
+        return "\n".join(lines)
+
+
+def _census(norm: List[Tuple[float, str, Any, Dict]]) -> Counter:
+    return Counter((kind, f.get("m"), f.get("g"))
+                   for _t, kind, _s, f in norm)
+
+
+def _hop_sets(norm: List[Tuple[float, str, Any, Dict]]
+              ) -> Dict[Tuple, Set[Tuple]]:
+    out: Dict[Tuple, Set[Tuple]] = {}
+    for _t, kind, sid, f in norm:
+        if kind != "send":
+            continue
+        mid = msg_id(f)
+        if mid is None:
+            continue
+        out.setdefault(mid, set()).add((sid, f.get("dst"), f.get("g")))
+    return out
+
+
+def _shapes(events: Iterable[Any]) -> Dict[Tuple, Tuple]:
+    try:
+        report = critical_paths(events)
+    except CausalDagError as e:
+        return {("<error>",): (str(e),)}
+    return {k: (p.shape, p.nhops)
+            for k, p in report.by_key().items()}
+
+
+def diff_traces(a_events: Iterable[Any], b_events: Iterable[Any], *,
+                a_name: str = "a", b_name: str = "b") -> TraceDiff:
+    """Compare two traces structurally; see the module docstring for the
+    three comparison layers."""
+    na, nb = normalize(a_events), normalize(b_events)
+    div: List[str] = []
+
+    ca, cb = _census(na), _census(nb)
+    for key in sorted(set(ca) | set(cb), key=repr):
+        if ca.get(key, 0) != cb.get(key, 0):
+            kind, m, g = key
+            div.append(
+                f"census: {kind} (m={m}, g={g}): "
+                f"{a_name}={ca.get(key, 0)} {b_name}={cb.get(key, 0)}")
+
+    ha, hb = _hop_sets(na), _hop_sets(nb)
+    for mid in sorted(set(ha) | set(hb), key=repr):
+        sa, sb = ha.get(mid, set()), hb.get(mid, set())
+        if sa != sb:
+            only_a = sorted(sa - sb)
+            only_b = sorted(sb - sa)
+            div.append(
+                f"hops: broadcast {mid}: only-{a_name}={only_a} "
+                f"only-{b_name}={only_b}")
+
+    pa, pb = _shapes(na), _shapes(nb)
+    for key in sorted(set(pa) | set(pb), key=repr):
+        va, vb = pa.get(key), pb.get(key)
+        if va != vb:
+            div.append(
+                f"critpath: delivery (sid, eon, epoch, round)={key}: "
+                f"{a_name}={va} {b_name}={vb}")
+
+    return TraceDiff(divergences=div)

@@ -116,11 +116,17 @@ class TraceRecorder:
 
     # ------------------------------------------------------------- recording
     def emit(self, kind: str, sid: int, **fields: Any) -> None:
+        for k, v in fields.items():
+            if v.__class__ in (tuple, list, dict):
+                fields[k] = _norm_value(v)
         self.events.append((self.clock(), kind, sid, fields))
 
     def emit_at(self, t: float, kind: str, sid: int, **fields: Any) -> None:
         """Emit with an explicit timestamp (e.g. a send whose NIC-serialized
         departure time the harness already computed)."""
+        for k, v in fields.items():
+            if v.__class__ in (tuple, list, dict):
+                fields[k] = _norm_value(v)
         self.events.append((t, kind, sid, fields))
 
     def __len__(self) -> int:
@@ -183,6 +189,22 @@ class TraceRecorder:
             out.append({"ph": "i", "s": "t", "pid": 1, "tid": sid,
                         "ts": t * time_scale, "name": name,
                         "args": _json_args(fields)})
+        # causality arrows: every matched send->recv hop becomes a Chrome
+        # flow event pair (ph "s" at the sender, ph "f" at the receiver) so
+        # Perfetto renders the actual message DAG over the server tracks
+        try:
+            from .causal import match_hops
+            hops = match_hops(self.events).hops
+        except Exception:
+            hops = []   # partial/corrupt trace: export tracks without flows
+        for fid, hop in enumerate(hops):
+            name = f"hop {hop.g}"
+            out.append({"ph": "s", "id": fid, "pid": 1, "tid": hop.src,
+                        "ts": hop.t_send * time_scale, "name": name,
+                        "cat": hop.g})
+            out.append({"ph": "f", "bp": "e", "id": fid, "pid": 1,
+                        "tid": hop.dst, "ts": hop.t_recv * time_scale,
+                        "name": name, "cat": hop.g})
         with open(path, "w") as fh:
             json.dump({"traceEvents": out,
                        "displayTimeUnit": "ms"}, fh, default=_json_default)
@@ -203,10 +225,27 @@ def _json_args(fields: Dict[str, Any]) -> Dict[str, Any]:
             for k, v in fields.items()}
 
 
+def _norm_value(v: Any) -> Any:
+    """Emit-time normalization to the JSON value model, so the in-memory
+    events and their JSONL round-trip (:func:`load_jsonl`) compare equal:
+    tuples become lists (recursively).  Everything else passes through and
+    is validated at export time by :func:`_json_default`."""
+    if isinstance(v, (tuple, list)):
+        return [_norm_value(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _norm_value(x) for k, x in v.items()}
+    return v
+
+
 def _json_default(v: Any):
-    if isinstance(v, tuple):
-        return list(v)
-    return repr(v)
+    # No silent repr() fallback: a value the JSON encoder cannot represent
+    # would not survive the round-trip, and every analyzer (causal DAG,
+    # critical paths, trace diff) is entitled to read back exactly what was
+    # recorded.  Harnesses must emit JSON-able fields (emit() normalizes
+    # tuples); anything else is an instrumentation bug, surfaced here.
+    raise TypeError(
+        f"trace event field of type {type(v).__name__} is not JSON-able "
+        f"({v!r}); trace round-trips must be lossless")
 
 
 def load_jsonl(path: str) -> List[Dict[str, Any]]:

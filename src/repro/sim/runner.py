@@ -169,12 +169,13 @@ class Simulation:
             if dst == sid:
                 # loopback (e.g., the Libpaxos proposer proposing its own
                 # message): deliver without NIC serialization
-                self.post(self.now, "recv", (dst, msg))
+                self.post(self.now, "recv", (dst, msg, sid))
                 continue
             size = wire_size(msg, self.metrics.n)
+            txs = t
             t += self.net.serialization(size, sid, dst)
             arrive = t + self.net.propagation(sid, dst)
-            self.post(arrive, "recv", (dst, msg))
+            self.post(arrive, "recv", (dst, msg, sid))
             if rec is not None or count:
                 d = self._mdesc(msg)
                 if count:
@@ -186,8 +187,12 @@ class Simulation:
                         self._c_over.inc()
                     self._c_bytes.inc(size)
                 if rec is not None:
+                    # txs/txe are the NIC serialization window of this frame:
+                    # the causal analyzer (repro.obs.critpath) decomposes each
+                    # hop into queue = txs - t_enqueue, ser = txe - txs,
+                    # prop = t_recv - txe, all from recorded cut points
                     rec.emit_at(self.now, "send", sid,
-                                dst=dst, bytes=size, **d)
+                                dst=dst, bytes=size, txs=txs, txe=t, **d)
         self.tx_free[sid] = t
 
     def start(self) -> None:
@@ -210,14 +215,14 @@ class Simulation:
             self.now = t
             self.events_processed += 1
             if kind == "recv":
-                dst, msg = data
+                dst, msg, src = data
                 if dst in self.crashed:
                     continue
                 srv = self.servers[dst]
                 if getattr(srv, "halted", False):
                     continue
                 if self._rec is not None:
-                    self._rec.emit("recv", dst, **self._mdesc(msg))
+                    self._rec.emit("recv", dst, src=src, **self._mdesc(msg))
                 srv.on_message(msg)
                 self.drain(dst)
             elif kind == "crash":

@@ -109,6 +109,37 @@ def test_check_bench_ignores_unknown_extra_fields(tmp_path):
     assert r.returncode == 0, r.stderr
 
 
+def test_check_bench_gates_crit_columns(tmp_path):
+    """crit_*_ms columns (mean critical-path component milliseconds,
+    deterministic simulated time) are gated with the strict band: growth
+    beyond +25% fails, and a baseline crit column vanishing from the fresh
+    run fails — while other unknown extras stay ignored."""
+    base_rows = [dict(BASELINE[0], crit_prop_ms=0.040, crit_wait_ms=0.0,
+                      crit_queue_ms=0.020)]
+    base = _write(tmp_path, "base.json", base_rows)
+    same = _write(tmp_path, "same.json", base_rows)
+    assert _run(same, "--baseline", base).returncode == 0
+
+    worse = [dict(base_rows[0], crit_queue_ms=0.030)]       # +50%
+    r = _run(_write(tmp_path, "worse.json", worse), "--baseline", base)
+    assert r.returncode == 1 and "crit_queue_ms" in r.stderr
+
+    # zero-valued baseline components never divide-by-zero or false-fail
+    grown_wait = [dict(base_rows[0], crit_wait_ms=0.5)]
+    assert _run(_write(tmp_path, "gw.json", grown_wait),
+                "--baseline", base).returncode == 0
+
+    dropped = [{k: v for k, v in base_rows[0].items()
+                if k != "crit_prop_ms"}]
+    r = _run(_write(tmp_path, "dropped.json", dropped), "--baseline", base)
+    assert r.returncode == 1 and "missing from fresh run" in r.stderr
+
+    # fresh-only crit columns are fine (how the columns get introduced)
+    extra = [dict(base_rows[0], crit_ser_ms=0.001)]
+    assert _run(_write(tmp_path, "extra.json", extra),
+                "--baseline", base).returncode == 0
+
+
 def test_bench_json_merges_by_row_name(tmp_path):
     """benchmarks.run --json refines an existing results file: fresh rows
     replace same-named ones in place, new rows append, rows from benches

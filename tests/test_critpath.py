@@ -1,0 +1,216 @@
+"""Causal DAG, critical-path decomposition, vecsim traces, trace diff.
+
+Four blocks:
+
+* **exactness** — on seeded timed-simulator runs (DUAL failure-free,
+  RELIABLE_ONLY, a crash run, a Cluster eon-flip run) every delivery's
+  component decomposition sums *bit-exactly* to its measured
+  abcast -> deliver latency, with no negative components;
+* **the paper's mechanism, asserted** — failure-free AllConcur+ on an
+  inter-DC network is propagation-dominated over a pure-G_U path at least
+  as deep as the binomial overlay (depth(G_U) x propagation), while a
+  crash flips the dominant component of the rolled-back reliable round to
+  pred-wait (the G_R flood blocked on failure detection);
+* **vecsim cross-validation** — the lean replay's synthetic traces yield
+  critical paths identical (components, shape, timestamps — not within
+  tolerance, equal) to the discrete-event simulator's, for all three modes
+  at n in {8, 16}, and its median latency agrees with the jitted engine to
+  the engine's validated ~1e-3 band;
+* **corrupt DAGs and trace diff** — orphan recvs / unmatched sends raise
+  typed :class:`~repro.obs.causal.CausalDagError`\\ s, and
+  :func:`~repro.obs.diff.diff_traces` flags census / hop-set /
+  critical-path divergences while calling identical traces identical.
+"""
+from fractions import Fraction
+
+import pytest
+
+from repro.obs import Observability
+from repro.obs.causal import CausalDagError, build_dag, match_hops
+from repro.obs.critpath import COMPONENTS, critical_paths
+from repro.obs.diff import diff_traces
+from repro.sim.runner import build_simulation
+from repro.smr import ClientRequest, add_smr_server, build_smr_cluster
+from repro.vecsim.trace_export import (critical_paths_for_config,
+                                       engine_consistency, synthetic_trace)
+
+ROUNDS = 6
+
+
+def _run_sim(algo, n, *, network="sdc", rounds=ROUNDS, crash=None,
+             max_time=5.0):
+    obs = Observability(metrics=False)
+    sim, _met = build_simulation(algo, n, batch=4, network=network, obs=obs)
+    if crash:
+        sim.schedule_crash(*crash)
+        alive = [s for s in sim.servers.values() if s.sid != crash[0]]
+    else:
+        alive = list(sim.servers.values())
+    sim.start()
+    sim.run(until=lambda: min(len(s.delivered) for s in alive) >= rounds,
+            max_time=max_time)
+    return obs.recorder.events
+
+
+def _assert_exact(report):
+    assert report.paths
+    for p in report.paths:
+        assert p.exact(), (p.sid, p.round, p.components)
+        assert all(p.components[c] >= 0 for c in COMPONENTS)
+        assert float(sum(p.components.values())) == p.t_deliver - p.t_abcast
+
+
+# ---------------------------------------------------------------- exactness
+
+@pytest.mark.parametrize("algo", ["allconcur+", "allconcur", "allgather"])
+def test_decomposition_exact_failure_free(algo):
+    report = critical_paths(_run_sim(algo, 8))
+    _assert_exact(report)
+    assert report.skipped == 0
+
+
+@pytest.mark.parametrize("algo", ["allconcur+", "allconcur"])
+def test_decomposition_exact_under_crash(algo):
+    events = _run_sim(algo, 8, crash=(1, 0.0005, 1), rounds=14)
+    report = critical_paths(events)
+    _assert_exact(report)
+
+
+def test_decomposition_exact_eon_flip_cluster():
+    """Logical-clock Cluster harness through crash + add_server eon flip:
+    whole-hop transit decomposition stays an exact partition."""
+    obs = Observability()
+    cluster, services = build_smr_cluster(6, 2, seed=11, codec=True, obs=obs)
+    cluster.start()
+    for cid in range(4):
+        for seq in range(3):
+            services[cid % 6].submit(
+                ClientRequest(cid, seq, {"op": "incr", "key": f"k{cid}"}))
+    cluster.run_until(lambda: cluster.min_delivered_rounds() >= 2)
+    cluster.crash(5, partial_sends=1)
+    from repro.smr import AdminClient
+    add_smr_server(cluster, services, 6, seeds=[0, 1], d=2)
+    AdminClient().add(services[2], 6)
+    cluster.run_until(lambda: not cluster.servers[6].joining,
+                      max_steps=400_000)
+    # a post-join write wave, so rounds abcast in the new eon get delivered
+    for cid in range(4):
+        for seq in (3, 4):
+            services[cid % 6].submit(
+                ClientRequest(cid, seq, {"op": "incr", "key": f"k{cid}"}))
+    cluster.run_until(lambda: all(not services[s].pending
+                                  for s in cluster.alive()),
+                      max_steps=400_000)
+    obs.uninstall_wire()
+    report = critical_paths(obs.recorder.events)
+    _assert_exact(report)
+    assert any(p.eon > 0 for p in report.paths), "no post-flip delivery"
+
+
+# ------------------------------------------------- the mechanism, asserted
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_failure_free_dual_is_propagation_dominated(n):
+    """Paper mechanism, failure-free: latency ~ depth(G_U) x propagation.
+    On the inter-DC network (ms-scale propagation vs us-scale NIC) every
+    critical path must be all-G_U, prop-dominant, and at least as deep as
+    the binomial dissemination tree."""
+    report = critical_paths(_run_sim("allconcur+", n, network="mdc",
+                                     max_time=60.0))
+    _assert_exact(report)
+    depth = (n - 1).bit_length()
+    assert all(p.dominant() == "prop" for p in report.paths)
+    assert all(p.hops_gr == 0 for p in report.paths)
+    assert max(p.hops_gu for p in report.paths) >= depth
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_crash_flips_dominant_component_to_wait(n):
+    """Paper mechanism under a crash: the rolled-back round completes as a
+    reliable round whose critical path is blocked on failure detection of
+    the crashed predecessor — pred-wait dominates (fd timeout 10 ms >>
+    us-scale sdc hops) and the path runs over G_R."""
+    events = _run_sim("allconcur+", n, crash=(1, 0.0005, 1), rounds=14)
+    report = critical_paths(events)
+    _assert_exact(report)
+    reliable = [p for p in report.paths if p.rtype == "RELIABLE"]
+    assert reliable, "crash run produced no reliable deliveries"
+    assert all(p.dominant() == "wait" for p in reliable)
+    assert all(p.hops_gr > 0 for p in reliable)
+    # and the wait component is the fd timeout scale, not hop noise
+    assert all(p.components["wait"] > Fraction(5, 1000) for p in reliable)
+
+
+# --------------------------------------------- vecsim cross-validation
+
+@pytest.mark.parametrize("mode,n", [(m, n)
+                                    for m in ("allconcur+", "allconcur",
+                                              "allgather")
+                                    for n in (8, 16)])
+def test_vecsim_trace_matches_event_simulator_exactly(mode, n):
+    """The lean replay re-executes dissemination with the event simulator's
+    float arithmetic in the event simulator's order — so decompositions
+    must be *equal*, not approximately equal."""
+    sim_report = critical_paths(_run_sim(mode, n))
+    vec_report = critical_paths_for_config(mode, n, rounds=ROUNDS)
+    sim_by, vec_by = sim_report.by_key(), vec_report.by_key()
+    wanted = {k for k in sim_by if k[3] <= ROUNDS - 1}
+    assert wanted and wanted <= set(vec_by)
+    for k in wanted:
+        s, v = sim_by[k], vec_by[k]
+        assert s.components == v.components, k
+        assert s.shape == v.shape, k
+        assert s.t_abcast == v.t_abcast and s.t_deliver == v.t_deliver, k
+
+
+@pytest.mark.parametrize("mode", ["allconcur+", "allconcur", "allgather"])
+def test_vecsim_replay_consistent_with_engine(mode):
+    replay_med, engine_med = engine_consistency(mode, 16, rounds=ROUNDS)
+    assert replay_med == pytest.approx(engine_med, rel=2e-3)
+
+
+def test_synthetic_trace_is_decomposable_and_exact():
+    report = critical_paths(synthetic_trace("allconcur+", 8, rounds=4))
+    _assert_exact(report)
+    assert report.skipped == 0
+
+
+# ------------------------------------------- corrupt DAGs and trace diff
+
+def _mini_trace():
+    return synthetic_trace("allconcur+", 8, rounds=2)
+
+
+def test_orphan_recv_raises_typed_error():
+    events = [e for e in _mini_trace() if e[1] != "send"]
+    with pytest.raises(CausalDagError) as ei:
+        build_dag(events)
+    assert ei.value.code == "orphan_recv"
+
+
+def test_unmatched_send_raises_only_in_strict_mode():
+    events = [e for e in _mini_trace() if e[1] != "recv"]
+    match_hops(events)              # tolerated: frames legally in flight
+    with pytest.raises(CausalDagError) as ei:
+        match_hops(events, strict=True)
+    assert ei.value.code == "unmatched_send"
+
+
+def test_diff_traces_identical_and_divergent():
+    a = _mini_trace()
+    assert diff_traces(a, list(a)).identical
+
+    # census divergence: drop one matched send + its recv, keeping the
+    # DAG well-formed
+    hop = match_hops(a).hops[-1]
+    b = [e for i, e in enumerate(a)
+         if i not in (hop.send_idx, hop.recv_idx)]
+    d = diff_traces(a, b)
+    assert not d.identical
+    assert any(div.startswith("census:") for div in d.divergences)
+    assert any(div.startswith("hops:") for div in d.divergences)
+
+    # critical-path shape divergence: same census, different hop timing
+    c = synthetic_trace("allconcur+", 8, rounds=2, network="mdc")
+    d2 = diff_traces(a, c)
+    assert not d2.identical

@@ -82,6 +82,45 @@ def test_recorder_jsonl_roundtrip_and_chrome(tmp_path):
     assert {"M", "X", "i"} <= phases            # names, slices, instants
 
 
+def test_recorder_roundtrip_is_lossless(tmp_path):
+    """Emit-time normalization makes the JSONL round-trip an identity:
+    in-memory events equal the reloaded file, field for field — and a
+    field JSON can't represent is an emit-time TypeError, not silent
+    mangling at export."""
+    rec = TraceRecorder()
+    rec.emit_at(1.0, "deliver", 0, round=1, srcs=(0, 1, 2), eon=0,
+                nested={"a": (1, 2), "b": [(3, 4)]})
+    rec.emit_at(2.0, "send", 1, dst=2, bytes=100, txs=2.0, txe=2.5)
+    path = tmp_path / "rt.jsonl"
+    rec.to_jsonl(str(path))
+    back = load_jsonl(str(path))
+    assert list(rec.iter_dicts()) == back
+    assert back[0]["srcs"] == [0, 1, 2]         # normalized at emit already
+    assert back[0]["nested"] == {"a": [1, 2], "b": [[3, 4]]}
+
+    rec2 = TraceRecorder()
+    rec2.emit_at(1.0, "deliver", 0, blob=object())
+    with pytest.raises(TypeError, match="lossless"):
+        rec2.to_jsonl(str(tmp_path / "bad.jsonl"))
+
+
+def test_chrome_export_has_flow_arrows(tmp_path):
+    """Matched send -> recv hops become Chrome flow-event pairs (ph s/f
+    joined by id), so Perfetto draws the dissemination arrows."""
+    obs = Observability(metrics=False)
+    sim, _met = build_simulation("allconcur+", 8, obs=obs)
+    sim.start()
+    sim.run(max_time=0.002)
+    path = tmp_path / "flow.trace.json"
+    obs.recorder.to_chrome(str(path))
+    doc = json.loads(path.read_text())
+    starts = [e for e in doc["traceEvents"] if e["ph"] == "s"]
+    ends = [e for e in doc["traceEvents"] if e["ph"] == "f"]
+    assert starts and len(starts) == len(ends)
+    assert {e["id"] for e in starts} == {e["id"] for e in ends}
+    assert all(e.get("bp") == "e" for e in ends)
+
+
 # ------------------------------------------------- invariants under chaos
 
 def _drive_smr(cluster, services, writers=4, seqs=3):

@@ -1,0 +1,67 @@
+"""Real-socket loopback bench: n=5 OS processes over UDS on one host.
+
+Measures what the simulated rows cannot — actual end-to-end commit latency
+through real sockets, real framing, and real process scheduling: submit a
+client command to one worker, wait for its commit ack, repeat across
+phases.  Emits the p50/p99 submit->ack latency and the measured
+``msgs_per_delivery`` (from the merged per-process trace, same
+work-accounting as the simulator rows — the paper's §IV comparison metric
+must come out in the same regime on a real transport).
+
+Everything here is wall clock on a shared host: the row flags itself
+``wall_clock=1`` so ``check_bench`` gates it with the loose wall band, not
+the strict simulated-time band.
+"""
+from __future__ import annotations
+
+import asyncio
+import tempfile
+
+from . import common
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(int(q * (len(sorted_vals) - 1) + 0.5), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+def main(full: bool = False) -> None:
+    from repro.net.harness import Controller, make_plan, run_workload
+    from repro.obs.trace import load_jsonl
+    from repro.obs.work import work_from_trace
+
+    n, d = 5, 2
+    phases, writes = (10, 6) if full else (5, 4)
+
+    async def run(td):
+        ctl = Controller(td, list(range(n)), transport="uds", d=d,
+                         chaos=None, hb_timeout=2.0, trace_dir=td)
+        plan = make_plan(0, n, phases=phases, writes_per_phase=writes)
+        try:
+            return await run_workload(ctl, plan, n)
+        finally:
+            await ctl.stop_all()
+
+    with tempfile.TemporaryDirectory() as td:
+        res = asyncio.run(run(td))
+        events = []
+        for shard in res["shards"]:
+            events.extend(load_jsonl(shard))
+        events.sort(key=lambda ev: ev.get("t", 0.0))
+
+    lats = sorted(res["latencies"])
+    p50, p99 = _percentile(lats, 0.50), _percentile(lats, 0.99)
+    w = work_from_trace(events)
+    common.emit(
+        "net_loopback_n5",
+        p50 * 1e6,
+        f"p50_commit_ms={p50 * 1e3:.3f};p99_commit_ms={p99 * 1e3:.3f};"
+        f"msgs_per_delivery={w.msgs_per_delivery:.2f};"
+        f"deliveries={w.delivered};acks={len(lats)};"
+        f"reconnects={res['reconnects']};wall_clock=1")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
                          "table3|fig3|fig4|fig5|fig6|arch|smr|sweep_vec|"
-                         "tropical|obs")
+                         "tropical|obs|net_loopback")
     ap.add_argument("--engine", default="event",
                     choices=("event", "vec", "pallas"),
                     help="fig4/fig6 backend: per-event heap, the "
@@ -30,10 +30,11 @@ def main() -> None:
                     help="dump results as JSON to PATH")
     args = ap.parse_args()
 
-    from . import (arch_microbench, common, obs_overhead, paper_fig3_batching,
-                   paper_fig4_scaling, paper_fig5_failures,
-                   paper_fig6_robustness, paper_table3_connectivity,
-                   smr_throughput, sweep_vec, tropical_bench)
+    from . import (arch_microbench, common, net_loopback, obs_overhead,
+                   paper_fig3_batching, paper_fig4_scaling,
+                   paper_fig5_failures, paper_fig6_robustness,
+                   paper_table3_connectivity, smr_throughput, sweep_vec,
+                   tropical_bench)
 
     benches = {
         "table3": paper_table3_connectivity.main,
@@ -48,6 +49,7 @@ def main() -> None:
         "sweep_vec": sweep_vec.main,
         "tropical": tropical_bench.main,
         "obs": obs_overhead.main,
+        "net_loopback": net_loopback.main,
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(benches):

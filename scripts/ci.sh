@@ -2,7 +2,8 @@
 # Staged CI pipeline.  Run everything:        scripts/ci.sh
 #                      Run a single stage:    scripts/ci.sh <stage>
 # Stages (fail-fast, in order):
-#   lint tier1 kernels-smoke wire-fuzz-smoke obs-smoke membership-chaos bench
+#   lint tier1 kernels-smoke wire-fuzz-smoke obs-smoke net-smoke
+#   membership-chaos bench
 #
 # Slow tests (>60 s) stay behind pytest --runslow and are not part of this
 # default gate.  The bench stage writes BENCH_ci.fresh.json (gitignored) and
@@ -77,6 +78,21 @@ stage_obs_smoke() {
     --diff tests/golden/trace_run.jsonl
 }
 
+stage_net_smoke() {
+  echo "== net-smoke: 3-process UDS cluster through the chaos proxy (time-boxed 300 s) =="
+  local tmp
+  tmp="$(mktemp -d)"
+  trap 'rm -rf "$tmp"; trap - RETURN' RETURN
+  # real OS processes, CRC32C frames over unix sockets, byte-level chaos in
+  # the middle; the harness exits non-zero unless the final digest is
+  # bit-identical to the in-process Cluster oracle on the same plan
+  timeout 300 python -m repro.net.harness --smoke --n 3 --chaos --seed 7 \
+    --outdir "$tmp"
+  echo "== net-smoke: merge per-process trace shards + invariant gate =="
+  timeout 60 python scripts/trace_report.py "$tmp/merged.jsonl" \
+    --merge "$tmp"/n*.jsonl --check
+}
+
 stage_membership_chaos() {
   echo "== membership-chaos: slow-marked chaos suite (time-boxed 600 s) =="
   # randomized schedules interleaving writes, crashes and add/remove
@@ -86,11 +102,12 @@ stage_membership_chaos() {
 }
 
 stage_bench() {
-  echo "== bench: SMR throughput + vectorized sweep + obs overhead (CI size) =="
+  echo "== bench: SMR throughput + vectorized sweep + obs overhead + net loopback (CI size) =="
   # --json merges by row name into an existing file; start from scratch so
   # the gate sees exactly this run
   rm -f BENCH_ci.fresh.json
-  python -m benchmarks.run --only smr,sweep_vec,obs --json BENCH_ci.fresh.json
+  python -m benchmarks.run --only smr,sweep_vec,obs,net_loopback \
+    --json BENCH_ci.fresh.json
   echo "== bench-regression gate (vs committed BENCH_ci.json) =="
   # CHECK_BENCH_FLAGS loosens the wall-clock-sensitive bounds on foreign
   # hardware (the GitHub workflow sets it); unset = full strictness on the
@@ -102,7 +119,7 @@ stage_bench() {
   python -c "import json; [print(' ', r['name'], {k: v for k, v in r.items() if k != 'name'}) for r in json.load(open('BENCH_ci.fresh.json'))]"
 }
 
-ALL_STAGES=(lint tier1 kernels-smoke wire-fuzz-smoke obs-smoke
+ALL_STAGES=(lint tier1 kernels-smoke wire-fuzz-smoke obs-smoke net-smoke
             membership-chaos bench)
 
 run_stage() {
@@ -112,6 +129,7 @@ run_stage() {
     kernels-smoke)    stage_kernels_smoke ;;
     wire-fuzz-smoke)  stage_wire_fuzz_smoke ;;
     obs-smoke)        stage_obs_smoke ;;
+    net-smoke)        stage_net_smoke ;;
     membership-chaos) stage_membership_chaos ;;
     bench)            stage_bench ;;
     *) echo "unknown stage: $1 (choose from: ${ALL_STAGES[*]})" >&2; exit 2 ;;

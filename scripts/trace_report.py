@@ -10,6 +10,7 @@ Usage::
     python scripts/trace_report.py TRACE.jsonl --critpath --top 10
     python scripts/trace_report.py TRACE.jsonl --diff GOLDEN.jsonl
     python scripts/trace_report.py TRACE.jsonl --metrics [SIDECAR.json]
+    python scripts/trace_report.py MERGED.jsonl --merge SHARD.jsonl... [--check]
 
 Input is the JSONL written by ``TraceRecorder.to_jsonl`` (one event object
 per line).  The full report prints, in order: the event census, the
@@ -23,6 +24,16 @@ the per-component means); ``--diff GOLDEN`` compares the trace structurally
 against a golden fixture (event census, per-broadcast hop sets,
 critical-path shapes); ``--metrics`` dumps the metrics-registry sidecar
 written next to the trace (default ``TRACE.metrics.json``).
+
+``--merge`` turns the positional argument into an *output* path: the given
+per-process shards (one JSONL per worker of a real-network run) are
+concatenated, stably sorted by timestamp, and written there; any further
+requested mode then runs on the merged events.  Merging is only sound when
+every shard was stamped from one clock domain — the net harness stamps
+``time.monotonic()``, which is the system-wide CLOCK_MONOTONIC shared by
+all processes on one host (see ``src/repro/obs/README.md``).  Unreadable
+shards are skipped with a warning (a crashed worker never writes its
+shard); at least one shard must load.
 
 Exit codes (stable, CI-greppable):
 
@@ -192,9 +203,40 @@ def _metrics(trace_path: str, sidecar: str) -> int:
     return 0
 
 
+def _merge(out_path: str, shard_paths: List[str]) -> List[Dict[str, Any]]:
+    """Concatenate per-process trace shards, stable-sort on the (shared
+    monotonic) clock, write the merged JSONL, return the events."""
+    events: List[Dict[str, Any]] = []
+    loaded = 0
+    for p in shard_paths:
+        try:
+            shard = load_jsonl(p)
+        except (OSError, ValueError) as exc:
+            print(f"trace_report: skipping shard {p}: {exc}", file=sys.stderr)
+            continue
+        events.extend(shard)
+        loaded += 1
+    if loaded == 0:
+        raise OSError("no shard could be loaded")
+    # stable sort: events with equal stamps keep shard order, so one
+    # process's intra-tick emission order is never scrambled
+    events.sort(key=lambda ev: ev.get("t", 0.0))
+    with open(out_path, "w") as fh:
+        for ev in events:
+            fh.write(json.dumps(ev) + "\n")
+    print(f"merged {loaded}/{len(shard_paths)} shards "
+          f"({len(events)} events) -> {out_path}")
+    return events
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("trace", help="JSONL trace file (TraceRecorder.to_jsonl)")
+    ap.add_argument("trace", help="JSONL trace file (TraceRecorder.to_jsonl);"
+                                  " with --merge, the merged output path")
+    ap.add_argument("--merge", nargs="+", metavar="SHARD",
+                    help="merge per-process trace shards (stable sort on the "
+                         "shared monotonic clock) into TRACE, then run the "
+                         "other requested modes on the merged events")
     ap.add_argument("--check", action="store_true",
                     help="run only the invariant checker (exit 2 on violation)")
     ap.add_argument("--work", action="store_true",
@@ -215,12 +257,22 @@ def main(argv=None) -> int:
                          "TRACE-stem + .metrics.json)")
     args = ap.parse_args(argv)
 
-    try:
-        events = load_jsonl(args.trace)
-    except (OSError, ValueError) as exc:
-        print(f"trace_report: cannot read {args.trace}: {exc}",
-              file=sys.stderr)
-        return 1
+    if args.merge:
+        try:
+            events = _merge(args.trace, args.merge)
+        except OSError as exc:
+            print(f"trace_report: merge failed: {exc}", file=sys.stderr)
+            return 1
+        if not (args.check or args.work or args.critpath or args.diff
+                or args.metrics is not None):
+            return 0    # merge-only invocation
+    else:
+        try:
+            events = load_jsonl(args.trace)
+        except (OSError, ValueError) as exc:
+            print(f"trace_report: cannot read {args.trace}: {exc}",
+                  file=sys.stderr)
+            return 1
     if not events:
         print(f"trace_report: {args.trace} holds no events", file=sys.stderr)
         return 1

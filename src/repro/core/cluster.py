@@ -10,6 +10,14 @@ Fig. 1).
 This harness is for *correctness* (hypothesis drives it through thousands of
 schedules); timing/throughput live in ``repro.sim``.
 
+Each server is wrapped in a sans-I/O :class:`~repro.runtime.node.NodeRuntime`
+— the runtime owns codec round-trips, observability recording and SMR
+attachment; the cluster is a pure scheduler that picks which runtime input
+fires next and routes the returned :class:`~repro.runtime.effects.SendBytes`
+effects into the FIFO channels.  The perfect failure detector stays a
+*scheduler* concern (``_fd_choices`` models Proposition III.14's premise:
+a timeout fires only once the target's FIFO channel has drained).
+
 ``codec=True`` round-trips every delivered message through the wire codec
 (``repro.wire``): the receiver processes ``decode(encode(msg))`` instead of
 the in-memory object, so schedule-randomized protocol tests double as
@@ -22,6 +30,7 @@ import random
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
+from ..runtime import NodeRuntime, SendBytes
 from .digraph import gs_digraph
 from .overlay import make_overlay
 from .server import AllConcurServer, DeliveryRecord, Mode
@@ -44,40 +53,36 @@ class Cluster:
         obs: Optional[Any] = None,
     ):
         self.codec = codec
-        self.wire_frames = 0          # frames round-tripped (codec=True)
-        self.wire_bytes = 0           # total encoded bytes (codec=True)
-        if codec:
-            # local import: repro.wire imports core.messages, and this module
-            # is itself imported while the core package initializes
-            from ..wire import decode as _wire_decode, encode as _wire_encode
-            self._wire_encode, self._wire_decode = _wire_encode, _wire_decode
         # observability (repro.obs.Observability, or None = zero overhead):
-        # the recorder gets the step counter as its logical clock; sends are
-        # recorded at drain, receives (with bytes when codec=True) at step
+        # the recorder gets the step counter as its logical clock; the
+        # runtimes emit send/recv/fd events and feed the shared counters
         self.obs = obs
         self._rec = obs.recorder if obs is not None else None
         if self._rec is not None:
             self._rec.clock = lambda: float(self.steps)
+        self._counters: Optional[Dict[str, Any]] = None
+        self._c_steps = None
         if obs is not None and obs.registry is not None:
             reg = obs.registry
-            self._c_msgs = reg.counter("cluster.msgs_sent")
-            self._c_over = reg.counter("cluster.overhead_msgs_sent")
-            self._c_app = reg.counter("cluster.app_msgs_sent")
-            self._c_bytes = reg.counter("cluster.bytes_sent")
+            self._counters = {
+                "msgs": reg.counter("cluster.msgs_sent"),
+                "over": reg.counter("cluster.overhead_msgs_sent"),
+                "app": reg.counter("cluster.app_msgs_sent"),
+                "bytes": reg.counter("cluster.bytes_sent"),
+            }
             self._c_steps = reg.counter("cluster.steps")
-            self._c_fd = reg.counter("cluster.fd_events")
+            self._counters["fd"] = reg.counter("cluster.fd_events")
             if codec:
                 obs.install_wire()
-        else:
-            self._c_msgs = None
         self.n = n
         self.members = list(range(n))
         self.rng = random.Random(seed)
         payload_fn = payload_fn or (lambda sid, rnd: f"p{sid}:r{rnd}")
         self.servers: Dict[int, AllConcurServer] = {}
+        self.runtimes: Dict[int, NodeRuntime] = {}
         f = max(d - 1, 0)
         for sid in self.members:
-            self.servers[sid] = AllConcurServer(
+            srv = AllConcurServer(
                 sid,
                 self.members,
                 overlay_u=make_overlay(overlay, self.members),
@@ -90,11 +95,9 @@ class Cluster:
                 f=f,
                 primary_partition=primary_partition,
             )
-        if obs is not None:
-            from ..obs.trace import mdesc as _mdesc
-            self._mdesc = _mdesc
-            for srv in self.servers.values():
-                obs.attach_server(srv)
+            self.servers[sid] = srv
+            self.runtimes[sid] = NodeRuntime(
+                srv, codec=codec, codec_n=n, obs=obs, counters=self._counters)
         self.channels: Dict[Tuple[int, int], deque] = {}
         self.crashed: Set[int] = set()
         # delivered FD events, keyed (target, det, det's eon): failure
@@ -103,40 +106,50 @@ class Cluster:
         # re-announces it on the new digraph
         self.fd_done: Set[Tuple[int, int, int]] = set()
         self.steps = 0
+        # wire accounting of runtimes replaced by add_server (re-joins)
+        self._retired_wire_frames = 0
+        self._retired_wire_bytes = 0
+
+    @property
+    def wire_frames(self) -> int:
+        """Frames round-tripped through the codec (codec=True)."""
+        return self._retired_wire_frames + sum(
+            rt.wire_frames for rt in self.runtimes.values())
+
+    @property
+    def wire_bytes(self) -> int:
+        """Total encoded bytes (codec=True)."""
+        return self._retired_wire_bytes + sum(
+            rt.wire_bytes for rt in self.runtimes.values())
 
     # ----------------------------------------------------------------- wiring
     def start(self) -> None:
-        for s in self.servers.values():
-            s.start()
-            self._drain(s)
+        for rt in self.runtimes.values():
+            self._dispatch(rt, rt.start())
 
-    def _drain(self, server: AllConcurServer, allow: Optional[int] = None) -> None:
-        """Move messages from a server's outbox into channels.  ``allow``
-        truncates to the first ``allow`` sends (crash mid-send)."""
-        out = server.outbox
-        server.outbox = []
-        if server.sid in self.crashed:
+    def _dispatch(self, rt: NodeRuntime, effects: List[Any],
+                  allow: Optional[int] = None) -> None:
+        """Route a runtime's effects: SendBytes enter the FIFO channels (the
+        runtime records the send), EonFlip/Deliver need no scheduler action
+        here (FD re-arming across flips is the eon key in ``fd_done``).
+        ``allow`` truncates a crashed sender to its first ``allow`` sends
+        (crash mid-send)."""
+        sends = [e for e in effects if isinstance(e, SendBytes)]
+        if rt.sid in self.crashed:
             if allow is None:
                 return
-            out = out[:allow]
-        rec = self._rec
-        count = self._c_msgs is not None
-        for dst, msg in out:
-            if dst == server.sid:
+            sends = sends[:allow]
+        for e in sends:
+            if e.dst == rt.sid:
                 continue
-            self.channels.setdefault((server.sid, dst), deque()).append(msg)
-            if rec is not None or count:
-                d = self._mdesc(msg)
-                if count:
-                    g = d["g"]
-                    if d["m"] == "msg":
-                        self._c_msgs.inc()
-                    elif g == "app":
-                        self._c_app.inc()
-                    else:
-                        self._c_over.inc()
-                if rec is not None:
-                    rec.emit("send", server.sid, dst=dst, **d)
+            self.channels.setdefault((rt.sid, e.dst), deque()).append(e.msg)
+            rt.record_send(e.dst, e.msg)
+
+    def _drain(self, server: AllConcurServer,
+               allow: Optional[int] = None) -> None:
+        """Move a server's queued sends into channels (see ``_dispatch``)."""
+        rt = self.runtimes[server.sid]
+        self._dispatch(rt, rt.drain(), allow=allow)
 
     # ---------------------------------------------------------------- control
     def crash(self, sid: int, partial_sends: Optional[int] = None) -> None:
@@ -147,10 +160,9 @@ class Cluster:
         already-crashed server someone's predecessor re-arms detection)."""
         if sid in self.crashed:
             return
-        srv = self.servers[sid]
-        self._drain(srv, allow=(partial_sends if partial_sends is not None else None))
+        self._drain(self.servers[sid], allow=partial_sends)
         self.crashed.add(sid)
-        srv.outbox = []
+        self.servers[sid].outbox = []
         if self._rec is not None:
             self._rec.emit("crash", sid, partial_sends=partial_sends)
 
@@ -159,9 +171,14 @@ class Cluster:
         replica re-joining under its old id, the crashed state and stale FD
         bookkeeping are cleared so a later crash is detected afresh."""
         sid = server.sid
+        old = self.runtimes.get(sid)
+        if old is not None:
+            self._retired_wire_frames += old.wire_frames
+            self._retired_wire_bytes += old.wire_bytes
         self.servers[sid] = server
-        if self.obs is not None:
-            self.obs.attach_server(server)
+        rt = NodeRuntime(server, codec=self.codec, codec_n=self.n,
+                         obs=self.obs, counters=self._counters)
+        self.runtimes[sid] = rt
         if sid not in self.members:
             self.members.append(sid)
         self.crashed.discard(sid)
@@ -169,11 +186,12 @@ class Cluster:
         for ch in list(self.channels):
             if sid in ch:
                 del self.channels[ch]   # drop pre-crash in-flight traffic
-        self._drain(server)
+        self._dispatch(rt, rt.drain())
 
     # -------------------------------------------------------------- scheduler
     def pending_channels(self) -> List[Tuple[int, int]]:
-        return [ch for ch, q in self.channels.items() if q and ch[1] not in self.crashed]
+        return [ch for ch, q in self.channels.items()
+                if q and ch[1] not in self.crashed]
 
     def _fd_choices(self) -> List[Tuple[int, int]]:
         """Eligible (target, det) perfect-FD events: det's current G_R has
@@ -183,12 +201,10 @@ class Cluster:
         arrived (Proposition III.14's premise)."""
         out: List[Tuple[int, int]] = []
         for target in self.crashed:
-            for det, srv in self.servers.items():
-                if det in self.crashed or srv.halted or srv.joining:
+            for det, rt in self.runtimes.items():
+                if det in self.crashed or not rt.eligible_detector(target):
                     continue
-                if (target, det, srv.eon) in self.fd_done:
-                    continue
-                if target not in srv.g_r or det not in srv.g_r.successors(target):
+                if (target, det, rt.eon) in self.fd_done:
                     continue
                 if not self.channels.get((target, det)):
                     out.append((target, det))
@@ -209,37 +225,15 @@ class Cluster:
         if kind == "msg":
             src, dst = pick
             msg = self.channels[(src, dst)].popleft()
-            nbytes = None
-            if self.codec:
-                frame = self._wire_encode(msg, n=self.n)
-                self.wire_frames += 1
-                self.wire_bytes += len(frame)
-                nbytes = len(frame)
-                msg = self._wire_decode(frame)
-            if self._c_msgs is not None:
+            if self._c_steps is not None:
                 self._c_steps.inc()
-                if nbytes is not None:
-                    self._c_bytes.inc(nbytes)
-            if self._rec is not None:
-                d = self._mdesc(msg)
-                if nbytes is not None:
-                    d["bytes"] = nbytes
-                self._rec.emit("recv", dst, src=src, **d)
-            srv = self.servers[dst]
-            if not srv.halted:
-                srv.on_message(msg)
-                self._drain(srv)
+            rt = self.runtimes[dst]
+            self._dispatch(rt, rt.deliver(msg, src=src))
         else:
             target, det = pick
-            srv = self.servers[det]
-            self.fd_done.add((target, det, srv.eon))
-            if self._c_msgs is not None:
-                self._c_fd.inc()
-            if self._rec is not None:
-                self._rec.emit("fd", det, target=target)
-            if not srv.halted and det not in self.crashed:
-                srv.on_failure_detected(target)
-                self._drain(srv)
+            rt = self.runtimes[det]
+            self.fd_done.add((target, det, rt.eon))
+            self._dispatch(rt, rt.on_peer_down(target))
         return True
 
     def run(self, max_steps: int = 2_000_000) -> int:
@@ -248,7 +242,8 @@ class Cluster:
             k += 1
         return k
 
-    def run_until(self, pred: Callable[[], bool], max_steps: int = 2_000_000) -> bool:
+    def run_until(self, pred: Callable[[], bool],
+                  max_steps: int = 2_000_000) -> bool:
         k = 0
         while k < max_steps:
             if pred():

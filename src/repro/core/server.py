@@ -122,10 +122,11 @@ class AllConcurServer:
         self._marker_sent: Set[Tuple[int, int]] = set()
         self._n0 = len(self.members)     # initial n (majority base)
 
-        # eons (§III-I): pending update = (G_R builder, membership delta)
-        self._pending_gr_update: Optional[
+        # eons (§III-I): FIFO of pending updates, each (G_R builder,
+        # membership delta) — one flip per entry, applied in schedule order
+        self._pending_gr_updates: List[
             Tuple[Callable[[Sequence[int]], Digraph],
-                  List[Tuple[str, int]]]] = None
+                  List[Tuple[str, int]]]] = []
         self._next_eon_buffer: List[Any] = []
         self._eon_replay: List[Any] = []
 
@@ -689,18 +690,24 @@ class AllConcurServer:
         and the eon number increments.  In DUAL mode with no failure in
         flight, the transitional round is forced voluntarily (T_VR) at the
         next unreliable round completion.  Repeated calls before the flip
-        merge their deltas (the latest builder wins)."""
+        *queue*: each scheduled update gets its own transitional round and
+        its own flip (two racing AddServer commands land at eons e+1 and
+        e+2, never merged into one flip — every eon's membership is the
+        agreed state some transitional round committed)."""
         delta = ([("add", int(s)) for s in add]
                  + [("remove", int(s)) for s in remove])
-        if self._pending_gr_update is None:
-            self._pending_gr_update = (builder, delta)
-        else:
-            _, old_delta = self._pending_gr_update
-            self._pending_gr_update = (builder, old_delta + delta)
+        self._pending_gr_updates.append((builder, delta))
+
+    @property
+    def _pending_gr_update(self) -> Optional[
+            Tuple[Callable[[Sequence[int]], Digraph],
+                  List[Tuple[str, int]]]]:
+        """Head of the pending-update queue (None when idle) — the update
+        the *next* transitional reliable round will apply."""
+        return self._pending_gr_updates[0] if self._pending_gr_updates else None
 
     def _apply_eon_update(self) -> None:
-        builder, delta = self._pending_gr_update
-        self._pending_gr_update = None
+        builder, delta = self._pending_gr_updates.pop(0)
         members = list(self.members)
         for action, s in delta:
             if action == "add" and s not in members:

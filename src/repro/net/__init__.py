@@ -1,0 +1,18 @@
+"""Real-socket transport for the sans-I/O runtime.
+
+One :class:`~repro.net.transport.NetNode` per OS process drives a
+:class:`~repro.runtime.node.NodeRuntime` over asyncio TCP or Unix-domain
+sockets: CRC32C-framed messages, a per-channel exactly-once replay
+handshake, and the runtime's heartbeat failure detector mapped onto real
+timers.  :mod:`~repro.net.chaos` fronts listeners with a byte-mutating
+proxy; :mod:`~repro.net.harness` spawns process clusters and cross-checks
+their digests against the in-process ``Cluster`` oracle.
+"""
+from .chaos import QUIET, ChaosConfig, ChaosProxy
+from .transport import NetNode, parse_addr
+
+# the process harness (Controller / run_workload / oracle_digest) lives in
+# repro.net.harness and is imported explicitly — it is also the worker's
+# ``-m`` entry point, and importing it here would shadow that module run
+
+__all__ = ["QUIET", "ChaosConfig", "ChaosProxy", "NetNode", "parse_addr"]

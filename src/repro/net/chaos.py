@@ -1,0 +1,165 @@
+"""Byte-level chaos proxy for the real-socket transport.
+
+Sits in front of a node's protocol listener: peers dial the proxy, the
+proxy dials the real listener and pipes bytes both ways, mutating them on
+the way through.  Mutations are the failure modes a real network + kernel
+can produce below the protocol (plus a couple TCP normally hides, to prove
+the frame CRCs carry the weight):
+
+* **delay**    — hold a chunk for a random interval (out-of-band latency);
+* **drop**     — delete a random slice of bytes from a chunk;
+* **reorder**  — hold a chunk and emit it after the next one;
+* **bit-flip** — flip one random bit;
+* **truncate** — forward a prefix of a chunk, then kill the connection.
+
+The transport's contract under all of these: corruption surfaces as a
+typed :class:`~repro.wire.errors.WireDecodeError` (or a dead connection),
+the stream is torn down, and the per-channel replay handshake re-delivers
+exactly the frames the receiver had not consumed — protocol state never
+diverges.  A chaos rate high enough to break *that* is a transport bug by
+definition, which is what the soak test is for.
+
+All randomness is seeded (per proxy, stream-id-salted per connection), so
+a failing soak run replays with its seed.
+"""
+from __future__ import annotations
+
+import asyncio
+import random
+from dataclasses import dataclass
+from typing import Optional
+
+from .transport import open_connection, start_server
+
+
+@dataclass
+class ChaosConfig:
+    """Per-chunk mutation probabilities (independent draws per chunk)."""
+    seed: int = 0
+    delay_p: float = 0.05
+    delay_max: float = 0.005     # seconds; keep well under the FD timeout
+    drop_p: float = 0.01
+    drop_max: int = 64           # bytes deleted per drop
+    reorder_p: float = 0.02
+    bitflip_p: float = 0.01
+    truncate_p: float = 0.002    # forward a prefix, then kill the conn
+
+    def scaled(self, factor: float) -> "ChaosConfig":
+        return ChaosConfig(seed=self.seed,
+                           delay_p=self.delay_p * factor,
+                           delay_max=self.delay_max,
+                           drop_p=self.drop_p * factor,
+                           drop_max=self.drop_max,
+                           reorder_p=self.reorder_p * factor,
+                           bitflip_p=self.bitflip_p * factor,
+                           truncate_p=self.truncate_p * factor)
+
+
+#: no mutations at all — the proxy becomes a transparent byte pipe
+QUIET = ChaosConfig(delay_p=0.0, drop_p=0.0, reorder_p=0.0,
+                    bitflip_p=0.0, truncate_p=0.0)
+
+#: how long a reorder-held chunk may wait for a successor before flushing
+HOLD_FLUSH = 0.01
+
+
+class ChaosProxy:
+    """One listener's chaos front: ``listen`` is the public address peers
+    dial, ``target`` the node's real bind address."""
+
+    def __init__(self, listen: str, target: str,
+                 cfg: Optional[ChaosConfig] = None):
+        self.listen = listen
+        self.target = target
+        self.cfg = cfg if cfg is not None else ChaosConfig()
+        self.connections = 0
+        self.mutations = 0
+        self.kills = 0
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> None:
+        self._server = await start_server(self.listen, self._on_accept)
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    async def _on_accept(self, reader, writer) -> None:
+        self.connections += 1
+        conn_id = self.connections
+        try:
+            t_reader, t_writer = await open_connection(self.target)
+        except (OSError, ConnectionError):
+            writer.close()
+            return
+        # independent seeded RNG per direction, salted by connection id:
+        # deterministic given (cfg.seed, accept order)
+        fwd = asyncio.ensure_future(self._pump(
+            reader, t_writer,
+            random.Random(self.cfg.seed * 1_000_003 + conn_id * 2)))
+        bwd = asyncio.ensure_future(self._pump(
+            t_reader, writer,
+            random.Random(self.cfg.seed * 1_000_003 + conn_id * 2 + 1)))
+        done, pending = await asyncio.wait(
+            {fwd, bwd}, return_when=asyncio.FIRST_COMPLETED)
+        for p in pending:
+            p.cancel()
+        writer.close()
+        t_writer.close()
+
+    async def _pump(self, reader, writer, rng: random.Random) -> None:
+        held: Optional[bytes] = None   # chunk parked by a reorder draw
+        try:
+            while True:
+                if held is not None:
+                    # a real network reorders within milliseconds; a parked
+                    # chunk with no successor (e.g. a handshake preamble the
+                    # peer is waiting on) must flush on idle, not deadlock
+                    try:
+                        data = await asyncio.wait_for(
+                            reader.read(4096), HOLD_FLUSH)
+                    except asyncio.TimeoutError:
+                        writer.write(held)
+                        await writer.drain()
+                        held = None
+                        continue
+                else:
+                    data = await reader.read(4096)
+                if not data:
+                    break
+                cfg = self.cfg
+                if rng.random() < cfg.delay_p:
+                    await asyncio.sleep(rng.uniform(0, cfg.delay_max))
+                    self.mutations += 1
+                chunk = bytearray(data)
+                if chunk and rng.random() < cfg.drop_p:
+                    at = rng.randrange(len(chunk))
+                    del chunk[at:at + rng.randint(1, cfg.drop_max)]
+                    self.mutations += 1
+                if chunk and rng.random() < cfg.bitflip_p:
+                    at = rng.randrange(len(chunk))
+                    chunk[at] ^= 1 << rng.randrange(8)
+                    self.mutations += 1
+                if rng.random() < cfg.truncate_p:
+                    writer.write(chunk[:rng.randrange(len(chunk) + 1)])
+                    await writer.drain()
+                    self.mutations += 1
+                    self.kills += 1
+                    break
+                if rng.random() < cfg.reorder_p and held is None:
+                    held = bytes(chunk)    # park it; emitted after the next
+                    self.mutations += 1
+                    continue
+                writer.write(bytes(chunk))
+                if held is not None:
+                    writer.write(held)
+                    held = None
+                await writer.drain()
+            if held is not None:
+                writer.write(held)
+                await writer.drain()
+        except asyncio.CancelledError:
+            raise
+        except (OSError, ConnectionError):
+            pass

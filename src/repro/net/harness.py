@@ -1,0 +1,581 @@
+"""Process-cluster harness: spawn one :class:`~repro.net.transport.NetNode`
+per OS process, drive a deterministic phased workload, and cross-check the
+result against the in-process :class:`~repro.core.cluster.Cluster` oracle.
+
+Worker (``python -m repro.net.harness --worker ...``): builds the same
+stack the in-process harnesses build — ``SMRService`` + ``AllConcurServer``
++ ``MembershipManager``, all attached through one ``NodeRuntime`` — and
+serves a newline-JSON control protocol on stdin/stdout:
+
+``{"cmd": "submit", "id": i, "cid": c, "seq": s, "op": {...}}``
+    enqueue a client request; replies ``{"id": i, "ok": bool}``; the later
+    commit surfaces as a spontaneous ``{"ev": "ack", "cid", "seq", "round"}``.
+``{"cmd": "status", "id": i}``
+    digest / eon / config / applied_round / transport counters.
+``{"cmd": "crash"}``
+    ``os._exit(1)`` — no flush, no goodbye, exactly like a power failure
+    (the trace shard of a crashed worker is lost; the merge tolerates it).
+``{"cmd": "shutdown", "id": i}``
+    dump the JSONL trace shard + metrics sidecar, reply, exit cleanly.
+
+Controller: allocates addresses (UDS paths, or TCP loopback ports via
+bind-port-0), fronts every listener with a
+:class:`~repro.net.chaos.ChaosProxy` when chaos is configured, spawns
+workers, and runs :func:`run_workload` — the phased schedule that makes a
+wall-clock run digest-comparable to the schedule-randomized oracle:
+
+* each phase submits through **one** server and barriers on its acks, so
+  commands enter the log in submission order, phase after phase, no matter
+  how rounds interleave (every other payload is empty);
+* a crash happens only at a phase boundary, and only to a server that never
+  submits — empty payloads make crash timing digest-invisible;
+* the single admin command (AddServer) is its own barriered step.
+
+Under those constraints the applied command sequence — and therefore the
+rolling digest — is a function of the *plan* alone, not of timing, so
+:func:`oracle_digest` (same plan through the in-process ``Cluster``) must
+produce the identical digest for any schedule seed.  Chaos, reconnects and
+failure-detection timing all wash out, which is exactly the point: they
+may delay commands, never reorder or corrupt them.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import socket
+import sys
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .chaos import ChaosConfig, ChaosProxy
+from .transport import NetNode
+
+#: (cid, seq) pair
+Pair = Tuple[int, int]
+
+PHASE_TIMEOUT = 60.0
+DEFAULT_HB_INTERVAL = 0.05
+DEFAULT_HB_TIMEOUT = 1.0
+
+
+# ---------------------------------------------------------------------------
+# deterministic phased plan (shared by the net run and the oracle)
+# ---------------------------------------------------------------------------
+
+def make_plan(seed: int, n: int, *, phases: int = 6,
+              writes_per_phase: int = 4,
+              submitters: Optional[Sequence[int]] = None,
+              num_clients: int = 4, num_keys: int = 8) -> List[dict]:
+    """A reproducible workload: per phase, one submitting server and a list
+    of ``(cid, seq, op)`` increments.  ``submitters`` restricts which
+    servers ever submit (exclude the crash victim)."""
+    import random
+    rng = random.Random(seed)
+    pool = list(submitters) if submitters is not None else list(range(n))
+    seqs: Dict[int, int] = {}
+    plan = []
+    for _ in range(phases):
+        ops = []
+        for _ in range(writes_per_phase):
+            cid = rng.randrange(num_clients)
+            seq = seqs.get(cid, 0)
+            seqs[cid] = seq + 1
+            ops.append((cid, seq,
+                        {"op": "incr", "key": rng.randrange(num_keys)}))
+        plan.append({"submitter": rng.choice(pool), "ops": ops})
+    return plan
+
+
+def oracle_digest(plan: List[dict], n: int, *, d: int = 2, seed: int = 0,
+                  crash_phase: Optional[int] = None,
+                  crash_sid: Optional[int] = None,
+                  add_phase: Optional[int] = None,
+                  add_sid: Optional[int] = None,
+                  add_seeds: Sequence[int] = (0, 1),
+                  admin_via: int = 0,
+                  max_steps: int = 2_000_000) -> Tuple[str, Tuple[int, ...]]:
+    """Run the identical plan through the in-process ``Cluster`` (any
+    schedule seed) and return the converged ``(digest, config)``."""
+    from ..smr.membership import ADMIN_CLIENT_ID, add_smr_server
+    from ..smr.service import ClientRequest, build_smr_cluster
+
+    acked: Set[Pair] = set()
+    c, svcs = build_smr_cluster(
+        n, d=d, seed=seed,
+        on_ack=lambda s, req, res, rnd: acked.add((req.client_id, req.seq)))
+    c.start()
+    for i, phase in enumerate(plan):
+        sub = phase["submitter"]
+        pairs = {(cid, seq) for cid, seq, _ in phase["ops"]}
+        for cid, seq, op in phase["ops"]:
+            assert svcs[sub].submit(ClientRequest(cid, seq, op))
+        assert c.run_until(lambda: pairs <= acked, max_steps=max_steps), \
+            f"oracle: phase {i} never fully acked"
+        if i == crash_phase:
+            c.crash(crash_sid)
+        if i == add_phase:
+            add_smr_server(c, svcs, add_sid, seeds=list(add_seeds), d=d)
+            assert svcs[admin_via].submit(ClientRequest(
+                ADMIN_CLIENT_ID, 0, {"op": "add_server", "server": add_sid}))
+            assert c.run_until(
+                lambda: (ADMIN_CLIENT_ID, 0) in acked
+                and not c.servers[add_sid].joining, max_steps=max_steps)
+    alive = [s for s in c.alive() if not c.servers[s].joining]
+    assert c.run_until(
+        lambda: all(not svcs[s].pending for s in alive)
+        and len({svcs[s].digest() for s in alive}) == 1,
+        max_steps=max_steps)
+    return svcs[alive[0]].digest(), svcs[alive[0]].sm.config
+
+
+# ---------------------------------------------------------------------------
+# worker process
+# ---------------------------------------------------------------------------
+
+def _emit(obj: dict) -> None:
+    sys.stdout.write(json.dumps(obj) + "\n")
+    sys.stdout.flush()
+
+
+def build_node(*, sid: int, members: Sequence[int], d: int, bind: str,
+               peers: Dict[int, str], joining: bool = False,
+               batch_max: int = 16,
+               hb_interval: float = DEFAULT_HB_INTERVAL,
+               hb_timeout: float = DEFAULT_HB_TIMEOUT,
+               on_ack=None, trace: bool = True):
+    """One process's protocol stack — the same parts, wired the same way,
+    as ``build_smr_cluster`` wires per slot.  Returns
+    ``(node, service, manager, obs)``."""
+    from ..core.digraph import Digraph, gs_digraph
+    from ..core.overlay import make_overlay
+    from ..core.server import AllConcurServer, Mode
+    from ..obs import Observability
+    from ..runtime import NodeRuntime
+    from ..smr.service import SMRService
+
+    svc = SMRService(sid, batch_max=batch_max, on_ack=on_ack)
+    ms = [sid] if joining else sorted(members)
+    srv = AllConcurServer(
+        sid, ms,
+        overlay_u=make_overlay("binomial", ms),
+        g_r=Digraph([sid]) if joining else gs_digraph(ms, d),
+        mode=Mode.DUAL,
+        payload_for=svc.payload_for,
+        on_deliver=svc.on_deliver,
+        f=max(d - 1, 0),
+        joining=joining,
+    )
+    obs = Observability(trace=trace)
+    if obs.recorder is not None:
+        # one clock domain for every process on this host: CLOCK_MONOTONIC
+        # is boot-relative and system-wide, so shards merge without skew
+        # bookkeeping (see src/repro/obs/README.md, "Clock domains")
+        obs.recorder.clock = time.monotonic
+    counters = None
+    if obs.registry is not None:
+        reg = obs.registry
+        counters = {
+            "msgs": reg.counter("net.msgs_sent"),
+            "over": reg.counter("net.overhead_msgs_sent"),
+            "app": reg.counter("net.app_msgs_sent"),
+            "bytes": reg.counter("net.bytes_sent"),
+            "fd": reg.counter("net.fd_events"),
+        }
+    rt = NodeRuntime(srv, obs=obs, counters=counters,
+                     hb_interval=hb_interval, hb_timeout=hb_timeout)
+    mgr = rt.attach_service(svc, membership_d=d)
+    if not joining:
+        svc.sm.bootstrap_config(ms)
+    node = NetNode(rt, bind=bind, peers=peers)
+    return node, svc, mgr, obs
+
+
+async def _stdin_lines() -> asyncio.StreamReader:
+    loop = asyncio.get_event_loop()
+    reader = asyncio.StreamReader()
+    await loop.connect_read_pipe(
+        lambda: asyncio.StreamReaderProtocol(reader), sys.stdin)
+    return reader
+
+
+async def worker_async(args) -> int:
+    members = [int(s) for s in args.members.split(",")]
+    peers = {int(k): v for k, v in json.loads(args.peers).items()}
+    node, svc, mgr, obs = build_node(
+        sid=args.sid, members=members, d=args.d, bind=args.bind, peers=peers,
+        joining=args.joining, batch_max=args.batch_max,
+        hb_interval=args.hb_interval, hb_timeout=args.hb_timeout,
+        on_ack=lambda req, res, rnd: _emit(
+            {"ev": "ack", "cid": req.client_id, "seq": req.seq, "round": rnd}))
+    await node.start(boot_server=not args.joining)
+    if args.joining:
+        mgr.begin_join([int(s) for s in args.seeds.split(",")])
+        node.pump()
+    _emit({"ev": "ready", "sid": args.sid})
+
+    from ..smr.service import ClientRequest
+    reader = await _stdin_lines()
+    while True:
+        line = await reader.readline()
+        if not line:
+            break                       # controller went away: exit quietly
+        req = json.loads(line)
+        cmd = req.get("cmd")
+        if cmd == "submit":
+            ok = svc.submit(ClientRequest(req["cid"], req["seq"], req["op"]))
+            node.pump()
+            _emit({"id": req.get("id"), "ok": bool(ok)})
+        elif cmd == "status":
+            _emit({
+                "id": req.get("id"), "sid": args.sid,
+                "eon": node.rt.eon, "joining": node.rt.joining,
+                "halted": node.rt.halted, "digest": svc.digest(),
+                "applied_round": svc.applied_round,
+                "config": list(svc.sm.config), "pending": len(svc.pending),
+                "reconnects": node.reconnects,
+                "decode_errors": node.decode_errors,
+            })
+        elif cmd == "crash":
+            os._exit(1)                 # no flush, no goodbye
+        elif cmd == "shutdown":
+            shard = None
+            if args.trace:
+                shard = args.trace
+                obs.recorder.to_jsonl(shard)
+                with open(os.path.splitext(shard)[0] + ".metrics.json",
+                          "w") as fh:
+                    json.dump(obs.registry.snapshot(), fh, indent=1)
+            _emit({"id": req.get("id"), "ok": True, "digest": svc.digest(),
+                   "trace": shard})
+            break
+    await node.stop()
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
+def _free_tcp_addr() -> str:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    host, port = s.getsockname()
+    s.close()
+    return f"tcp:{host}:{port}"
+
+
+class _Worker:
+    def __init__(self, sid: int, proc):
+        self.sid = sid
+        self.proc = proc
+        self.acks: Dict[Pair, float] = {}      # (cid, seq) -> ack time
+        self.replies: Dict[int, asyncio.Future] = {}
+        self.ready = asyncio.Event()
+        self.ack_event = asyncio.Event()
+        self.next_id = 0
+        self.reader_task: Optional[asyncio.Task] = None
+
+
+class Controller:
+    """Spawns and drives a process cluster.  ``universe`` is every server id
+    that may ever exist (addresses are allocated up front so late joiners
+    are dialable); ``chaos`` fronts every listener with a mutating proxy."""
+
+    def __init__(self, workdir: str, universe: Sequence[int], *,
+                 transport: str = "uds", d: int = 2,
+                 chaos: Optional[ChaosConfig] = None,
+                 hb_interval: float = DEFAULT_HB_INTERVAL,
+                 hb_timeout: float = DEFAULT_HB_TIMEOUT,
+                 batch_max: int = 16, trace_dir: Optional[str] = None):
+        self.workdir = workdir
+        self.universe = list(universe)
+        self.transport = transport
+        self.d = d
+        self.chaos = chaos
+        self.hb_interval = hb_interval
+        self.hb_timeout = hb_timeout
+        self.batch_max = batch_max
+        self.trace_dir = trace_dir
+        self.workers: Dict[int, _Worker] = {}
+        self.proxies: Dict[int, ChaosProxy] = {}
+        self.bind: Dict[int, str] = {}
+        self.pub: Dict[int, str] = {}
+        for sid in self.universe:
+            if transport == "uds":
+                self.bind[sid] = f"uds:{workdir}/n{sid}.sock"
+                self.pub[sid] = (f"uds:{workdir}/n{sid}.pub.sock"
+                                 if chaos is not None else self.bind[sid])
+            else:
+                self.bind[sid] = _free_tcp_addr()
+                self.pub[sid] = (_free_tcp_addr()
+                                 if chaos is not None else self.bind[sid])
+
+    # ------------------------------------------------------------------ spawn
+    async def start_proxies(self) -> None:
+        if self.chaos is None:
+            return
+        for i, sid in enumerate(self.universe):
+            proxy = ChaosProxy(
+                self.pub[sid], self.bind[sid],
+                ChaosConfig(**{**self.chaos.__dict__,
+                               "seed": self.chaos.seed + i}))
+            await proxy.start()
+            self.proxies[sid] = proxy
+
+    def shard_path(self, sid: int) -> Optional[str]:
+        if self.trace_dir is None:
+            return None
+        return os.path.join(self.trace_dir, f"n{sid}.jsonl")
+
+    async def spawn(self, sid: int, members: Sequence[int], *,
+                    joining: bool = False,
+                    seeds: Sequence[int] = ()) -> None:
+        peers = {s: self.pub[s] for s in self.universe if s != sid}
+        cmd = [sys.executable, "-m", "repro.net.harness", "--worker",
+               "--sid", str(sid), "--bind", self.bind[sid],
+               "--peers", json.dumps(peers),
+               "--members", ",".join(map(str, members)),
+               "--d", str(self.d), "--batch-max", str(self.batch_max),
+               "--hb-interval", str(self.hb_interval),
+               "--hb-timeout", str(self.hb_timeout)]
+        shard = self.shard_path(sid)
+        if shard:
+            cmd += ["--trace", shard]
+        if joining:
+            cmd += ["--joining", "--seeds", ",".join(map(str, seeds))]
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "..")
+        env["PYTHONPATH"] = (os.path.abspath(src)
+                             + os.pathsep + env.get("PYTHONPATH", ""))
+        proc = await asyncio.create_subprocess_exec(
+            *cmd, stdin=asyncio.subprocess.PIPE,
+            stdout=asyncio.subprocess.PIPE, env=env)
+        w = _Worker(sid, proc)
+        w.reader_task = asyncio.ensure_future(self._read_worker(w))
+        self.workers[sid] = w
+        await asyncio.wait_for(w.ready.wait(), PHASE_TIMEOUT)
+
+    async def _read_worker(self, w: _Worker) -> None:
+        while True:
+            line = await w.proc.stdout.readline()
+            if not line:
+                break
+            try:
+                msg = json.loads(line)
+            except ValueError:
+                continue
+            if msg.get("ev") == "ready":
+                w.ready.set()
+            elif msg.get("ev") == "ack":
+                w.acks[(msg["cid"], msg["seq"])] = time.monotonic()
+                w.ack_event.set()
+            elif "id" in msg:
+                fut = w.replies.pop(msg["id"], None)
+                if fut is not None and not fut.done():
+                    fut.set_result(msg)
+
+    # ---------------------------------------------------------------- control
+    async def cmd(self, sid: int, payload: dict,
+                  timeout: float = PHASE_TIMEOUT) -> dict:
+        w = self.workers[sid]
+        w.next_id += 1
+        payload = dict(payload, id=w.next_id)
+        fut: asyncio.Future = asyncio.get_event_loop().create_future()
+        w.replies[w.next_id] = fut
+        w.proc.stdin.write((json.dumps(payload) + "\n").encode())
+        await w.proc.stdin.drain()
+        return await asyncio.wait_for(fut, timeout)
+
+    async def submit(self, sid: int, cid: int, seq: int, op: dict) -> bool:
+        return (await self.cmd(sid, {"cmd": "submit", "cid": cid,
+                                     "seq": seq, "op": op}))["ok"]
+
+    async def status(self, sid: int) -> dict:
+        return await self.cmd(sid, {"cmd": "status"})
+
+    async def wait_acks(self, sid: int, pairs: Sequence[Pair],
+                        timeout: float = PHASE_TIMEOUT) -> None:
+        w = self.workers[sid]
+        deadline = time.monotonic() + timeout
+        while not all(p in w.acks for p in pairs):
+            w.ack_event.clear()
+            left = deadline - time.monotonic()
+            if left <= 0:
+                missing = [p for p in pairs if p not in w.acks]
+                raise asyncio.TimeoutError(
+                    f"server {sid}: acks never arrived for {missing}")
+            try:
+                await asyncio.wait_for(w.ack_event.wait(), left)
+            except asyncio.TimeoutError:
+                continue
+        return None
+
+    async def crash(self, sid: int) -> None:
+        w = self.workers[sid]
+        w.proc.stdin.write(b'{"cmd": "crash"}\n')
+        await w.proc.stdin.drain()
+        await w.proc.wait()
+
+    async def shutdown(self, sid: int) -> dict:
+        reply = await self.cmd(sid, {"cmd": "shutdown"})
+        w = self.workers[sid]
+        await w.proc.wait()
+        if w.reader_task is not None:
+            w.reader_task.cancel()
+        return reply
+
+    async def stop_all(self) -> None:
+        for sid, w in list(self.workers.items()):
+            if w.proc.returncode is None:
+                w.proc.kill()
+                await w.proc.wait()
+            if w.reader_task is not None:
+                w.reader_task.cancel()
+        for proxy in self.proxies.values():
+            await proxy.stop()
+
+    async def wait_converged(self, sids: Sequence[int],
+                             timeout: float = PHASE_TIMEOUT) -> List[dict]:
+        """Poll until every listed worker reports the same digest with no
+        pending commands (and none joining); returns the final statuses."""
+        deadline = time.monotonic() + timeout
+        while True:
+            stats = [await self.status(s) for s in sids]
+            if (len({st["digest"] for st in stats}) == 1
+                    and all(not st["pending"] and not st["joining"]
+                            for st in stats)):
+                return stats
+            if time.monotonic() > deadline:
+                raise asyncio.TimeoutError(
+                    f"digests never converged: "
+                    f"{[(st['sid'], st['digest'], st['pending']) for st in stats]}")
+            await asyncio.sleep(0.05)
+
+
+async def run_workload(ctl: Controller, plan: List[dict], n: int, *,
+                       crash_phase: Optional[int] = None,
+                       crash_sid: Optional[int] = None,
+                       add_phase: Optional[int] = None,
+                       add_sid: Optional[int] = None,
+                       add_seeds: Sequence[int] = (0, 1),
+                       admin_via: int = 0) -> dict:
+    """Drive the phased plan against a running process cluster (spawn the
+    initial ``n`` workers, barrier each phase, crash / AddServer at the
+    configured boundaries) and return the converged result."""
+    from ..smr.membership import ADMIN_CLIENT_ID
+
+    members = list(range(n))
+    await ctl.start_proxies()
+    await asyncio.gather(*(ctl.spawn(sid, members) for sid in members))
+    alive = set(members)
+    latencies: List[float] = []
+    for i, phase in enumerate(plan):
+        sub = phase["submitter"]
+        pairs = [(cid, seq) for cid, seq, _ in phase["ops"]]
+        t0 = time.monotonic()
+        for cid, seq, op in phase["ops"]:
+            assert await ctl.submit(sub, cid, seq, op)
+        await ctl.wait_acks(sub, pairs)
+        w = ctl.workers[sub]
+        latencies.extend(w.acks[p] - t0 for p in pairs)
+        if i == crash_phase:
+            await ctl.crash(crash_sid)
+            alive.discard(crash_sid)
+        if i == add_phase:
+            await ctl.spawn(add_sid, members, joining=True, seeds=add_seeds)
+            assert await ctl.submit(
+                admin_via, ADMIN_CLIENT_ID, 0,
+                {"op": "add_server", "server": add_sid})
+            await ctl.wait_acks(admin_via, [(ADMIN_CLIENT_ID, 0)])
+            alive.add(add_sid)
+    stats = await ctl.wait_converged(sorted(alive))
+    shards = [ctl.shard_path(s) for s in sorted(alive)
+              if ctl.shard_path(s)]
+    for sid in sorted(alive):
+        await ctl.shutdown(sid)
+    return {
+        "digest": stats[0]["digest"],
+        "config": tuple(stats[0]["config"]),
+        "statuses": stats,
+        "latencies": latencies,
+        "reconnects": sum(st["reconnects"] for st in stats),
+        "decode_errors": sum(st["decode_errors"] for st in stats),
+        "chaos_mutations": sum(p.mutations for p in ctl.proxies.values()),
+        "shards": shards,
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI: worker mode (controller-spawned) and a self-contained smoke run
+# ---------------------------------------------------------------------------
+
+async def smoke_async(args) -> int:
+    """Time-boxed n-process smoke run for CI: phased workload through the
+    chaos proxy, digest cross-checked against the Cluster oracle, trace
+    shards written for ``trace_report --merge``."""
+    os.makedirs(args.outdir, exist_ok=True)
+    chaos = None
+    if args.chaos:
+        chaos = ChaosConfig(seed=args.seed, delay_max=0.002)
+    ctl = Controller(args.outdir, list(range(args.n)),
+                     transport=args.transport, d=args.d, chaos=chaos,
+                     hb_timeout=2.0, trace_dir=args.outdir)
+    plan = make_plan(args.seed, args.n, phases=args.phases,
+                     writes_per_phase=args.writes)
+    try:
+        res = await run_workload(ctl, plan, args.n)
+    finally:
+        await ctl.stop_all()
+    digest, config = oracle_digest(plan, args.n, d=args.d, seed=args.seed)
+    print(f"net-smoke: n={args.n} transport={args.transport} "
+          f"chaos={'on' if chaos else 'off'} "
+          f"reconnects={res['reconnects']} "
+          f"decode_errors={res['decode_errors']} "
+          f"chaos_mutations={res['chaos_mutations']}")
+    print(f"net-smoke: digest {res['digest']} config {res['config']}")
+    if res["digest"] != digest or res["config"] != config:
+        print(f"net-smoke: ORACLE MISMATCH (oracle digest {digest}, "
+              f"config {config})", file=sys.stderr)
+        return 1
+    print("net-smoke: digest bit-identical to the Cluster oracle")
+    print("shards: " + " ".join(res["shards"]))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    # worker args
+    ap.add_argument("--sid", type=int, default=0)
+    ap.add_argument("--bind", default="")
+    ap.add_argument("--peers", default="{}")
+    ap.add_argument("--members", default="0")
+    ap.add_argument("--d", type=int, default=2)
+    ap.add_argument("--batch-max", type=int, default=16)
+    ap.add_argument("--hb-interval", type=float, default=DEFAULT_HB_INTERVAL)
+    ap.add_argument("--hb-timeout", type=float, default=DEFAULT_HB_TIMEOUT)
+    ap.add_argument("--joining", action="store_true")
+    ap.add_argument("--seeds", default="")
+    ap.add_argument("--trace", default=None)
+    # smoke args
+    ap.add_argument("--n", type=int, default=3)
+    ap.add_argument("--phases", type=int, default=4)
+    ap.add_argument("--writes", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--transport", default="uds", choices=("uds", "tcp"))
+    ap.add_argument("--chaos", action="store_true")
+    ap.add_argument("--outdir", default="/tmp/repro-net-smoke")
+    args = ap.parse_args(argv)
+    if args.worker:
+        return asyncio.run(worker_async(args))
+    if args.smoke:
+        return asyncio.run(smoke_async(args))
+    ap.error("pick a mode: --worker (internal) or --smoke")
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""Sans-I/O node runtime: the protocol stack behind every scheduler.
+
+See :mod:`repro.runtime.node` for the runtime and
+:mod:`repro.runtime.effects` for the effect vocabulary schedulers consume.
+"""
+from .effects import Deliver, Effect, EonFlip, SendBytes, SetTimer, sends
+from .node import SPLITTER_MAX_BUFFER, NodeRuntime
+
+__all__ = [
+    "Deliver", "Effect", "EonFlip", "SendBytes", "SetTimer", "sends",
+    "NodeRuntime", "SPLITTER_MAX_BUFFER",
+]

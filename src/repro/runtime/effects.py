@@ -1,0 +1,88 @@
+"""Effect vocabulary of the sans-I/O node runtime.
+
+A :class:`~repro.runtime.node.NodeRuntime` never touches a clock, a socket
+or a thread.  Every externally visible action it wants taken is returned to
+the caller as one of these effect records; the scheduler that drives the
+runtime (the schedule-randomized :class:`~repro.core.cluster.Cluster`, the
+discrete-event :class:`~repro.sim.runner.Simulation`, or the asyncio
+transport in :mod:`repro.net`) interprets them however it likes:
+
+* :class:`SendBytes` — a frame for a peer.  In-process schedulers read the
+  in-memory ``.msg`` and skip serialization entirely (or round-trip it at
+  delivery); a real transport reads ``.frame``, which lazily encodes the
+  message through the wire codec exactly once and caches the bytes.
+* :class:`SetTimer` — (re)arm a named timer.  Re-arming supersedes the
+  previous deadline: the runtime stamps every arm with a generation counter
+  and ignores :meth:`~repro.runtime.node.NodeRuntime.on_timer` calls whose
+  generation is stale, so schedulers never need to cancel anything.
+* :class:`Deliver` — a round was A-delivered (the synchronous
+  ``on_deliver`` application callback has already run; this effect is the
+  scheduler-visible notification, e.g. for acking clients over a socket).
+* :class:`EonFlip` — the dual digraphs were swapped (§III-I).  Schedulers
+  that model failure detection externally re-arm it here (notifications are
+  eon-specific); transports re-arm heartbeat timeouts for the new
+  predecessor set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+
+@dataclass
+class SendBytes:
+    """Send ``msg`` to ``dst``.  ``frame`` lazily encodes (and caches) the
+    wire bytes; ``n`` is the codec's cluster-size hint (it sizes the modeled
+    vector-clock section of LCR baseline tuples, nothing else)."""
+    dst: int
+    msg: Any
+    n: int = 0
+    _frame: Optional[bytes] = field(default=None, repr=False)
+
+    @property
+    def frame(self) -> bytes:
+        if self._frame is None:
+            from ..wire import encode
+            self._frame = encode(self.msg, n=self.n)
+        return self._frame
+
+
+@dataclass(frozen=True)
+class SetTimer:
+    """Arm (or re-arm) timer ``timer_id`` to fire ``delay`` seconds from
+    now.  ``gen`` is the runtime's generation stamp for staleness checks:
+    pass it back verbatim to ``on_timer``."""
+    timer_id: str
+    delay: float
+    gen: int = 0
+
+
+@dataclass(frozen=True)
+class Deliver:
+    """Round A-delivered at ``sid`` (application callbacks already ran)."""
+    sid: int
+    record: Any
+
+
+@dataclass(frozen=True)
+class EonFlip:
+    """``sid``'s view flipped to ``eon`` with the given membership; the new
+    eon's install point is ``(epoch, round)``.  ``preds`` is the G_R
+    predecessor set of ``sid`` snapshotted *at* the flip (failure
+    notifications are eon-specific, §III-I: schedulers re-arm detection of
+    still-dead predecessors against exactly this view, not whatever view a
+    later flip in the same batch may have installed)."""
+    sid: int
+    eon: int
+    members: Tuple[int, ...]
+    epoch: int
+    round: int
+    preds: Tuple[int, ...] = ()
+
+
+Effect = Any  # union of the four dataclasses above
+
+
+def sends(effects: List[Effect]) -> List[SendBytes]:
+    """Convenience filter: just the SendBytes effects, in order."""
+    return [e for e in effects if isinstance(e, SendBytes)]

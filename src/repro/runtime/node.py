@@ -1,0 +1,371 @@
+"""Sans-I/O node runtime: one protocol stack, any scheduler.
+
+:class:`NodeRuntime` owns everything that used to be copy-pasted into both
+in-process harnesses — the protocol server plus wire-codec framing
+(:class:`~repro.wire.codec.FrameSplitter` in / ``encode`` out), SMR service
+and membership-manager attachment, per-eon failure-detector arming, and
+observability wiring.  It is pure state: no clocks, no sockets, no threads.
+
+Inputs (each returns the list of effects the call produced):
+
+* :meth:`on_bytes` — raw bytes from a peer's FIFO stream (real transport).
+* :meth:`deliver` — an in-memory message (in-process schedulers; the codec
+  round-trip still happens inside when the runtime was built with
+  ``codec=True``).
+* :meth:`on_peer_down` — the scheduler's failure detector reports a dead
+  peer (in-process harnesses model the perfect FD themselves).
+* :meth:`on_timer` — a previously requested :class:`SetTimer` fired
+  (heartbeat failure detection for real transports).
+
+Outputs are :mod:`~repro.runtime.effects` records.  The scheduler contract
+is strict: process the returned effects *in order* (EonFlip before the
+SendBytes that follow it reproduces the exact event ordering the in-process
+harnesses had when eon callbacks ran synchronously), and call exactly one
+input method per external event.
+
+The same runtime drives three schedulers — the schedule-randomized
+:class:`~repro.core.cluster.Cluster`, the timed
+:class:`~repro.sim.runner.Simulation` and the asyncio transport in
+:mod:`repro.net` — so a live process cluster is *by construction* the code
+the in-process test oracle verifies.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+from .effects import Deliver, Effect, EonFlip, SendBytes, SetTimer
+
+#: reassembly cap per inbound stream (see wire.FrameSplitter max_buffer)
+SPLITTER_MAX_BUFFER = 16 * 1024 * 1024
+
+
+class NodeRuntime:
+    """Transport-agnostic runtime around one protocol server.
+
+    ``server`` is any protocol object exposing ``start() / on_message() /
+    outbox`` (:class:`~repro.core.server.AllConcurServer` or a §IV baseline).
+    ``codec=True`` round-trips every delivered in-memory message through the
+    wire codec (schedule-randomized protocol tests double as codec-fidelity
+    tests); ``codec_n`` is the encoder's cluster-size hint.  ``counters`` is
+    a dict of shared metrics counters (keys ``msgs/over/app/bytes/fd``) or
+    None; ``obs`` an :class:`repro.obs.Observability` or None.
+
+    ``hb_interval``/``hb_timeout`` enable the built-in heartbeat failure
+    detector (real transports): the runtime emits ``SetTimer`` effects and
+    turns timeouts into ``on_failure_detected`` — heartbeats ride the same
+    FIFO channels as protocol traffic (Prop III.14's premise).
+    """
+
+    def __init__(
+        self,
+        server: Any,
+        *,
+        codec: bool = False,
+        codec_n: int = 0,
+        obs: Optional[Any] = None,
+        counters: Optional[Dict[str, Any]] = None,
+        hb_interval: Optional[float] = None,
+        hb_timeout: Optional[float] = None,
+        emit_deliver: bool = False,
+    ):
+        self.server = server
+        self.sid = server.sid
+        self.codec = codec
+        self.codec_n = codec_n
+        self.obs = obs
+        self.counters = counters
+        self.service: Optional[Any] = None
+        self.manager: Optional[Any] = None
+        self.wire_frames = 0          # frames round-tripped (codec=True)
+        self.wire_bytes = 0           # total encoded bytes (codec=True)
+
+        self._rec = obs.recorder if obs is not None else None
+        self._mdesc: Optional[Callable[[Any], Dict[str, Any]]] = None
+        if obs is not None:
+            from ..obs.trace import mdesc
+            self._mdesc = mdesc
+            if hasattr(server, "tracer"):
+                obs.attach_server(server)
+        if codec:
+            from ..wire import decode, encode
+            self._wire_encode, self._wire_decode = encode, decode
+
+        # pending non-send effects (EonFlip/Deliver), collected while the
+        # server executes callbacks and returned at the next drain
+        self._effects: List[Effect] = []
+        self._emit_deliver = emit_deliver
+        self._eon_wrapper: Optional[Callable] = None
+        if hasattr(server, "on_eon_change"):
+            self._wrap_eon()
+        if emit_deliver and hasattr(server, "on_deliver_cb"):
+            self._wrap_deliver()
+
+        # heartbeat FD (real transports only; in-process harnesses model
+        # the perfect FD themselves and never arm timers)
+        self.hb_interval = hb_interval
+        self.hb_timeout = hb_timeout
+        self._hb = hb_interval is not None and hb_timeout is not None
+        self._hb_seq = 0
+        self._suspected: set = set()
+        self._timer_gen: Dict[str, int] = {}
+
+        # per-source incremental frame reassembly (on_bytes)
+        self._splitters: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------ properties
+    @property
+    def halted(self) -> bool:
+        return bool(getattr(self.server, "halted", False))
+
+    @property
+    def joining(self) -> bool:
+        return bool(getattr(self.server, "joining", False))
+
+    @property
+    def eon(self) -> int:
+        return int(getattr(self.server, "eon", 0))
+
+    def eligible_detector(self, target: int) -> bool:
+        """Perfect-FD eligibility: this (alive, installed) server's current
+        G_R has the edge ``target -> self`` — failure notifications are
+        owned by G_R successors of the failed server (§II)."""
+        srv = self.server
+        if getattr(srv, "halted", False) or getattr(srv, "joining", False):
+            return False
+        g_r = getattr(srv, "g_r", None)
+        if g_r is None or target not in g_r:
+            return False
+        return self.sid in g_r.successors(target)
+
+    # ------------------------------------------------------------- wrappers
+    def _wrap_eon(self) -> None:
+        prev = self.server.on_eon_change
+
+        def cb(eon: int, members: List[int], epoch: int, rnd: int) -> None:
+            if prev is not None:
+                prev(eon, members, epoch, rnd)
+            g_r = getattr(self.server, "g_r", None)
+            preds = (tuple(g_r.predecessors(self.sid))
+                     if g_r is not None and self.sid in g_r else ())
+            self._effects.append(
+                EonFlip(self.sid, eon, tuple(members), epoch, rnd, preds))
+            if self._hb:
+                self._rearm_preds()
+        self._eon_wrapper = cb
+        self.server.on_eon_change = cb
+
+    def _wrap_deliver(self) -> None:
+        prev = self.server.on_deliver_cb
+
+        def cb(rec: Any) -> None:
+            if prev is not None:
+                prev(rec)
+            self._effects.append(Deliver(self.sid, rec))
+        self.server.on_deliver_cb = cb
+
+    # ----------------------------------------------------------- attachment
+    def attach_service(self, service: Any,
+                       membership_d: Optional[int] = None) -> Any:
+        """Wire an :class:`~repro.smr.service.SMRService` to this node (and,
+        when ``membership_d`` is given, a
+        :class:`~repro.smr.membership.MembershipManager` with that G_R
+        degree so admin commands flip eons).  Returns the manager (or None).
+
+        The manager installs its own ``on_eon_change``; the runtime's
+        effect-emitting wrapper is re-installed on top of it."""
+        service.server = self.server
+        self.service = service
+        if self.obs is not None:
+            self.obs.attach_service(service)
+        if membership_d is not None:
+            from ..smr.membership import MembershipManager
+            self.manager = MembershipManager(service, self.server,
+                                             d=membership_d)
+        if self.server.on_eon_change is not self._eon_wrapper:
+            self._wrap_eon()
+        return self.manager
+
+    # --------------------------------------------------------------- inputs
+    def start(self) -> List[Effect]:
+        """Boot the server; returns the initial effects (first A-broadcast
+        sends, plus heartbeat/timeout timers when the heartbeat FD is on)."""
+        timers: List[Effect] = []
+        if self._hb:
+            timers.append(self._arm("hb", self.hb_interval))
+            timers.extend(self._rearm_preds())
+        self.server.start()
+        return timers + self.drain()
+
+    def arm_timers(self) -> List[Effect]:
+        """Arm the heartbeat FD *without* booting the server — a joiner's
+        protocol state comes from ``install_state`` at catch-up, never from
+        ``server.start()``, but a real transport wants its heartbeat and
+        timeout timers running from the first byte."""
+        if not self._hb:
+            return []
+        effects = [self._arm("hb", self.hb_interval)]
+        self._rearm_preds()
+        return effects + self.drain()
+
+    def deliver(self, msg: Any, src: Optional[int] = None) -> List[Effect]:
+        """Deliver one in-memory message (in-process schedulers).  With
+        ``codec=True`` the message is round-tripped through the wire codec —
+        the server processes ``decode(encode(msg))`` — and the received-bytes
+        accounting flows into the trace and counters."""
+        nbytes = None
+        if self.codec:
+            frame = self._wire_encode(msg, n=self.codec_n)
+            self.wire_frames += 1
+            self.wire_bytes += len(frame)
+            nbytes = len(frame)
+            msg = self._wire_decode(frame)
+            if self.counters is not None:
+                self.counters["bytes"].inc(nbytes)
+        if self._rec is not None:
+            d = self._mdesc(msg)
+            if nbytes is not None:
+                d["bytes"] = nbytes
+            self._rec.emit("recv", self.sid, src=src, **d)
+        if not self.halted:
+            self.server.on_message(msg)
+        return self.drain()
+
+    def on_bytes(self, src: int, data: bytes) -> List[Effect]:
+        """Feed raw bytes from the FIFO stream ``src -> self``.  Complete
+        frames are decoded and dispatched; a partial tail stays buffered.
+        Raises a typed :class:`~repro.wire.errors.WireDecodeError` on
+        corruption — the transport must tear the stream down and
+        :meth:`reset_channel` before replaying it."""
+        splitter = self._splitters.get(src)
+        if splitter is None:
+            from ..wire import FrameSplitter
+            splitter = FrameSplitter(max_buffer=SPLITTER_MAX_BUFFER)
+            self._splitters[src] = splitter
+        msgs = splitter.feed(data)
+        effects: List[Effect] = []
+        if self._hb and src not in self._suspected and self._is_pred(src):
+            # any bytes from a predecessor are proof of life
+            effects.append(self._arm(f"to:{src}", self.hb_timeout))
+        from ..core.messages import Heartbeat
+        for msg in msgs:
+            if isinstance(msg, Heartbeat):
+                if self._rec is not None:
+                    self._rec.emit("recv", self.sid, src=src,
+                                   **self._mdesc(msg))
+                continue
+            if self._rec is not None:
+                self._rec.emit("recv", self.sid, src=src, **self._mdesc(msg))
+            if not self.halted:
+                self.server.on_message(msg)
+        return effects + self.drain()
+
+    def on_peer_down(self, target: int) -> List[Effect]:
+        """The failure detector (scheduler-modeled or heartbeat) reports
+        ``target`` dead.  Emits the trace/counter record and hands the
+        notification to the protocol."""
+        self._suspected.add(target)
+        if self.counters is not None:
+            self.counters["fd"].inc()
+        if self._rec is not None:
+            self._rec.emit("fd", self.sid, target=target)
+        if not self.halted:
+            self.server.on_failure_detected(target)
+        return self.drain()
+
+    def on_timer(self, timer_id: str, gen: int = -1) -> List[Effect]:
+        """A :class:`SetTimer` fired.  Stale generations (the timer was
+        re-armed after this one was scheduled) are ignored."""
+        if gen != -1 and gen != self._timer_gen.get(timer_id):
+            return []
+        if timer_id == "hb":
+            effects: List[Effect] = []
+            from ..core.messages import Heartbeat
+            g_r = getattr(self.server, "g_r", None)
+            if g_r is not None and not self.halted and not self.joining:
+                hb = Heartbeat(self.sid, self._hb_seq, eon=self.eon)
+                self._hb_seq += 1
+                for q in g_r.successors(self.sid):
+                    effects.append(SendBytes(q, hb, n=self.codec_n))
+            effects.append(self._arm("hb", self.hb_interval))
+            return effects + self.drain()
+        if timer_id.startswith("to:"):
+            target = int(timer_id[3:])
+            if target in self._suspected or not self._is_pred(target):
+                return []
+            return self.on_peer_down(target)
+        return []
+
+    # ---------------------------------------------------------------- drain
+    def drain(self, limit: Optional[int] = None) -> List[Effect]:
+        """Collect pending effects: EonFlip/Deliver records queued by server
+        callbacks first (schedulers must act on a flip before the sends that
+        follow it), then the server's outbox as SendBytes.  ``limit``
+        truncates the sends (crash mid-send modeling)."""
+        pend, self._effects = self._effects, []
+        out, self.server.outbox = self.server.outbox, []
+        if limit is not None:
+            out = out[:limit]
+        return pend + [SendBytes(dst, msg, n=self.codec_n)
+                       for dst, msg in out]
+
+    # ------------------------------------------------------------ recording
+    def record_send(self, dst: int, msg: Any, *, nbytes: Optional[int] = None,
+                    txs: Optional[float] = None,
+                    txe: Optional[float] = None) -> None:
+        """Record one transmitted message (trace event + counters).  Called
+        by the scheduler at its own send point — with the NIC serialization
+        window (``txs``/``txe``) and frame size when it models them."""
+        rec = self._rec
+        counters = self.counters
+        if rec is None and counters is None:
+            return
+        d = self._mdesc(msg)
+        if counters is not None:
+            if d["m"] in ("msg", "baseline"):
+                counters["msgs"].inc()
+            elif d["g"] == "app":
+                counters["app"].inc()
+            else:
+                counters["over"].inc()
+            if nbytes is not None:
+                counters["bytes"].inc(nbytes)
+        if rec is not None:
+            if nbytes is not None:
+                d["bytes"] = nbytes
+            if txs is not None:
+                d["txs"], d["txe"] = txs, txe
+            rec.emit("send", self.sid, dst=dst, **d)
+
+    # ------------------------------------------------------------- plumbing
+    def reset_channel(self, src: int) -> None:
+        """Forget the reassembly state of the inbound stream from ``src``
+        (the transport reconnected; replayed frames start a fresh stream)."""
+        self._splitters.pop(src, None)
+
+    def _is_pred(self, peer: int) -> bool:
+        g_r = getattr(self.server, "g_r", None)
+        return (g_r is not None and peer in g_r
+                and self.sid in g_r.successors(peer))
+
+    def _arm(self, timer_id: str, delay: float) -> SetTimer:
+        gen = self._timer_gen.get(timer_id, 0) + 1
+        self._timer_gen[timer_id] = gen
+        return SetTimer(timer_id, delay, gen)
+
+    def _rearm_preds(self) -> List[Effect]:
+        """(Re)arm one timeout per current G_R predecessor, and re-announce
+        still-suspected predecessors on the new digraph — failure
+        notifications are eon-specific (§III-I), so a flip that keeps a dead
+        server as a predecessor needs a fresh notification."""
+        effects: List[Effect] = []
+        g_r = getattr(self.server, "g_r", None)
+        if g_r is None or self.sid not in g_r:
+            return effects
+        for p in g_r.predecessors(self.sid):
+            if p in self._suspected:
+                if not self.halted:
+                    self.server.on_failure_detected(p)
+            else:
+                effects.append(self._arm(f"to:{p}", self.hb_timeout))
+        self._effects.extend(effects)
+        return []

@@ -20,6 +20,7 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 from ..core.digraph import gs_digraph, resilience_degree
 from ..core.overlay import make_overlay
 from ..core.server import AllConcurServer, DeliveryRecord, Mode
+from ..runtime import EonFlip, NodeRuntime, SendBytes
 from ..wire import TXN_BYTES, encoded_size  # noqa: F401  (TXN_BYTES re-export)
 from .baselines import LCRServer, LibpaxosNode
 from .network import NetworkModel, make_network
@@ -125,47 +126,68 @@ class Simulation:
         self.tx_free: Dict[int, float] = {sid: 0.0 for sid in servers}
         self.crashed: Set[int] = set()
         self.crash_hooks: List[Callable[[int, float], None]] = []
+        #: every eon flip seen, as (time, sid, eon); hooks run per flip
+        self.eon_flips: List[Tuple[float, int, int]] = []
+        self.eon_flip_hooks: List[Callable[[Any], None]] = []
         self.events_processed = 0
         # observability (repro.obs.Observability, or None = zero overhead):
-        # the recorder's clock is the simulated time; sends carry wire bytes
-        # (the simulator sizes every frame anyway for NIC serialization)
+        # the recorder's clock is the simulated time; the runtimes emit
+        # send/recv/fd events and feed the shared counters (sends carry wire
+        # bytes — the simulator sizes every frame for NIC serialization)
         self.obs = obs
         self._rec = obs.recorder if obs is not None else None
         if self._rec is not None:
             self._rec.clock = lambda: self.now
+        self._counters: Optional[Dict[str, Any]] = None
         if obs is not None and obs.registry is not None:
             reg = obs.registry
-            self._c_msgs = reg.counter("sim.msgs_sent")
-            self._c_over = reg.counter("sim.overhead_msgs_sent")
-            self._c_app = reg.counter("sim.app_msgs_sent")
-            self._c_bytes = reg.counter("sim.bytes_sent")
-            self._c_fd = reg.counter("sim.fd_events")
-        else:
-            self._c_msgs = None
-        if obs is not None:
-            from ..obs.trace import mdesc as _mdesc
-            self._mdesc = _mdesc
+            self._counters = {
+                "msgs": reg.counter("sim.msgs_sent"),
+                "over": reg.counter("sim.overhead_msgs_sent"),
+                "app": reg.counter("sim.app_msgs_sent"),
+                "bytes": reg.counter("sim.bytes_sent"),
+                "fd": reg.counter("sim.fd_events"),
+            }
+        self.runtimes: Dict[int, NodeRuntime] = {
+            sid: NodeRuntime(srv, obs=obs, counters=self._counters)
+            for sid, srv in servers.items()}
 
     def register_server(self, sid: int, srv: Any) -> None:
         """Add a dynamically joining server mid-run (eon membership)."""
         self.servers[sid] = srv
+        self.runtimes[sid] = NodeRuntime(srv, obs=self.obs,
+                                         counters=self._counters)
         self.tx_free.setdefault(sid, 0.0)
         self.crashed.discard(sid)
-        if self.obs is not None and isinstance(srv, AllConcurServer):
-            self.obs.attach_server(srv)
 
     def post(self, t: float, kind: str, data: Any) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, data))
 
-    def drain(self, sid: int, limit: Optional[int] = None) -> None:
-        srv = self.servers[sid]
-        out, srv.outbox = srv.outbox, []
-        if limit is not None:
-            out = out[:limit]
+    def _on_eon_flip(self, e: Any) -> None:
+        self.eon_flips.append((self.now, e.sid, e.eon))
+        # failure notifications are eon-specific (§III-I): once a server's
+        # view flips, re-announce still-crashed predecessors on the new
+        # digraph (a real FD keeps suspecting them).  ``e.preds`` is the
+        # predecessor set snapshotted at the flip itself.
+        for c in self.crashed:
+            if c in e.preds:
+                self.post(self.now, "fd", (e.sid, c))
+        for hook in self.eon_flip_hooks:
+            hook(e)
+
+    def _dispatch(self, sid: int, effects: List[Any]) -> None:
+        """Interpret a runtime's effects on the timed event queue: EonFlip
+        re-arms per-eon failure detection, SendBytes go through the NIC
+        serialization model onto the heap."""
+        rt = self.runtimes[sid]
         t = max(self.now, self.tx_free[sid])
-        rec = self._rec
-        count = self._c_msgs is not None
-        for dst, msg in out:
+        for e in effects:
+            if isinstance(e, EonFlip):
+                self._on_eon_flip(e)
+                continue
+            if not isinstance(e, SendBytes):
+                continue
+            dst, msg = e.dst, e.msg
             if dst == sid:
                 # loopback (e.g., the Libpaxos proposer proposing its own
                 # message): deliver without NIC serialization
@@ -176,29 +198,18 @@ class Simulation:
             t += self.net.serialization(size, sid, dst)
             arrive = t + self.net.propagation(sid, dst)
             self.post(arrive, "recv", (dst, msg, sid))
-            if rec is not None or count:
-                d = self._mdesc(msg)
-                if count:
-                    if d["m"] in ("msg", "baseline"):
-                        self._c_msgs.inc()
-                    elif d["g"] == "app":
-                        self._c_app.inc()
-                    else:
-                        self._c_over.inc()
-                    self._c_bytes.inc(size)
-                if rec is not None:
-                    # txs/txe are the NIC serialization window of this frame:
-                    # the causal analyzer (repro.obs.critpath) decomposes each
-                    # hop into queue = txs - t_enqueue, ser = txe - txs,
-                    # prop = t_recv - txe, all from recorded cut points
-                    rec.emit_at(self.now, "send", sid,
-                                dst=dst, bytes=size, txs=txs, txe=t, **d)
+            # txs/txe are the NIC serialization window of this frame: the
+            # causal analyzer (repro.obs.critpath) decomposes each hop into
+            # queue = txs - t_enqueue, ser = txe - txs, prop = t_recv - txe
+            rt.record_send(dst, msg, nbytes=size, txs=txs, txe=t)
         self.tx_free[sid] = t
 
+    def drain(self, sid: int, limit: Optional[int] = None) -> None:
+        self._dispatch(sid, self.runtimes[sid].drain(limit))
+
     def start(self) -> None:
-        for sid, srv in self.servers.items():
-            srv.start()
-            self.drain(sid)
+        for sid, rt in self.runtimes.items():
+            self._dispatch(sid, rt.start())
 
     def schedule_crash(self, sid: int, t: float,
                        partial_sends: Optional[int] = None) -> None:
@@ -218,13 +229,10 @@ class Simulation:
                 dst, msg, src = data
                 if dst in self.crashed:
                     continue
-                srv = self.servers[dst]
-                if getattr(srv, "halted", False):
+                rt = self.runtimes[dst]
+                if rt.halted:
                     continue
-                if self._rec is not None:
-                    self._rec.emit("recv", dst, src=src, **self._mdesc(msg))
-                srv.on_message(msg)
-                self.drain(dst)
+                self._dispatch(dst, rt.deliver(msg, src=src))
             elif kind == "crash":
                 sid, partial = data
                 if sid in self.crashed:
@@ -236,13 +244,9 @@ class Simulation:
                 # perfect FD: detection by every alive server whose *own*
                 # current G_R view has the edge sid->det (views can differ
                 # transiently across an eon flip)
-                dets = {det for det, dsrv in self.servers.items()
+                dets = {det for det, drt in self.runtimes.items()
                         if det not in self.crashed
-                        and not getattr(dsrv, "halted", False)
-                        and not getattr(dsrv, "joining", False)
-                        and getattr(dsrv, "g_r", None) is not None
-                        and sid in dsrv.g_r
-                        and det in dsrv.g_r.successors(sid)}
+                        and drt.eligible_detector(sid)}
                 if dets:
                     # heartbeats share the FIFO channel: detection can only
                     # fire after everything sid sent is delivered
@@ -260,15 +264,10 @@ class Simulation:
                 det, target = data
                 if det in self.crashed:
                     continue
-                srv = self.servers[det]
-                if getattr(srv, "halted", False):
+                rt = self.runtimes[det]
+                if rt.halted:
                     continue
-                if self._c_msgs is not None:
-                    self._c_fd.inc()
-                if self._rec is not None:
-                    self._rec.emit("fd", det, target=target)
-                srv.on_failure_detected(target)
-                self.drain(det)
+                self._dispatch(det, rt.on_peer_down(target))
             elif kind == "call":
                 # generic timed callback (client arrivals, probes, ...)
                 data()
@@ -343,9 +342,6 @@ def build_simulation(
             )
         sim = Simulation(servers, net, metrics, fd_timeout=fd_timeout, obs=obs)
         sim_holder.append(sim)
-        if obs is not None:
-            for srv in servers.values():
-                obs.attach_server(srv)
         return sim, metrics
 
     if algo in ("lcr", "libpaxos"):
@@ -569,14 +565,9 @@ def build_smr_simulation(
             on_deliver=(lambda s: services[s].on_deliver)(sid),
             f=max(dd - 1, 0),
         )
-        services[sid].server = servers[sid]
     sim = Simulation(servers, net, Metrics(n=n, batch=batch_max),
                      fd_timeout=fd_timeout, obs=obs)
     sim_holder.append(sim)
-    if obs is not None:
-        for sid in members:
-            obs.attach_server(servers[sid])
-            obs.attach_service(services[sid])
 
     # ---- client failover: re-home the clients of a dead/removed server ----
     fo_delay = failover_delay if failover_delay is not None else fd_timeout
@@ -610,45 +601,31 @@ def build_smr_simulation(
                     submit(gen.client(cid))
         simn.post(at, "call", failover)
 
-    # ---- dynamic membership: managers, flip log, per-eon FD re-arm --------
-    def wrap_eon_cb(srv):
-        prev = srv.on_eon_change
+    # ---- dynamic membership: managers via the runtimes, flip hooks --------
+    # (the runtimes emit EonFlip effects; the Simulation already logs flips
+    # and re-arms per-eon failure detection — only the SMR-level reaction,
+    # client re-homing off gracefully removed servers, is added here)
+    def on_flip(_e):
+        # clients of a gracefully removed (halted) server reconnect
+        # immediately — no failure detection involved
+        simn = sim_holder[0]
+        for s, rt in simn.runtimes.items():
+            if rt.halted:
+                rehome_clients(s, simn.now)
+    sim.eon_flip_hooks.append(on_flip)
 
-        def cb(eon, mems, epoch, rnd):
-            if prev is not None:
-                prev(eon, mems, epoch, rnd)
-            simn = sim_holder[0]
-            simn.eon_flips.append((simn.now, srv.sid, eon))
-            # failure notifications are eon-specific (§III-I): once this
-            # server's view flips, re-announce still-crashed predecessors
-            # on the new digraph (a real FD keeps suspecting them)
-            for c in simn.crashed:
-                if c in srv.g_r and srv.sid in srv.g_r.successors(c):
-                    simn.post(simn.now, "fd", (srv.sid, c))
-            # clients of a gracefully removed (halted) server reconnect
-            # immediately — no failure detection involved
-            for s, other in simn.servers.items():
-                if getattr(other, "halted", False):
-                    rehome_clients(s, simn.now)
-        srv.on_eon_change = cb
-
-    sim.eon_flips = []
     sim.smr_managers = {}
-    if membership:
-        from ..smr.membership import MembershipManager
-        for sid in members:
-            sim.smr_managers[sid] = MembershipManager(
-                services[sid], servers[sid], d=dd)
-            wrap_eon_cb(servers[sid])
-    sim.smr_wrap_eon_cb = wrap_eon_cb
+    for sid in members:
+        mgr = sim.runtimes[sid].attach_service(
+            services[sid], membership_d=(dd if membership else None))
+        if mgr is not None:
+            sim.smr_managers[sid] = mgr
 
     def make_service(sid: int) -> SMRService:
         svc = SMRService(sid, batch_max=batch_max,
                          compact_every=compact_every,
                          stale_bound=stale_bound, on_ack=mk_ack(sid))
         services[sid] = svc
-        if obs is not None:
-            obs.attach_service(svc)
         return svc
     sim.smr_make_service = make_service
 
@@ -702,7 +679,7 @@ def schedule_membership_change(
     ``service``/``manager`` of an added server)."""
     from ..core.digraph import Digraph
     from ..core.overlay import make_overlay
-    from ..smr.membership import AdminClient, MembershipManager
+    from ..smr.membership import AdminClient
     from ..smr.service import SMRService
 
     adm = admin if admin is not None else AdminClient()
@@ -734,17 +711,13 @@ def schedule_membership_change(
                 f=ref.f,
                 joining=True,
             )
-            svc.server = srv
             # the joiner must rebuild the same G_R the established managers
             # agree on, so it adopts their degree parameter
             mgrs = getattr(sim, "smr_managers", {})
             dd = (next(iter(mgrs.values())).d if mgrs
                   else max(ref.g_r.degree(), 1))
-            mgr = MembershipManager(svc, srv, d=dd)
-            wrap = getattr(sim, "smr_wrap_eon_cb", None)
-            if wrap is not None:
-                wrap(srv)
             sim.register_server(add, srv)
+            mgr = sim.runtimes[add].attach_service(svc, membership_d=dd)
             services[add] = svc
             if mgrs is not None:
                 mgrs[add] = mgr

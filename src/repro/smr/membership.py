@@ -123,6 +123,15 @@ class MembershipManager:
     def _send_catchup(self, dst: int) -> None:
         eon, members, epoch, rnd = self.last_flip
         records, entries = self.service.export_catchup()
+        # pipelined eon changes: updates committed before this flip but not
+        # yet applied (each flips a *later* eon) must reach the joiner, or
+        # it would miss every flip after the one that admits it.  Builders
+        # are not serialized — every manager rebuilds with its own
+        # deterministic ``gr_builder`` — only the membership deltas travel.
+        pending = tuple(tuple(delta)
+                        for (_b, delta) in self.server._pending_gr_updates)
+        if pending:
+            records = records + (("pending", pending),)
         chunks = [records[i:i + self.chunk_records]
                   for i in range(0, len(records), self.chunk_records)] or [()]
         if self.server.tracer is not None:
@@ -206,6 +215,14 @@ class MembershipManager:
         self.server.install_state(
             members=head.members, g_r=self.gr_builder(head.members),
             eon=head.eon, epoch=head.epoch, round=head.round)
+        for rec in records:
+            if rec[0] != "pending":
+                continue
+            for delta in rec[1]:
+                self.server.schedule_gr_update(
+                    self.gr_builder,
+                    add=[s for (a, s) in delta if a == "add"],
+                    remove=[s for (a, s) in delta if a == "remove"])
         self.installed = True
         self.last_flip = (head.eon, list(head.members), head.epoch,
                           head.round)
@@ -245,11 +262,8 @@ def add_smr_server(cluster, services: Dict[int, SMRService], new_sid: int, *,
         primary_partition=ref.primary_partition,
         joining=True,
     )
-    svc.server = srv
-    mgr = MembershipManager(svc, srv, d=d)
     cluster.add_server(srv)
-    if cluster.obs is not None:
-        cluster.obs.attach_service(svc)
+    mgr = cluster.runtimes[new_sid].attach_service(svc, membership_d=d)
     services[new_sid] = svc
     mgr.begin_join(seeds)
     cluster._drain(srv)

@@ -380,14 +380,8 @@ def build_smr_cluster(
         on_deliver_fn=lambda sid, rec: services[sid].on_deliver(rec),
         **cluster_kwargs,
     )
-    obs = cluster_kwargs.get("obs")
     for sid, svc in services.items():
-        svc.server = cluster.servers[sid]
+        cluster.runtimes[sid].attach_service(
+            svc, membership_d=(d if membership else None))
         svc.sm.bootstrap_config(range(n))
-        if obs is not None:
-            obs.attach_service(svc)
-    if membership:
-        from .membership import MembershipManager
-        for sid, svc in services.items():
-            MembershipManager(svc, cluster.servers[sid], d=d)
     return cluster, services

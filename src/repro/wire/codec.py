@@ -592,12 +592,27 @@ class FrameSplitter:
     returned, the consumed prefix is dropped, and the error raises on the
     next ``feed`` call (errors at a frame boundary are definitive, more
     bytes cannot repair them).
+
+    ``max_buffer`` caps the reassembly buffer (default 16 MiB): a malformed
+    length prefix from a real socket — one that parses as a valid varint
+    within the frame-body cap but whose promised bytes never arrive, or an
+    attacker streaming garbage that never forms a frame — cannot grow the
+    buffer unboundedly.  Exceeding the cap raises
+    :class:`~repro.wire.errors.FrameTooLargeError` with the same
+    deliver-good-frames-first semantics as any other stream error.
     """
 
-    def __init__(self) -> None:
+    DEFAULT_MAX_BUFFER = 16 * 1024 * 1024
+
+    def __init__(self, max_buffer: int = DEFAULT_MAX_BUFFER) -> None:
         self._buf = bytearray()
+        self.max_buffer = int(max_buffer)
+        self._overflow = False
 
     def feed(self, data: bytes) -> List[Any]:
+        if self._overflow:
+            raise FrameTooLargeError(
+                f"splitter buffer exceeded max_buffer {self.max_buffer}")
         self._buf += data
         out: List[Any] = []
         pos = 0
@@ -616,6 +631,12 @@ class FrameSplitter:
             # this same error re-raises on the next feed()
             return out
         del self._buf[:pos]
+        if len(self._buf) > self.max_buffer:
+            self._overflow = True     # definitive: more bytes cannot shrink it
+            if not out:
+                raise FrameTooLargeError(
+                    f"splitter buffered {len(self._buf)} bytes awaiting a "
+                    f"frame, exceeding max_buffer {self.max_buffer}")
         return out
 
     @property

@@ -10,7 +10,8 @@ This module drives that contract continuously:
   ``tests/corpus/wire/`` and can be regenerated with ``--regen-corpus``;
 * each iteration picks a corpus entry, applies 1–8 random mutations
   (bit flips, byte writes, truncation, insertion, deletion, duplication,
-  splicing two entries), and feeds the result to :func:`repro.wire.decode`
+  oversized length-prefix rewrites, splicing two entries), and feeds the
+  result to :func:`repro.wire.decode`
   — and, every few iterations, byte-by-byte through a
   :class:`~repro.wire.codec.FrameSplitter` to exercise the streaming path;
 * any exception outside the typed family is recorded as a crash with the
@@ -107,6 +108,13 @@ def write_corpus(dirpath: str = DEFAULT_CORPUS) -> List[str]:
     with open(os.path.join(dirpath, "stream.bin"), "wb") as fh:
         fh.write(stream)
     names.append("stream.bin")
+    # Negative seed: valid MAGIC/KIND but a body-length varint declaring
+    # ~2 GiB.  Decoders and capped FrameSplitters must reject it with
+    # FrameTooLargeError without buffering; the fuzzer mutates around it.
+    bad = oversized_length_frame(encode(Heartbeat(src=3, seq=17), n=8))
+    with open(os.path.join(dirpath, "bad_oversized_len.bin"), "wb") as fh:
+        fh.write(bad)
+    names.append("bad_oversized_len.bin")
     return names
 
 
@@ -123,9 +131,35 @@ def load_corpus(dirpath: str = DEFAULT_CORPUS) -> List[bytes]:
 
 # --------------------------------------------------------------- mutation
 
+def _uvarint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def oversized_length_frame(base: bytes,
+                           declared: int = (1 << 31) - 1) -> bytes:
+    """Rewrite ``base``'s body-length varint to declare ``declared`` bytes.
+
+    The result keeps a valid MAGIC/KIND prefix but claims a body far above
+    ``MAX_FRAME_BODY`` — the decoder (and a capped ``FrameSplitter``) must
+    reject it with :class:`FrameTooLargeError` before buffering anything.
+    """
+    end = 2
+    while end < len(base) and base[end] & 0x80:
+        end += 1
+    return base[:2] + _uvarint(declared) + base[end + 1:]
+
+
 def _mutate(rng: random.Random, data: bytes, other: bytes) -> bytes:
     buf = bytearray(data)
-    op = rng.randrange(7)
+    op = rng.randrange(8)
     if op == 0 and buf:                                   # bit flip
         i = rng.randrange(len(buf))
         buf[i] ^= 1 << rng.randrange(8)
@@ -144,6 +178,9 @@ def _mutate(rng: random.Random, data: bytes, other: bytes) -> bytes:
         i = rng.randrange(len(buf))
         span = buf[i:i + rng.randrange(1, 17)]
         buf[i:i] = span
+    elif op == 6 and len(buf) > 2:                        # oversized length
+        huge = (1 << 22) + 1 + rng.randrange(1 << 30)
+        buf = bytearray(oversized_length_frame(bytes(buf), huge))
     else:                                                 # splice with other
         if buf and other:
             i = rng.randrange(len(buf))

@@ -127,6 +127,47 @@ def test_add_server_flips_without_any_failure_via_t_vr():
     assert_membership_invariants(c, svcs, "t_vr")
 
 
+def test_two_racing_add_servers_queue_as_separate_eon_flips():
+    """Pipelined reconfiguration: two AddServer admin commands committed
+    before the first flip applies must *queue* — one transitional round and
+    one flip each (eons e+1 then e+2) — never merge into a single delta.
+    The first joiner is admitted at e+1 with update #2 still pending, so
+    its catch-up must carry the pending queue or it misses flip e+2."""
+    c, svcs = build_smr_cluster(6, d=2, seed=7)
+    c.start()
+    c.run_until(lambda: min(len(s.delivered) for s in c.servers.values()) >= 1)
+
+    admin = AdminClient()
+    add_smr_server(c, svcs, 6, seeds=[0, 1], d=2)
+    add_smr_server(c, svcs, 7, seeds=[2, 3], d=2)
+    # same submitter, back-to-back: both land in one batch, so both are
+    # scheduled on every replica before the first transitional round runs
+    assert admin.add(svcs[2], 6)
+    assert admin.add(svcs[2], 7)
+
+    assert c.run_until(
+        lambda: not c.servers[6].joining and not c.servers[7].joining
+        and all(c.servers[s].eon == 2 for s in c.alive())
+        and all(not svcs[s].pending for s in established(c)),
+        max_steps=600_000)
+
+    alive = established(c)
+    assert 6 in alive and 7 in alive
+    # two distinct flips, one membership step each — never a merged delta
+    assert svcs[0].membership.flips == [
+        (1, (0, 1, 2, 3, 4, 5, 6)),
+        (2, (0, 1, 2, 3, 4, 5, 6, 7)),
+    ]
+    # joiner 6 installed at eon 1 and still made the second flip
+    assert svcs[6].membership.flips[-1] == (2, (0, 1, 2, 3, 4, 5, 6, 7))
+    assert all(not s._pending_gr_updates for s in
+               (c.servers[x] for x in alive))
+    assert all(svcs[s].sm.config == (0, 1, 2, 3, 4, 5, 6, 7) for s in alive)
+    digs = {svcs[s].digest() for s in alive}
+    assert len(digs) == 1
+    assert_membership_invariants(c, svcs, "racing-adds")
+
+
 def test_remove_server_halts_victim_and_survivors_converge():
     c, svcs = build_smr_cluster(7, d=3, seed=5)
     c.start()

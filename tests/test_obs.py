@@ -329,9 +329,11 @@ def test_disabled_obs_leaves_no_hooks():
     c = Cluster(5, 2, seed=0)
     c.start()
     c.run_until(lambda: c.min_delivered_rounds() >= 2, max_steps=100_000)
-    assert c.obs is None and c._rec is None and c._c_msgs is None
+    assert c.obs is None and c._rec is None and c._counters is None
     srv = c.servers[0]
     assert srv.tracer is None and srv.obs_counters is None
+    rt = c.runtimes[0]
+    assert rt.obs is None and rt.counters is None and rt._rec is None
     from repro.wire import codec
     assert codec._OBS is None
 

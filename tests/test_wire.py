@@ -283,6 +283,52 @@ def test_frame_splitter_returns_good_frames_before_bad_bytes():
         sp.feed(encode(hb))
 
 
+def test_frame_splitter_caps_reassembly_buffer():
+    """A partial frame whose promised bytes never arrive cannot grow the
+    buffer past ``max_buffer``; the overflow is fatal for the stream."""
+    head = bytearray([MAGIC, 0x03])
+    _write_uvarint(head, 1000)                # declares 1000 body bytes
+    sp = FrameSplitter(max_buffer=64)
+    assert sp.feed(bytes(head)) == []         # valid prefix, frame pending
+    with pytest.raises(FrameTooLargeError):
+        sp.feed(b"\x00" * 100)                # body still incomplete at cap
+    with pytest.raises(FrameTooLargeError):   # stream stays fatal
+        sp.feed(encode(Heartbeat(1, 2)))
+
+
+def test_frame_splitter_cap_returns_good_frames_first():
+    hb = Heartbeat(1, 2)
+    frame = encode(hb)
+    head = bytearray([MAGIC, 0x03])
+    _write_uvarint(head, 1000)                # declares 1000 body bytes
+    sp = FrameSplitter(max_buffer=len(frame) + 4)
+    got = sp.feed(frame + bytes(head) + b"\x7f" * (len(frame) + 10))
+    assert got == [hb]                        # complete frame not lost
+    with pytest.raises(FrameTooLargeError):
+        sp.feed(b"")
+
+
+def test_frame_splitter_cap_bounds_leftover_not_throughput():
+    """One feed() may carry far more than max_buffer in *complete* frames;
+    the cap applies to the undecodable leftover only."""
+    hb = Heartbeat(1, 2)
+    frame = encode(hb)
+    sp = FrameSplitter(max_buffer=2 * len(frame))
+    got = sp.feed(frame * 50)
+    assert got == [hb] * 50
+    assert sp.pending == 0
+
+
+def test_frame_splitter_rejects_oversized_declared_length():
+    """An oversized body-length varint is rejected by the frame-extent
+    check itself, long before max_buffer worth of bytes arrive."""
+    from repro.wire.fuzz import oversized_length_frame
+    bad = oversized_length_frame(encode(Heartbeat(1, 2)))
+    sp = FrameSplitter()
+    with pytest.raises(FrameTooLargeError):
+        sp.feed(bad[:8])                      # header alone is enough
+
+
 def test_decoded_ints_always_reencode():
     """Decode accepts only what encode can produce: a 10-byte varint above
     the int64 range is rejected, so decode(frame) always re-encodes."""
@@ -373,11 +419,25 @@ if HAVE_HYPOTHESIS:
 def test_committed_corpus_decodes():
     entries = load_corpus("tests/corpus/wire")
     assert len(entries) >= len(corpus_messages())
-    singles = [e for e in entries if len(split(e)) == 1]
+
+    def frames(e):
+        try:
+            return split(e)
+        except WireDecodeError:
+            return None                      # intentional negative seed
+
+    singles = [e for e in entries
+               if (fs := frames(e)) is not None and len(fs) == 1]
     assert len(singles) >= len(corpus_messages())
     # the stream entry carries the whole vocabulary back-to-back
     stream = max(entries, key=len)
     assert len(split(stream)) == len(corpus_messages())
+    # at least one committed seed is a typed-rejection case (oversized
+    # length prefix) — the fuzzer keeps that code path under mutation
+    rejected = [e for e in entries if frames(e) is None]
+    assert rejected
+    with pytest.raises(FrameTooLargeError):
+        decode(rejected[0])
 
 
 def test_fuzz_smoke_no_crashes():

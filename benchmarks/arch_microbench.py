@@ -5,7 +5,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ALL_ARCHS, get_config, ShapeConfig
+from repro.configs import ALL_ARCHS, ShapeConfig, get_config
 from repro.models import forward, init_params, model_specs
 from repro.models.params import init_params as init_tree
 from repro.train import OptConfig, make_train_step, opt_state_specs, synthetic_batch

@@ -15,7 +15,9 @@ the strict simulated-time band.
 from __future__ import annotations
 
 import asyncio
+import sys
 import tempfile
+import time
 
 from . import common
 
@@ -25,6 +27,18 @@ def _percentile(sorted_vals, q: float) -> float:
         return 0.0
     i = min(int(q * (len(sorted_vals) - 1) + 0.5), len(sorted_vals) - 1)
     return sorted_vals[i]
+
+
+def _once_retried(label: str, fn):
+    """Run ``fn`` with exactly one loud retry: real-socket runs on a
+    loaded CI host can lose a race (port churn, slow fork) that a second
+    attempt clears; a second failure is a real failure and propagates."""
+    try:
+        return fn()
+    except Exception as e:
+        print(f"{label}: first attempt failed ({type(e).__name__}: {e}); "
+              f"retrying once", file=sys.stderr)
+        return fn()
 
 
 def main(full: bool = False) -> None:
@@ -44,13 +58,16 @@ def main(full: bool = False) -> None:
         finally:
             await ctl.stop_all()
 
-    with tempfile.TemporaryDirectory() as td:
-        res = asyncio.run(run(td))
-        events = []
-        for shard in res["shards"]:
-            events.extend(load_jsonl(shard))
-        events.sort(key=lambda ev: ev.get("t", 0.0))
+    def attempt():
+        with tempfile.TemporaryDirectory() as td:
+            res = asyncio.run(run(td))
+            events = []
+            for shard in res["shards"]:
+                events.extend(load_jsonl(shard))
+            events.sort(key=lambda ev: ev.get("t", 0.0))
+        return res, events
 
+    res, events = _once_retried("net_loopback_n5", attempt)
     lats = sorted(res["latencies"])
     p50, p99 = _percentile(lats, 0.50), _percentile(lats, 0.99)
     w = work_from_trace(events)
@@ -61,6 +78,62 @@ def main(full: bool = False) -> None:
         f"msgs_per_delivery={w.msgs_per_delivery:.2f};"
         f"deliveries={w.delivered};acks={len(lats)};"
         f"reconnects={res['reconnects']};wall_clock=1")
+
+    _lease_row(full=full)
+
+
+def _lease_row(full: bool = False) -> None:
+    """``net_loopback_lease_n5``: lease-served reads over real sockets.
+
+    Spawns the same 5-process UDS cluster with round-stability leases on,
+    commits a write burst, then serves a read burst at a non-submitting
+    replica — each read round-trips the wire-level ``ReadRequest`` /
+    ``ReadReply`` frames inside the worker.  Reports the wall-clock serve
+    latency (stdin/stdout control hop + frame codec + lease checks; no
+    log trip) and requires every read to be lease-served."""
+    from repro.net.harness import Controller
+
+    n, d = 5, 2
+    writes, reads = (24, 60) if full else (12, 30)
+
+    async def run(td):
+        ctl = Controller(td, list(range(n)), transport="uds", d=d,
+                         chaos=None, hb_timeout=2.0,
+                         lease_duration=0.4, lease_margin=0.05)
+        try:
+            members = list(range(n))
+            await asyncio.gather(*(ctl.spawn(s, members) for s in members))
+            for seq in range(writes):
+                assert await ctl.submit(0, 7, seq,
+                                        {"op": "incr", "key": seq % 4})
+            await ctl.wait_acks(0, [(7, s) for s in range(writes)])
+            lats, served = [], 0
+            for i in range(reads):
+                t0 = time.monotonic()
+                rep = await ctl.read(1, 7, i % 4)
+                lats.append(time.monotonic() - t0)
+                served += bool(rep["served"])
+            st = await ctl.status(1)
+            return lats, served, st["lease"]
+        finally:
+            await ctl.stop_all()
+
+    def attempt():
+        with tempfile.TemporaryDirectory() as td:
+            return asyncio.run(run(td))
+
+    lats, served, lease = _once_retried("net_loopback_lease_n5", attempt)
+    assert served == len(lats), \
+        f"only {served}/{len(lats)} reads lease-served on an idle cluster"
+    lats.sort()
+    p50, p99 = _percentile(lats, 0.50), _percentile(lats, 0.99)
+    common.emit(
+        "net_loopback_lease_n5",
+        p50 * 1e6,
+        f"p50_read_ms={p50 * 1e3:.3f};p99_read_ms={p99 * 1e3:.3f};"
+        f"served={served};reads={len(lats)};"
+        f"grants={lease['grants']};revokes={lease['revokes']};"
+        f"wall_clock=1")
 
 
 if __name__ == "__main__":

@@ -18,8 +18,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
-                         "table3|fig3|fig4|fig5|fig6|arch|smr|sweep_vec|"
-                         "tropical|obs|net_loopback")
+                         "table3|fig3|fig4|fig5|fig6|arch|smr|lease|"
+                         "sweep_vec|tropical|obs|net_loopback")
     ap.add_argument("--engine", default="event",
                     choices=("event", "vec", "pallas"),
                     help="fig4/fig6 backend: per-event heap, the "
@@ -30,8 +30,8 @@ def main() -> None:
                     help="dump results as JSON to PATH")
     args = ap.parse_args()
 
-    from . import (arch_microbench, common, net_loopback, obs_overhead,
-                   paper_fig3_batching, paper_fig4_scaling,
+    from . import (arch_microbench, common, lease_read, net_loopback,
+                   obs_overhead, paper_fig3_batching, paper_fig4_scaling,
                    paper_fig5_failures, paper_fig6_robustness,
                    paper_table3_connectivity, smr_throughput, sweep_vec,
                    tropical_bench)
@@ -46,6 +46,7 @@ def main() -> None:
                                                         engine=args.engine),
         "arch": arch_microbench.main,
         "smr": smr_throughput.main,
+        "lease": lease_read.main,
         "sweep_vec": sweep_vec.main,
         "tropical": tropical_bench.main,
         "obs": obs_overhead.main,

@@ -9,7 +9,7 @@ config for a few hundred committed steps (slower).
 """
 import argparse
 
-from repro.configs import get_config, ShapeConfig
+from repro.configs import ShapeConfig, get_config
 from repro.coordinator.runtime import ElasticTrainer
 
 ap = argparse.ArgumentParser()

@@ -33,19 +33,35 @@ time) get the looser ``--max-wall-regress`` band (default 100%, i.e. up to
 machine; ``speedup_x`` keeps its own band — as a same-run ratio the machine
 speed largely cancels out of it.
 
+Row schema (baseline-side metadata, ignored if absent):
+
+* ``required_cols`` — column names that must be present in the fresh row;
+  a bench that silently stops emitting a gated column (e.g. the lease
+  row's ``checker`` flag or ``speedup_x``) fails the gate instead of
+  sliding by, because a column the gate never sees is a gate that never
+  fires.
+* ``max_us_regress`` / ``max_wall_regress`` / ``max_speedup_drop`` — per-
+  row band overrides.  E.g. the lease row pins ``max_speedup_drop`` so its
+  baseline 12.3x read speedup fails the gate below the 10x acceptance
+  floor, regardless of the looser global default.
+
 Waiver: after an *intentional* perf change (e.g. the wire codec changing
 byte accounting, or new hardware), rerun the bench and bless it with
-``--update-baseline``, which copies the fresh file over the baseline and
-exits 0 — then commit the updated baseline alongside the change that
+``--update-baseline``, which copies the fresh rows over the baseline —
+carrying the baseline-side metadata above forward onto same-named rows —
+and exits 0; commit the updated baseline alongside the change that
 explains it.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import shutil
 import sys
 from typing import List
+
+#: baseline-side metadata carried forward by --update-baseline
+META_KEYS = ("required_cols", "max_us_regress", "max_wall_regress",
+             "max_speedup_drop")
 
 
 def _fmt_pct(new: float, old: float) -> str:
@@ -67,8 +83,16 @@ def compare(fresh: List[dict], baseline: List[dict], *,
         if row is None:
             failures.append(f"{name}: row missing from fresh run")
             continue
+        # per-row overrides (baseline-side metadata) beat the global bands
+        row_us = float(base.get("max_us_regress", max_us_regress))
+        row_wall = float(base.get("max_wall_regress", max_wall_regress))
+        row_sp = float(base.get("max_speedup_drop", max_speedup_drop))
+        for col in base.get("required_cols", ()):
+            if col not in row:
+                failures.append(
+                    f"{name}: required column {col!r} missing from fresh row")
         wall = bool(base.get("wall_clock") or row.get("wall_clock"))
-        allowed = max_wall_regress if wall else max_us_regress
+        allowed = row_wall if wall else row_us
         b_us, f_us = base.get("us_per_call"), row.get("us_per_call")
         if isinstance(b_us, (int, float)) and isinstance(f_us, (int, float)) \
                 and b_us > 0 and f_us > b_us * (1.0 + allowed):
@@ -78,10 +102,10 @@ def compare(fresh: List[dict], baseline: List[dict], *,
                 f"{', wall-clock band' if wall else ''})")
         b_sp, f_sp = base.get("speedup_x"), row.get("speedup_x")
         if isinstance(b_sp, (int, float)) and isinstance(f_sp, (int, float)) \
-                and b_sp > 0 and f_sp < b_sp * (1.0 - max_speedup_drop):
+                and b_sp > 0 and f_sp < b_sp * (1.0 - row_sp):
             failures.append(
                 f"{name}: speedup_x {b_sp:g} -> {f_sp:g} "
-                f"({_fmt_pct(f_sp, b_sp)} < -{max_speedup_drop:.0%} allowed)")
+                f"({_fmt_pct(f_sp, b_sp)} < -{row_sp:.0%} allowed)")
         # critical-path columns: deterministic simulated time, strict band
         for key in sorted(k for k in base
                           if k.startswith("crit_") and k.endswith("_ms")):
@@ -91,10 +115,10 @@ def compare(fresh: List[dict], baseline: List[dict], *,
             if not isinstance(f_c, (int, float)):
                 failures.append(
                     f"{name}: {key} {b_c:g} -> missing from fresh run")
-            elif b_c > 0 and f_c > b_c * (1.0 + max_us_regress):
+            elif b_c > 0 and f_c > b_c * (1.0 + row_us):
                 failures.append(
                     f"{name}: {key} {b_c:g} -> {f_c:g} "
-                    f"({_fmt_pct(f_c, b_c)} > +{max_us_regress:.0%} allowed)")
+                    f"({_fmt_pct(f_c, b_c)} > +{row_us:.0%} allowed)")
     return failures
 
 
@@ -117,9 +141,26 @@ def main(argv=None) -> int:
     with open(args.fresh) as fh:
         fresh = json.load(fh)
     if args.update_baseline:
-        shutil.copyfile(args.fresh, args.baseline)
+        try:
+            with open(args.baseline) as fh:
+                old = {r.get("name"): r for r in json.load(fh)}
+        except (OSError, ValueError):
+            old = {}
+        carried = 0
+        for row in fresh:
+            prev = old.get(row.get("name"))
+            if not prev:
+                continue
+            for key in META_KEYS:
+                if key in prev and key not in row:
+                    row[key] = prev[key]
+                    carried += 1
+        with open(args.baseline, "w") as fh:
+            json.dump(fresh, fh, indent=2)
+            fh.write("\n")
         print(f"check_bench: baseline {args.baseline} updated from "
-              f"{args.fresh} ({len(fresh)} rows)")
+              f"{args.fresh} ({len(fresh)} rows, {carried} metadata "
+              f"entries carried forward)")
         return 0
 
     with open(args.baseline) as fh:

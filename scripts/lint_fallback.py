@@ -2,32 +2,58 @@
 """Minimal lint fallback for environments without ruff.
 
 ``scripts/ci.sh lint`` prefers ``ruff check .`` (configured in
-pyproject.toml: pyflakes' unused-import rule F401).  The pinned container
-for this repo cannot pip-install, so this script reimplements the same
-narrow check — plus a syntax pass — with only the stdlib:
+pyproject.toml: ``select = ["E", "F", "I"]`` at ruff defaults).  The pinned
+container for this repo cannot pip-install, so this script approximates the
+same policy with only the stdlib:
 
 * every ``.py`` file under src/ tests/ benchmarks/ scripts/ examples/ must
   parse (``ast.parse``);
-* module-level and nested ``import``/``from .. import`` bindings must be
-  referenced somewhere else in the file (conservatively: any word-token
+* F401: module-level and nested ``import``/``from .. import`` bindings must
+  be referenced somewhere else in the file (conservatively: any word-token
   match outside the import statement itself counts, so docstring/string
   references never false-positive), be re-exported via ``__all__`` or the
   ``import X as X`` idiom, or carry a ``# noqa`` on the import line.
   ``__init__.py`` files are exempt (re-export surface), mirroring the
-  per-file-ignores in pyproject.toml.
+  per-file-ignores in pyproject.toml;
+* the mechanical pycodestyle rules ruff enforces in its stable set:
+  E501 (>88 columns), E402 (module import not at top), E711/E712
+  (``== None`` / ``== True`` comparisons), E722 (bare except), E731
+  (lambda assigned to a name), E741 (ambiguous ``l``/``I``/``O``
+  bindings), E702/E703 (statement semicolons);
+* I001 (approximate): the leading import block must be grouped
+  future < stdlib < third-party < first-party < relative, with straight
+  ``import X`` before ``from X import`` inside each group, modules sorted
+  case-insensitively (relative imports furthest-dots-first), and names
+  within a ``from`` import ordered constants < Classes < lower_case.
 
-Exit 1 with ``file:line: name imported but unused`` diagnostics, else 0.
+Per-file ignores mirror pyproject.toml.  ``# noqa`` (bare or with a
+matching code) on the flagged line silences any rule.  This is a safety
+net, not a replacement: real ruff remains the source of truth in CI.
+
+Exit 1 with ``file:line: code message`` diagnostics, else 0.
 """
 from __future__ import annotations
 
 import ast
+import io
 import os
 import re
 import sys
+import tokenize
 from typing import List, Tuple
 
 ROOTS = ("src", "tests", "benchmarks", "scripts", "examples")
 _WORD = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+_NOQA = re.compile(r"#\s*[nN][oO][qQ][aA](?::\s*(?P<codes>[A-Z0-9, ]+))?")
+MAX_LINE = 88
+AMBIGUOUS = ("l", "I", "O")
+FIRST_PARTY = ("repro", "benchmarks")
+
+#: mirror of [tool.ruff.lint.per-file-ignores] (path suffix -> codes)
+PER_FILE_IGNORES = {
+    "src/repro/launch/dryrun.py": ("E402",),
+    "tests/test_roofline.py": ("E501",),
+}
 
 
 def _iter_py(root: str):
@@ -38,38 +64,196 @@ def _iter_py(root: str):
                 yield os.path.join(base, f)
 
 
-def _import_bindings(tree: ast.AST) -> List[Tuple[int, str, str]]:
-    """(lineno, bound_name, display_name) for every import binding."""
-    out = []
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Import):
-            for alias in node.names:
-                bound = alias.asname or alias.name.split(".")[0]
-                out.append((node.lineno, bound, alias.name))
-        elif isinstance(node, ast.ImportFrom):
-            if node.module == "__future__":
+def _noqa_codes(line: str):
+    """None = no noqa; () = bare noqa (all codes); else tuple of codes."""
+    m = _NOQA.search(line)
+    if not m:
+        return None
+    codes = m.group("codes")
+    if codes is None:
+        return ()
+    return tuple(c.strip().upper() for c in codes.split(","))
+
+
+class Checker:
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.problems: List[str] = []
+        norm = path.replace(os.sep, "/")
+        self.ignored = tuple(codes for suffix, codes in PER_FILE_IGNORES.items()
+                             if norm.endswith(suffix))
+
+    def report(self, lineno: int, code: str, msg: str) -> None:
+        for codes in self.ignored:
+            if code in codes:
+                return
+        line = self.lines[lineno - 1] if lineno - 1 < len(self.lines) else ""
+        codes = _noqa_codes(line)
+        if codes is not None and (codes == () or code in codes):
+            return
+        self.problems.append(f"{self.path}:{lineno}: {code} {msg}")
+
+    # -- F401 ---------------------------------------------------------------
+    def check_unused_imports(self) -> None:
+        if os.path.basename(self.path) == "__init__.py":
+            return
+        exported = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                        try:
+                            exported |= set(ast.literal_eval(node.value))
+                        except (ValueError, SyntaxError):
+                            pass
+        blanked = self.lines[:]
+        bindings: List[Tuple[int, str, str]] = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                end = getattr(node, "end_lineno", node.lineno)
+                for ln in range(node.lineno - 1, end):
+                    if 0 <= ln < len(blanked):
+                        blanked[ln] = ""
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound = alias.asname or alias.name.split(".")[0]
+                    bindings.append((node.lineno, bound, alias.name))
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for alias in node.names:
+                    if alias.name == "*" or alias.asname == alias.name:
+                        continue
+                    bindings.append((node.lineno, alias.asname or alias.name,
+                                     alias.name))
+        used = set(_WORD.findall("\n".join(blanked)))
+        for lineno, bound, display in bindings:
+            if bound not in used and bound not in exported:
+                self.report(lineno, "F401",
+                            f"'{display}' imported but unused")
+
+    # -- pycodestyle (E) ----------------------------------------------------
+    def check_line_rules(self) -> None:
+        for i, ln in enumerate(self.lines, 1):
+            if len(ln) > MAX_LINE:
+                self.report(i, "E501",
+                            f"line too long ({len(ln)} > {MAX_LINE})")
+        try:
+            toks = list(tokenize.generate_tokens(
+                io.StringIO(self.source).readline))
+        except tokenize.TokenError:
+            return
+        for tok in toks:
+            if tok.type == tokenize.OP and tok.string == ";":
+                self.report(tok.start[0], "E702",
+                            "statement ends with a semicolon")
+
+    def check_ast_rules(self) -> None:
+        seen_code = False
+        for node in self.tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                if seen_code:
+                    self.report(node.lineno, "E402",
+                                "module level import not at top of file")
+            elif isinstance(node, ast.Expr) and \
+                    isinstance(node.value, ast.Constant):
+                continue  # docstring
+            elif isinstance(node, (ast.If, ast.Try)):
+                continue  # conditional guards are allowed before imports
+            elif isinstance(node, ast.Assign) and all(
+                    isinstance(t, ast.Name) and t.id.startswith("__")
+                    for t in node.targets):
+                continue  # dunder assignments (__version__, __all__)
+            else:
+                seen_code = True
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Compare):
+                for op, cmp in zip(node.ops, node.comparators):
+                    if not isinstance(op, (ast.Eq, ast.NotEq)):
+                        continue
+                    if isinstance(cmp, ast.Constant):
+                        if cmp.value is None:
+                            self.report(node.lineno, "E711",
+                                        "comparison to None (use 'is')")
+                        elif type(cmp.value) is bool:
+                            self.report(node.lineno, "E712",
+                                        "comparison to bool (use 'is')")
+            elif isinstance(node, ast.ExceptHandler) and node.type is None:
+                self.report(node.lineno, "E722", "bare 'except'")
+            elif isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Lambda) and \
+                    len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                self.report(node.lineno, "E731",
+                            "lambda assigned to a name (use def)")
+            if isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Store) and node.id in AMBIGUOUS:
+                self.report(node.lineno, "E741",
+                            f"ambiguous variable name '{node.id}'")
+            elif isinstance(node, ast.arg) and node.arg in AMBIGUOUS:
+                self.report(node.lineno, "E741",
+                            f"ambiguous argument name '{node.arg}'")
+
+    # -- I001 (approximate) -------------------------------------------------
+    @staticmethod
+    def _section(node) -> int:
+        if isinstance(node, ast.ImportFrom):
+            if node.level > 0:
+                return 4
+            mod = (node.module or "").split(".")[0]
+        else:
+            mod = node.names[0].name.split(".")[0]
+        if mod == "__future__":
+            return 0
+        if mod in sys.stdlib_module_names:
+            return 1
+        if mod in FIRST_PARTY:
+            return 3
+        return 2
+
+    @classmethod
+    def _import_key(cls, node):
+        sec = cls._section(node)
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            return (sec, 1, -node.level if node.level else 0, mod.lower())
+        return (sec, 0, 0, node.names[0].name.lower())
+
+    @staticmethod
+    def _name_key(name: str):
+        if name.isupper():
+            group = 0          # CONSTANTS
+        elif name[:1].isupper():
+            group = 1          # Classes
+        else:
+            group = 2          # functions / modules
+        return (group, name.lower())
+
+    def check_import_order(self) -> None:
+        block = []
+        for node in self.tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                block.append(node)
+            elif isinstance(node, ast.Expr) and \
+                    isinstance(node.value, ast.Constant):
                 continue
-            for alias in node.names:
-                if alias.name == "*":
-                    continue
-                if alias.asname == alias.name:      # re-export idiom
-                    continue
-                bound = alias.asname or alias.name
-                out.append((node.lineno, bound, alias.name))
-    return out
-
-
-def _blank_import_lines(source: str, tree: ast.AST) -> str:
-    """Return the source with import statements blanked out, so a binding
-    does not count as its own use."""
-    lines = source.splitlines()
-    for node in ast.walk(tree):
-        if isinstance(node, (ast.Import, ast.ImportFrom)):
-            end = getattr(node, "end_lineno", node.lineno)
-            for ln in range(node.lineno - 1, end):
-                if 0 <= ln < len(lines):
-                    lines[ln] = ""
-    return "\n".join(lines)
+            else:
+                break
+        keys = [self._import_key(n) for n in block]
+        if keys != sorted(keys):
+            first = next(n.lineno for n, k in zip(block, keys)
+                         if keys.index(k) != sorted(keys).index(k))
+            self.report(first, "I001", "import block is un-sorted")
+        for node in block:
+            if isinstance(node, ast.ImportFrom) and len(node.names) > 1:
+                names = [a.name for a in node.names]
+                nkeys = [self._name_key(n) for n in names]
+                if nkeys != sorted(nkeys):
+                    self.report(node.lineno, "I001",
+                                f"imported names un-sorted: {names}")
 
 
 def check_file(path: str) -> List[str]:
@@ -78,30 +262,13 @@ def check_file(path: str) -> List[str]:
     try:
         tree = ast.parse(source, filename=path)
     except SyntaxError as exc:
-        return [f"{path}:{exc.lineno}: syntax error: {exc.msg}"]
-    if os.path.basename(path) == "__init__.py":
-        return []
-    src_lines = source.splitlines()
-    exported = set()
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Assign):
-            for tgt in node.targets:
-                if isinstance(tgt, ast.Name) and tgt.id == "__all__":
-                    try:
-                        exported |= set(ast.literal_eval(node.value))
-                    except (ValueError, SyntaxError):
-                        pass
-    blanked = _blank_import_lines(source, tree)
-    used = set(_WORD.findall(blanked))
-    problems = []
-    for lineno, bound, display in _import_bindings(tree):
-        line = src_lines[lineno - 1] if lineno - 1 < len(src_lines) else ""
-        if "noqa" in line:
-            continue
-        if bound in used or bound in exported:
-            continue
-        problems.append(f"{path}:{lineno}: '{display}' imported but unused")
-    return problems
+        return [f"{path}:{exc.lineno}: E999 syntax error: {exc.msg}"]
+    chk = Checker(path, source, tree)
+    chk.check_unused_imports()
+    chk.check_line_rules()
+    chk.check_ast_rules()
+    chk.check_import_order()
+    return chk.problems
 
 
 def main(argv=None) -> int:

@@ -1,11 +1,10 @@
 """Assigned architectures (10) + shapes (4) as selectable configs."""
-from .base import (ModelConfig, ShapeConfig, SHAPES, get_config, list_archs,
-                   register, shape_applicable)
-
 # importing the modules registers full + reduced configs
-from . import (whisper_base, qwen2_vl_72b, kimi_k2, llama4_maverick,
-               granite_34b, yi_6b, granite_3_8b, qwen3_1_7b, xlstm_350m,
-               jamba_1_5_large)  # noqa: F401
+from . import (granite_34b, granite_3_8b, jamba_1_5_large,  # noqa: F401
+               kimi_k2, llama4_maverick, qwen2_vl_72b, qwen3_1_7b,
+               whisper_base, xlstm_350m, yi_6b)
+from .base import (SHAPES, ModelConfig, ShapeConfig, get_config,
+                   list_archs, register, shape_applicable)
 
 ALL_ARCHS = (
     "whisper-base",

@@ -31,7 +31,8 @@ class ModelConfig:
     moe_every: int = 1           # every k-th layer is MoE (1 = all)
     capacity_factor: float = 1.25
     moe_groups: int = 1          # dispatch groups (= data shards; launcher-set)
-    moe_weight_sharding: str = "fsdp"  # fsdp (d-dim over data) | ep_tp (ff over data; weight-stationary)
+    # fsdp (d-dim over data) | ep_tp (ff over data; weight-stationary)
+    moe_weight_sharding: str = "fsdp"
 
     # --- positional / norm ----------------------------------------------------
     rope_theta: float = 1e4
@@ -113,13 +114,16 @@ class ModelConfig:
                 total += d * nh * hd + 2 * d * nkv * hd + nh * hd * d
             elif kind == "mamba":
                 di = self.ssm_expand * d
-                total += d * 2 * di + di * self.ssm_conv + di * (2 * self.ssm_state + 2) + di * d
+                total += (d * 2 * di + di * self.ssm_conv
+                          + di * (2 * self.ssm_state + 2) + di * d)
             elif kind in ("slstm", "mlstm"):
                 dp = int(self.xlstm_proj_factor * d)
                 total += 2 * d * dp + dp * d + 4 * dp * dp // max(self.num_heads, 1)
-            if kind == "attn" or self.family in ("moe", "hybrid", "dense", "vlm", "encdec"):
+            if kind == "attn" or self.family in (
+                    "moe", "hybrid", "dense", "vlm", "encdec"):
                 if self.is_moe and (li % self.moe_every == self.moe_every - 1):
-                    total += self.num_experts * 3 * d * self.expert_ff + d * self.num_experts
+                    total += (self.num_experts * 3 * d * self.expert_ff
+                              + d * self.num_experts)
                 elif kind == "attn" or self.family != "ssm":
                     if ff > 0:
                         mult = 3 if self.act == "swiglu" else 2

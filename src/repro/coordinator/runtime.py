@@ -38,6 +38,7 @@ from ..configs.base import ModelConfig, ShapeConfig
 from ..core.cluster import Cluster
 from ..core.server import DeliveryRecord, Mode
 from ..models import init_params, model_specs
+from ..models.params import init_params as init_tree
 from ..train import (CheckpointManager,
                      DataPipeline,
                      OptConfig,
@@ -47,7 +48,6 @@ from ..train import (CheckpointManager,
 from ..train.compression import (CompressionConfig, GradCompressor,
                                  decompress)
 from ..train.optimizer import apply_updates
-from ..models.params import init_params as init_tree
 
 
 @dataclass

@@ -1,5 +1,6 @@
 # The paper's primary contribution: AllConcur+ — leaderless concurrent
 # atomic broadcast over dual overlay digraphs (unreliable G_U + reliable G_R).
+from .cluster import Cluster
 from .digraph import (Digraph, binomial_digraph, binomial_schedule,
                       circulant_digraph, gs_digraph, resilience_degree,
                       ring_digraph)
@@ -9,7 +10,6 @@ from .messages import (FailNotification, Heartbeat, LogSuffix, Message,
 from .overlay import BinomialOverlay, RingOverlay, UnreliableOverlay, make_overlay
 from .server import AllConcurServer, DeliveryRecord, Mode, Transition
 from .tracking import TrackingDigraph, TrackingState
-from .cluster import Cluster
 
 __all__ = [
     "AllConcurServer", "BinomialOverlay", "Cluster", "DeliveryRecord",

@@ -30,7 +30,7 @@ import random
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
-from ..runtime import NodeRuntime, SendBytes
+from ..runtime import NodeRuntime, SendBytes, SetTimer
 from .digraph import gs_digraph
 from .overlay import make_overlay
 from .server import AllConcurServer, DeliveryRecord, Mode
@@ -51,6 +51,7 @@ class Cluster:
         seed: int = 0,
         codec: bool = False,
         obs: Optional[Any] = None,
+        lease: Optional[Any] = None,
     ):
         self.codec = codec
         # observability (repro.obs.Observability, or None = zero overhead):
@@ -100,6 +101,17 @@ class Cluster:
                 srv, codec=codec, codec_n=n, obs=obs, counters=self._counters)
         self.channels: Dict[Tuple[int, int], deque] = {}
         self.crashed: Set[int] = set()
+        # SetTimer effects become (due_step, sid, timer_id, gen) entries;
+        # delays are measured in scheduler steps (the logical clock).  Due
+        # timers compete with message deliveries and FD events in the same
+        # randomized choice — so a lease expiry can race any delivery order.
+        self.timers: List[Tuple[int, int, str, int]] = []
+        # round-stability lease (repro.runtime.lease.LeaseConfig, durations
+        # in steps); enabled on every runtime, including later joiners
+        self.lease_cfg = lease
+        if lease is not None:
+            for rt in self.runtimes.values():
+                rt.enable_lease(lease, self._clock)
         # delivered FD events, keyed (target, det, det's eon): failure
         # notifications are eon-specific (§III-I), so detection re-arms
         # after every eon flip — the FD keeps suspecting a dead server and
@@ -122,6 +134,10 @@ class Cluster:
         return self._retired_wire_bytes + sum(
             rt.wire_bytes for rt in self.runtimes.values())
 
+    def _clock(self) -> float:
+        """Logical clock: the step counter (the unit SetTimer delays use)."""
+        return float(self.steps)
+
     # ----------------------------------------------------------------- wiring
     def start(self) -> None:
         for rt in self.runtimes.values():
@@ -134,6 +150,11 @@ class Cluster:
         here (FD re-arming across flips is the eon key in ``fd_done``).
         ``allow`` truncates a crashed sender to its first ``allow`` sends
         (crash mid-send)."""
+        if rt.sid not in self.crashed:
+            for e in effects:
+                if isinstance(e, SetTimer):
+                    self.timers.append((self.steps + max(int(e.delay), 1),
+                                        rt.sid, e.timer_id, e.gen))
         sends = [e for e in effects if isinstance(e, SendBytes)]
         if rt.sid in self.crashed:
             if allow is None:
@@ -186,6 +207,9 @@ class Cluster:
         for ch in list(self.channels):
             if sid in ch:
                 del self.channels[ch]   # drop pre-crash in-flight traffic
+        self.timers = [tm for tm in self.timers if tm[1] != sid]
+        if self.lease_cfg is not None:
+            rt.enable_lease(self.lease_cfg, self._clock)
         self._dispatch(rt, rt.drain())
 
     # -------------------------------------------------------------- scheduler
@@ -210,15 +234,37 @@ class Cluster:
                     out.append((target, det))
         return out
 
+    def _live_timers(self) -> List[Tuple[int, int, str, int]]:
+        """Prune timers that can never fire (crashed/replaced owner, stale
+        generation after a re-arm) and return the survivors."""
+        live: List[Tuple[int, int, str, int]] = []
+        for tm in self.timers:
+            _due, sid, tid, gen = tm
+            rt = self.runtimes.get(sid)
+            if (sid in self.crashed or rt is None
+                    or gen != rt._timer_gen.get(tid)):
+                continue
+            live.append(tm)
+        self.timers = live
+        return live
+
     def step(self) -> bool:
-        """Deliver one message (or one FD event).  Returns False if nothing
-        is pending."""
+        """Deliver one message, one FD event, or fire one due timer.
+        Returns False if nothing is pending.  When only timers remain, the
+        logical clock jumps to the earliest due step (quiescent time passes
+        instantly, like the timed simulator's heap)."""
         self.steps += 1
         choices: List[Tuple[str, Any]] = []
         for ch in self.pending_channels():
             choices.append(("msg", ch))
         for fd in self._fd_choices():
             choices.append(("fd", fd))
+        timers = self._live_timers()
+        if not choices and timers:
+            self.steps = max(self.steps, min(tm[0] for tm in timers))
+        for tm in timers:
+            if tm[0] <= self.steps:
+                choices.append(("timer", tm))
         if not choices:
             return False
         kind, pick = self.rng.choice(choices)
@@ -229,6 +275,11 @@ class Cluster:
                 self._c_steps.inc()
             rt = self.runtimes[dst]
             self._dispatch(rt, rt.deliver(msg, src=src))
+        elif kind == "timer":
+            self.timers.remove(pick)
+            _due, sid, tid, gen = pick
+            rt = self.runtimes[sid]
+            self._dispatch(rt, rt.on_timer(tid, gen))
         else:
             target, det = pick
             rt = self.runtimes[det]

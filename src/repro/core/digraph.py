@@ -30,7 +30,8 @@ class Digraph:
     protocol hot paths only read successor/predecessor sets.
     """
 
-    def __init__(self, vertices: Iterable[int] = (), edges: Iterable[Tuple[int, int]] = ()):
+    def __init__(self, vertices: Iterable[int] = (),
+                 edges: Iterable[Tuple[int, int]] = ()):
         self._succ: Dict[int, List[int]] = {}
         self._pred: Dict[int, List[int]] = {}
         for v in vertices:
@@ -102,7 +103,8 @@ class Digraph:
         return max((len(s) for s in self._succ.values()), default=0)
 
     # -- analysis ------------------------------------------------------------
-    def bfs_dists(self, src: int, blocked: FrozenSet[int] = frozenset()) -> Dict[int, int]:
+    def bfs_dists(self, src: int,
+                  blocked: FrozenSet[int] = frozenset()) -> Dict[int, int]:
         dists = {src: 0}
         frontier = [src]
         while frontier:
@@ -349,7 +351,8 @@ def binomial_digraph(members: Sequence[int]) -> Digraph:
     return g
 
 
-def binomial_schedule(members: Sequence[int], root_pos: int) -> List[Tuple[int, int, int]]:
+def binomial_schedule(members: Sequence[int],
+                      root_pos: int) -> List[Tuple[int, int, int]]:
     """Binomial-tree broadcast schedule rooted at members[root_pos].
 
     Returns list of (step, src, dst): at ``step`` the message travels

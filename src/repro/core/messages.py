@@ -36,7 +36,8 @@ class Message:
 
     @property
     def rtype(self) -> RoundType:
-        return RoundType.RELIABLE if self.kind == MsgKind.RBCAST else RoundType.UNRELIABLE
+        return (RoundType.RELIABLE if self.kind == MsgKind.RBCAST
+                else RoundType.UNRELIABLE)
 
     @property
     def uid(self) -> Tuple[int, int, int, int]:
@@ -130,3 +131,43 @@ class LogSuffix:
 
     def __repr__(self) -> str:
         return f"logsuffix({self.src}>{self.from_round}:{len(self.entries)})"
+
+
+@dataclass(frozen=True)
+class ReadRequest:
+    """A client-facing read against one replica's lease/session path.
+
+    ``src`` is the replica the read is addressed to; ``client_id`` the
+    session; ``token_round`` the client's read-your-writes token (its last
+    acked round, -1 for a fresh session); ``session_ok`` permits a
+    session-consistent (non-linearizable) answer when the lease is down.
+    """
+    src: int
+    client_id: int
+    key: Any
+    token_round: int = -1
+    session_ok: bool = False
+
+    def __repr__(self) -> str:
+        return f"readreq({self.client_id}->{self.src}:{self.key!r})"
+
+
+@dataclass(frozen=True)
+class ReadReply:
+    """The replica's answer.  ``served=True`` means the read was answered
+    locally (lease or session path) at ``applied_round``; ``served=False``
+    tells the client to escalate through the log-ordered path.
+    ``lease_ms`` is the remaining lease margin at serve time (wall-clock
+    safety headroom; 0 when not lease-served)."""
+    src: int
+    client_id: int
+    key: Any
+    value: Any = None
+    key_version: int = 0
+    applied_round: int = -1
+    served: bool = False
+    lease_ms: float = 0.0
+
+    def __repr__(self) -> str:
+        tag = "hit" if self.served else "miss"
+        return f"readrep({self.src}->{self.client_id}:{self.key!r} {tag})"

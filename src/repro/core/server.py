@@ -83,7 +83,8 @@ class AllConcurServer:
     ):
         self.sid = sid
         self.members: List[int] = sorted(members)
-        self.ov_u = overlay_u if overlay_u is not None else BinomialOverlay(self.members)
+        self.ov_u = (overlay_u if overlay_u is not None
+                     else BinomialOverlay(self.members))
         self.g_r = g_r if g_r is not None else gs_digraph(self.members, d_reliable)
         self.mode = mode
         self.payload_for = payload_for or (lambda r: None)

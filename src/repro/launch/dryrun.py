@@ -53,7 +53,8 @@ def _param_bytes_per_device(params_abs, param_sh, mesh) -> float:
                  jax.tree_util.tree_leaves(
                      param_sh, is_leaf=lambda v: isinstance(v, NamedSharding)))
     for leaf, sh in leaves:
-        nbytes = _np.prod(leaf.shape) * leaf.dtype.itemsize if leaf.shape else leaf.dtype.itemsize
+        nbytes = (_np.prod(leaf.shape) * leaf.dtype.itemsize
+                  if leaf.shape else leaf.dtype.itemsize)
         shards = 1
         for ax in sh.spec:
             if ax is None:

@@ -17,7 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from ..configs import get_config, ShapeConfig
+from ..configs import ShapeConfig, get_config
 from ..coordinator.runtime import ElasticTrainer
 from ..models import init_params, model_specs
 from ..models.params import init_params as init_tree, param_count

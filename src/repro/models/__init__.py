@@ -1,5 +1,5 @@
-from .model import (decode_state_specs, decode_step, forward, model_specs,
-                    effective_period, layer_kind, scan_repeats)
+from .model import (decode_state_specs, decode_step, effective_period,
+                    forward, layer_kind, model_specs, scan_repeats)
 from .params import (ParamSpec, abstract_params, init_params, param_count,
                      param_logical_axes)
 

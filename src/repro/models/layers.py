@@ -142,7 +142,7 @@ def _chunked_attention(q, k, v, *, causal: bool, q_offset=0,
     q_pos = q_offset + jnp.arange(sq)
 
     def step(carry, inputs):
-        m, l, acc = carry
+        m, denom, acc = carry
         ci, kci, vci = inputs
         kv_pos = ci * chunk + jnp.arange(chunk)
         s = jnp.einsum("bqkgh,bckh->bqkgc", qf, kci)  # (B,Sq,KVH,G,chunk)
@@ -157,18 +157,18 @@ def _chunked_attention(q, k, v, *, causal: bool, q_offset=0,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        denom_new = denom * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum("bqkgc,bckh->bqkgh", p, vci)
-        return (m_new, l_new, acc_new), None
+        return (m_new, denom_new, acc_new), None
 
     m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
     a0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
     idx = jnp.arange(nchunks)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, denom, acc), _ = jax.lax.scan(
         step, (m0, l0, a0),
         (idx, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
     return out.reshape(b, sq, h, hd)
 
 

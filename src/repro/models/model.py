@@ -95,13 +95,15 @@ def model_specs(cfg: ModelConfig) -> SpecTree:
         "embed": L.embed_specs(cfg),
         "final_norm": L.norm_specs(cfg),
     }
+    cross = bool(cfg.encoder_layers)
     if cfg.scan_layers:
         p = effective_period(cfg)
         reps = scan_repeats(cfg)
-        sp["decoder"] = {f"pos_{i}": _stack(block_specs(cfg, i, cross=bool(cfg.encoder_layers)), reps)
-                         for i in range(p)}
+        sp["decoder"] = {
+            f"pos_{i}": _stack(block_specs(cfg, i, cross=cross), reps)
+            for i in range(p)}
     else:
-        sp["decoder"] = {f"layer_{i}": block_specs(cfg, i, cross=bool(cfg.encoder_layers))
+        sp["decoder"] = {f"layer_{i}": block_specs(cfg, i, cross=cross)
                          for i in range(cfg.num_layers)}
     if cfg.encoder_layers:
         enc_cfg = cfg
@@ -340,7 +342,8 @@ def decode_step(cfg: ModelConfig, params, state, tokens):
     positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
     positions3 = None
     if cfg.mrope:
-        positions3 = jnp.broadcast_to(pos[None, None, None], (b, 3, 1)).astype(jnp.int32)
+        positions3 = jnp.broadcast_to(
+            pos[None, None, None], (b, 3, 1)).astype(jnp.int32)
     if cfg.rope_theta == 0:
         # absolute sinusoidal at current position
         d = cfg.d_model

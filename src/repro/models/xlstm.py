@@ -91,7 +91,8 @@ def mlstm_forward(cfg: ModelConfig, p, x, state: Optional[Dict] = None):
     h = jnp.moveaxis(hs, 0, 1).reshape(b, s, dp)
 
     # per-feature group norm then output gate
-    hf = h - jnp.mean(h.reshape(b, s, nh, dh), axis=-1, keepdims=True).repeat(dh, -1).reshape(b, s, dp)
+    hmean = jnp.mean(h.reshape(b, s, nh, dh), axis=-1, keepdims=True)
+    hf = h - hmean.repeat(dh, -1).reshape(b, s, dp)
     var = jnp.mean(jnp.square(hf.reshape(b, s, nh, dh)), axis=-1,
                    keepdims=True).repeat(dh, -1).reshape(b, s, dp)
     hn = hf * jax.lax.rsqrt(var + 1e-6) * p["out_norm"]
@@ -182,6 +183,8 @@ def slstm_forward(cfg: ModelConfig, p, x, state: Optional[Dict] = None):
 def slstm_state_specs(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
     nh = cfg.num_heads
     dh = _dp(cfg) // nh
-    mk = lambda: ParamSpec((batch, nh, dh), ("batch", None, "state"),
-                           init="zeros", dtype=jnp.float32)
+    def mk():
+        return ParamSpec((batch, nh, dh), ("batch", None, "state"),
+                         init="zeros", dtype=jnp.float32)
+
     return {"c": mk(), "n": mk(), "h": mk(), "m": mk()}

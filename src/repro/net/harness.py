@@ -144,6 +144,8 @@ def build_node(*, sid: int, members: Sequence[int], d: int, bind: str,
                batch_max: int = 16,
                hb_interval: float = DEFAULT_HB_INTERVAL,
                hb_timeout: float = DEFAULT_HB_TIMEOUT,
+               lease_duration: Optional[float] = None,
+               lease_margin: float = 0.0,
                on_ack=None, trace: bool = True):
     """One process's protocol stack — the same parts, wired the same way,
     as ``build_smr_cluster`` wires per slot.  Returns
@@ -152,10 +154,11 @@ def build_node(*, sid: int, members: Sequence[int], d: int, bind: str,
     from ..core.overlay import make_overlay
     from ..core.server import AllConcurServer, Mode
     from ..obs import Observability
-    from ..runtime import NodeRuntime
+    from ..runtime import LeaseConfig, NodeRuntime
     from ..smr.service import SMRService
 
-    svc = SMRService(sid, batch_max=batch_max, on_ack=on_ack)
+    svc = SMRService(sid, batch_max=batch_max, on_ack=on_ack,
+                     lease_mode=lease_duration is not None)
     ms = [sid] if joining else sorted(members)
     srv = AllConcurServer(
         sid, ms,
@@ -188,6 +191,11 @@ def build_node(*, sid: int, members: Sequence[int], d: int, bind: str,
     mgr = rt.attach_service(svc, membership_d=d)
     if not joining:
         svc.sm.bootstrap_config(ms)
+    if lease_duration is not None:
+        # clock = time.monotonic: the same domain asyncio's call_later uses
+        # for the lease SetTimer, and the trace recorder's clock above
+        rt.enable_lease(LeaseConfig(lease_duration, lease_margin),
+                        clock=time.monotonic)
     node = NetNode(rt, bind=bind, peers=peers)
     return node, svc, mgr, obs
 
@@ -207,6 +215,9 @@ async def worker_async(args) -> int:
         sid=args.sid, members=members, d=args.d, bind=args.bind, peers=peers,
         joining=args.joining, batch_max=args.batch_max,
         hb_interval=args.hb_interval, hb_timeout=args.hb_timeout,
+        lease_duration=args.lease_duration if args.lease_duration > 0
+        else None,
+        lease_margin=args.lease_margin,
         on_ack=lambda req, res, rnd: _emit(
             {"ev": "ack", "cid": req.client_id, "seq": req.seq, "round": rnd}))
     await node.start(boot_server=not args.joining)
@@ -227,7 +238,38 @@ async def worker_async(args) -> int:
             ok = svc.submit(ClientRequest(req["cid"], req["seq"], req["op"]))
             node.pump()
             _emit({"id": req.get("id"), "ok": bool(ok)})
+        elif cmd == "read":
+            # round-trip through the wire codec so the read path exercises
+            # the FRAME_READ_REQUEST/REPLY frames even on a local serve
+            from ..core.messages import ReadReply, ReadRequest
+            from ..wire.codec import decode, encode
+            lm = node.rt.lease
+            cid = int(req.get("cid", 0))
+            rreq = decode(encode(ReadRequest(
+                args.sid, cid, req["key"],
+                token_round=svc.session_token(cid),
+                session_ok=bool(req.get("session_ok")))))
+            res = node.rt.read(rreq.key, client_id=rreq.client_id,
+                               token_round=rreq.token_round,
+                               session_ok=rreq.session_ok)
+            if res is not None:
+                rep = ReadReply(
+                    args.sid, rreq.client_id, rreq.key, value=res.value,
+                    key_version=res.key_version,
+                    applied_round=res.applied_round, served=True,
+                    lease_ms=max(lm.margin(), 0.0) * 1e3 if lm else 0.0)
+            else:
+                rep = ReadReply(args.sid, rreq.client_id, rreq.key,
+                                served=False)
+            rep = decode(encode(rep))
+            node.pump()
+            _emit({"id": req.get("id"), "served": rep.served,
+                   "value": rep.value, "kver": rep.key_version,
+                   "round": rep.applied_round, "lease_ms": rep.lease_ms,
+                   "deny": None if rep.served
+                   else (lm.deny_reason() if lm else "disabled")})
         elif cmd == "status":
+            lm = node.rt.lease
             _emit({
                 "id": req.get("id"), "sid": args.sid,
                 "eon": node.rt.eon, "joining": node.rt.joining,
@@ -236,6 +278,12 @@ async def worker_async(args) -> int:
                 "config": list(svc.sm.config), "pending": len(svc.pending),
                 "reconnects": node.reconnects,
                 "decode_errors": node.decode_errors,
+                "lease": None if lm is None else {
+                    "held": lm.held, "grants": lm.grants,
+                    "renewals": lm.renewals, "revokes": lm.revokes,
+                    "served": lm.served, "fallbacks": lm.fallbacks,
+                    "reasons": dict(lm.revoke_reasons),
+                },
             })
         elif cmd == "crash":
             os._exit(1)                 # no flush, no goodbye
@@ -288,6 +336,8 @@ class Controller:
                  chaos: Optional[ChaosConfig] = None,
                  hb_interval: float = DEFAULT_HB_INTERVAL,
                  hb_timeout: float = DEFAULT_HB_TIMEOUT,
+                 lease_duration: Optional[float] = None,
+                 lease_margin: float = 0.0,
                  batch_max: int = 16, trace_dir: Optional[str] = None):
         self.workdir = workdir
         self.universe = list(universe)
@@ -296,6 +346,8 @@ class Controller:
         self.chaos = chaos
         self.hb_interval = hb_interval
         self.hb_timeout = hb_timeout
+        self.lease_duration = lease_duration
+        self.lease_margin = lease_margin
         self.batch_max = batch_max
         self.trace_dir = trace_dir
         self.workers: Dict[int, _Worker] = {}
@@ -340,6 +392,9 @@ class Controller:
                "--d", str(self.d), "--batch-max", str(self.batch_max),
                "--hb-interval", str(self.hb_interval),
                "--hb-timeout", str(self.hb_timeout)]
+        if self.lease_duration is not None:
+            cmd += ["--lease-duration", str(self.lease_duration),
+                    "--lease-margin", str(self.lease_margin)]
         shard = self.shard_path(sid)
         if shard:
             cmd += ["--trace", shard]
@@ -394,6 +449,13 @@ class Controller:
 
     async def status(self, sid: int) -> dict:
         return await self.cmd(sid, {"cmd": "status"})
+
+    async def read(self, sid: int, cid: int, key,
+                   session_ok: bool = False) -> dict:
+        """Serve a read at ``sid``; ``served=False`` means the worker fell
+        back (the caller decides whether to log-order it instead)."""
+        return await self.cmd(sid, {"cmd": "read", "cid": cid, "key": key,
+                                    "session_ok": session_ok})
 
     async def wait_acks(self, sid: int, pairs: Sequence[Pair],
                         timeout: float = PHASE_TIMEOUT) -> None:
@@ -557,6 +619,10 @@ def main(argv=None) -> int:
     ap.add_argument("--batch-max", type=int, default=16)
     ap.add_argument("--hb-interval", type=float, default=DEFAULT_HB_INTERVAL)
     ap.add_argument("--hb-timeout", type=float, default=DEFAULT_HB_TIMEOUT)
+    ap.add_argument("--lease-duration", type=float, default=0.0,
+                    help="round-stability lease lifetime in seconds "
+                         "(0 disables leases)")
+    ap.add_argument("--lease-margin", type=float, default=0.0)
     ap.add_argument("--joining", action="store_true")
     ap.add_argument("--seeds", default="")
     ap.add_argument("--trace", default=None)

@@ -116,6 +116,17 @@ class NetNode:
                  peers: Dict[int, str]):
         self.rt = runtime
         self.sid = runtime.sid
+        # FD sizing: a live peer's worst-case silence toward a G_R successor
+        # is one failed handshake plus one reconnect backoff.  If the
+        # heartbeat timeout doesn't clear that, a live server gets removed
+        # and the perfect-failure-detector premise breaks — refuse to start.
+        hb_timeout = getattr(runtime, "hb_timeout", None)
+        if getattr(runtime, "_hb", False) and hb_timeout is not None:
+            if hb_timeout <= HANDSHAKE_TIMEOUT + RECONNECT_DELAY:
+                raise ValueError(
+                    f"hb_timeout={hb_timeout} must exceed HANDSHAKE_TIMEOUT+"
+                    f"RECONNECT_DELAY={HANDSHAKE_TIMEOUT + RECONNECT_DELAY}: "
+                    "a reconnecting live peer would be declared dead")
         self.bind = bind
         self.peers = dict(peers)
         self.eon_hooks: List[Callable[[EonFlip], None]] = []

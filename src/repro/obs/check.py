@@ -16,11 +16,17 @@ benchmark produced:
   and its eon tags never decrease;
 * **validity plumbing** — every delivered broadcast source was a member
   the deliverer knew (src appears in ``srcs`` ⊆ last known membership, when
-  membership is recorded via ``eon_flip`` events).
+  membership is recorded via ``eon_flip`` events);
+* **lease-read freshness** — in lease mode every acked write establishes a
+  per-key version floor (``write_ack`` with ``version`` v raises the floor
+  to v; v = 0 marks a delete and resets it), and no later lease-served read
+  (``read_lease``) may return a ``kver`` below the floor: a lease-served
+  read must never be older than a write whose ack the client already holds.
 
 Violations raise :class:`TraceInvariantError` carrying a stable ``code``
 (``agreement`` / ``total_order`` / ``duplicate_delivery`` / ``stale_eon`` /
-``unknown_member`` / ``malformed_event``) — a typed diagnostic, not a bare
+``unknown_member`` / ``malformed_event`` / ``stale_lease_read``) — a typed
+diagnostic, not a bare
 assert — and :func:`check_trace` returns a :class:`CheckReport` summarizing
 what was verified when everything holds.
 """
@@ -31,7 +37,7 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 #: stable diagnostic codes (the CLI exit path prints these verbatim)
 CODES = ("agreement", "total_order", "duplicate_delivery", "stale_eon",
-         "unknown_member", "malformed_event")
+         "unknown_member", "malformed_event", "stale_lease_read")
 
 
 class TraceInvariantError(AssertionError):
@@ -57,12 +63,21 @@ class CheckReport:
     pairwise_agreements: int = 0
     eon_flips: int = 0
     max_eon: int = 0
+    lease_reads: int = 0
+    write_acks: int = 0
+    lease_grants: int = 0
+    lease_revokes: int = 0
 
     def __str__(self) -> str:
-        return (f"OK: {self.deliveries} deliveries across "
-                f"{len(self.servers)} servers, {self.rounds_checked} rounds "
-                f"agreement-checked ({self.pairwise_agreements} pairwise), "
-                f"{self.eon_flips} eon flips (max eon {self.max_eon})")
+        s = (f"OK: {self.deliveries} deliveries across "
+             f"{len(self.servers)} servers, {self.rounds_checked} rounds "
+             f"agreement-checked ({self.pairwise_agreements} pairwise), "
+             f"{self.eon_flips} eon flips (max eon {self.max_eon})")
+        if self.lease_reads or self.write_acks:
+            s += (f", {self.lease_reads} lease reads audited against "
+                  f"{self.write_acks} acked writes "
+                  f"({self.lease_grants} grants/{self.lease_revokes} revokes)")
+        return s
 
 
 def _iter_norm(events: Iterable[Any]):
@@ -84,6 +99,8 @@ def check_trace(events: Iterable[Any]) -> CheckReport:
     srcs_seen: Dict[int, set] = {}
     cur_eon: Dict[int, int] = {}
     members: Dict[int, Optional[set]] = {}
+    # lease mode: per-key version floor from acked writes (0 = deleted)
+    ver_floor: Dict[Any, int] = {}
 
     for t, kind, sid, fields in _iter_norm(events):
         if kind == "eon_flip":
@@ -112,6 +129,39 @@ def check_trace(events: Iterable[Any]) -> CheckReport:
             mem = fields.get("members")
             if mem is not None:
                 members[sid] = set(mem)
+        elif kind == "lease_grant":
+            report.lease_grants += 1
+        elif kind == "lease_revoke":
+            report.lease_revokes += 1
+        elif kind == "write_ack":
+            key = fields.get("key")
+            ver = fields.get("version")
+            if ver is None:
+                raise TraceInvariantError(
+                    "malformed_event",
+                    f"write_ack without version at t={t}", sid=sid)
+            report.write_acks += 1
+            if key is not None:
+                if ver == 0:  # delete: the key's version floor resets
+                    ver_floor[key] = 0
+                else:
+                    ver_floor[key] = max(ver_floor.get(key, 0), ver)
+        elif kind == "read_lease":
+            key = fields.get("key")
+            kver = fields.get("kver")
+            if kver is None:
+                raise TraceInvariantError(
+                    "malformed_event",
+                    f"read_lease without kver at t={t}", sid=sid)
+            report.lease_reads += 1
+            floor = ver_floor.get(key, 0)
+            if kver < floor:
+                raise TraceInvariantError(
+                    "stale_lease_read",
+                    f"server {sid} lease-served key {key!r} at version "
+                    f"{kver} after a write at version {floor} was acked "
+                    f"(t={t})", sid=sid,
+                    round=fields.get("round"))
         elif kind == "deliver":
             rnd = fields.get("round")
             srcs = fields.get("srcs")

@@ -28,6 +28,19 @@ Event vocabulary (see ``src/repro/obs/README.md`` for the span model):
 ``smr_batch``   the SMR service batched ``nreqs`` requests into a payload
 ``smr_apply``   the SMR service applied a delivered round (``applied``,
                 ``dups``, ``invalid``, ``digest``)
+``lease_grant`` ``sid`` granted itself a round-stability lease (``round``,
+                ``eon``, ``expiry``); silent renewals extend it per round
+``lease_revoke`` the lease dropped (``reason``: peer_down / eon_flip /
+                failure_notification / gr_update / transition_* / expired)
+``read_lease``  a linearizable read served off the lease (``key``,
+                ``kver``, ``round``, ``cid``, ``token``)
+``read_session`` a session-consistent read served via the client's
+                read-your-writes token (same fields)
+``read_fallback`` a local read was refused (``reason``); the caller takes
+                the log-ordered path
+``write_ack``   lease mode: a gated write ack released (``cid``, ``seq``,
+                ``key``, ``version``, ``round``) — the checker's
+                ``stale_lease_read`` rule audits reads against these
 ==============  ===========================================================
 
 Message descriptors (:func:`mdesc`) identify a broadcast across hops:
@@ -46,8 +59,8 @@ import zlib
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from ..core.messages import (FailNotification, Heartbeat, LogSuffix, Message,
-                             MsgKind, PartitionMarker, SnapshotChunk,
-                             SnapshotRequest)
+                             MsgKind, PartitionMarker, ReadReply, ReadRequest,
+                             SnapshotChunk, SnapshotRequest)
 
 #: protocol message kinds whose hops count as broadcast *work* (the §IV
 #: work-per-broadcast accounting); failure notifications and markers are
@@ -86,6 +99,12 @@ def mdesc(msg: Any) -> Dict[str, Any]:
                 "chunk": msg.chunk, "nchunks": msg.nchunks, "g": "app"}
     if isinstance(msg, LogSuffix):
         return {"m": "logsuffix", "msrc": msg.src, "g": "app"}
+    if isinstance(msg, ReadRequest):
+        return {"m": "readreq", "msrc": msg.src, "cid": msg.client_id,
+                "g": "app"}
+    if isinstance(msg, ReadReply):
+        return {"m": "readrep", "msrc": msg.src, "cid": msg.client_id,
+                "served": msg.served, "g": "app"}
     if isinstance(msg, tuple) and msg and isinstance(msg[0], str):
         # §IV baseline wire tuples: ("lcr_m", src, round, ...) etc.
         return {"m": "baseline", "bkind": msg[0], "g": "ring"}

@@ -112,7 +112,8 @@ def _layer_flops(cfg: ModelConfig, li: int, b: int, s: int, kv: float,
     else:
         f = _xlstm_flops(cfg, t, kind)
     if layer_has_ffn(cfg, li):
-        f += _moe_flops(cfg, t) if layer_has_moe(cfg, li) else _mlp_flops(cfg, t, cfg.d_ff)
+        f += (_moe_flops(cfg, t) if layer_has_moe(cfg, li)
+              else _mlp_flops(cfg, t, cfg.d_ff))
     if cfg.encoder_layers:  # decoder cross-attention
         fe = cfg.frontend_len
         d, hd, nh, nkv = cfg.d_model, cfg.head_dim, cfg.num_heads, cfg.num_kv_heads

@@ -1,12 +1,14 @@
 """Sans-I/O node runtime: the protocol stack behind every scheduler.
 
-See :mod:`repro.runtime.node` for the runtime and
-:mod:`repro.runtime.effects` for the effect vocabulary schedulers consume.
+See :mod:`repro.runtime.node` for the runtime,
+:mod:`repro.runtime.effects` for the effect vocabulary schedulers consume,
+and :mod:`repro.runtime.lease` for the round-stability read leases.
 """
 from .effects import Deliver, Effect, EonFlip, SendBytes, SetTimer, sends
+from .lease import LeaseConfig, LeaseManager
 from .node import SPLITTER_MAX_BUFFER, NodeRuntime
 
 __all__ = [
     "Deliver", "Effect", "EonFlip", "SendBytes", "SetTimer", "sends",
-    "NodeRuntime", "SPLITTER_MAX_BUFFER",
+    "LeaseConfig", "LeaseManager", "NodeRuntime", "SPLITTER_MAX_BUFFER",
 ]

@@ -1,0 +1,212 @@
+"""Round-stability leases: serve linearizable reads without a log round-trip.
+
+AllConcur+ runs redundancy-free on G_U exactly while the failure/eon
+machinery is quiet (§III): rounds complete with a message from *every*
+member, so a replica that keeps applying unreliable (T_UU) rounds has
+proof that every other replica is at most a bounded number of rounds
+behind it.  A :class:`LeaseManager` turns that round stability into a
+read lease:
+
+* **grant / renew** — every round applied while the node is *clean* (no
+  failure notifications, no pending G_R update, no eon flip, no non-T_UU
+  transition, nothing suspected, not halted/joining) extends the lease to
+  ``now + duration``.  Expiry is a generation-stamped ``SetTimer`` effect
+  (exactly like the heartbeat FD), so every scheduler — ``Cluster``,
+  ``sim``, the real-socket ``net`` transport — drives the same state
+  machine.
+* **revoke** — the first observation of *any* instability signal drops
+  the lease immediately: ``on_peer_down`` (FD suspicion), a failure
+  notification in ``server.F``, a ``schedule_gr_update`` the lease did
+  not observe, an eon flip, a transitional round (T_VR / T_UR / T_RR /
+  …), or the node halting/joining.  A lease never survives an event it
+  did not observe: revocation is checked after *every* runtime input.
+* **serve** — a read is lease-served only while
+  ``now + safety_margin < expiry``; otherwise the caller transparently
+  falls back to the log-ordered read path.
+
+Safety relies on the ack gate in :class:`~repro.smr.service.SMRService`
+(``lease_mode=True``): a round-R write is acknowledged only once a round
+≥ R + 2 applies locally, which proves every non-crashed member has
+applied round R (completing round R'' requires every tracked member's
+R'' message, which that member only sends after applying R'' − 2).  See
+``smr/README.md`` ("Leases & read paths") for the full argument and the
+``duration + safety_margin < hb_timeout`` sizing rule that bounds
+staleness under the heartbeat FD.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from .effects import Effect
+
+
+@dataclass(frozen=True)
+class LeaseConfig:
+    """Lease timing (same unit as the scheduler clock: steps or seconds).
+
+    ``duration`` is the lease lifetime granted per clean applied round;
+    ``safety_margin`` is subtracted at serve time (clock skew / in-flight
+    revocation headroom): a read is served only while
+    ``now + safety_margin < expiry``.
+    """
+    duration: float
+    safety_margin: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.duration <= 0:
+            raise ValueError("lease duration must be > 0")
+        if self.safety_margin < 0 or self.safety_margin >= self.duration:
+            raise ValueError("safety_margin must be in [0, duration)")
+
+
+class LeaseManager:
+    """Per-node lease state machine (pure state, driven by the runtime).
+
+    :meth:`observe` runs after every runtime input (from
+    ``NodeRuntime.drain``): it revokes on any instability signal and
+    grants/renews on clean round progress, returning the ``SetTimer``
+    effects it armed.  All timestamps come from the runtime's scheduler
+    clock, never from the wall directly.
+    """
+
+    def __init__(self, runtime: Any, cfg: LeaseConfig):
+        self.rt = runtime
+        self.cfg = cfg
+        self.held = False
+        self.expiry = float("-inf")
+        self.last_reason: Optional[str] = None   # why the lease was dropped
+
+        # counters (exported by harnesses/benches)
+        self.grants = 0
+        self.renewals = 0
+        self.revokes = 0
+        self.served = 0
+        self.fallbacks = 0
+        self.revoke_reasons: Dict[str, int] = {}
+
+        # fingerprints of the instability signals already observed
+        srv = runtime.server
+        self._seen_eon = int(getattr(srv, "eon", 0))
+        self._seen_tr = len(getattr(srv, "transitions", ()))
+        self._seen_susp = len(runtime._suspected)
+        self._last_marker = self._marker()
+
+    # -------------------------------------------------------------- helpers
+    def _marker(self) -> int:
+        """Round-progress marker: the service's applied round (or raw
+        delivered count before a service is attached)."""
+        svc = self.rt.service
+        if svc is not None:
+            return int(svc.applied_round)
+        return len(getattr(self.rt.server, "delivered", ()))
+
+    def _now(self) -> float:
+        clock = self.rt.clock
+        return clock() if clock is not None else 0.0
+
+    # ------------------------------------------------------------- observe
+    def observe(self) -> List[Effect]:
+        """Re-evaluate the lease against the node's current protocol state.
+        Called after every runtime input; returns armed timer effects."""
+        srv = self.rt.server
+        reason: Optional[str] = None
+
+        if getattr(srv, "halted", False):
+            reason = "halted"
+        elif getattr(srv, "joining", False):
+            reason = "joining"
+        susp = len(self.rt._suspected)
+        if susp > self._seen_susp:
+            reason = reason or "peer_down"
+            self._seen_susp = susp
+        if getattr(srv, "F", None):
+            reason = reason or "failure_notification"
+        if getattr(srv, "_pending_gr_updates", None):
+            reason = reason or "gr_update"
+        eon = int(getattr(srv, "eon", 0))
+        if eon != self._seen_eon:
+            reason = reason or "eon_flip"
+            self._seen_eon = eon
+        transitions = getattr(srv, "transitions", ())
+        if len(transitions) > self._seen_tr:
+            for tr, _e, _r in transitions[self._seen_tr:]:
+                if getattr(tr, "value", tr) != "uu":
+                    reason = reason or f"transition_{getattr(tr, 'value', tr)}"
+            self._seen_tr = len(transitions)
+
+        if reason is not None:
+            self._revoke(reason)
+            self._last_marker = self._marker()
+            return []
+
+        # clean: grant/renew iff a new round applied since the last look
+        marker = self._marker()
+        if marker <= self._last_marker:
+            return []
+        self._last_marker = marker
+        now = self._now()
+        self.expiry = now + self.cfg.duration
+        if self.held:
+            self.renewals += 1
+        else:
+            self.held = True
+            self.grants += 1
+            rec = self.rt._rec
+            if rec is not None:
+                rec.emit("lease_grant", self.rt.sid,
+                         round=int(getattr(srv, "round", -1)),
+                         eon=self._seen_eon, expiry=self.expiry)
+        return [self.rt._arm("lease", self.cfg.duration)]
+
+    def _revoke(self, reason: str) -> None:
+        self.last_reason = reason
+        if not self.held:
+            return
+        self.held = False
+        self.expiry = float("-inf")
+        self.revokes += 1
+        self.revoke_reasons[reason] = self.revoke_reasons.get(reason, 0) + 1
+        rec = self.rt._rec
+        if rec is not None:
+            rec.emit("lease_revoke", self.rt.sid, reason=reason,
+                     round=int(getattr(self.rt.server, "round", -1)),
+                     eon=self._seen_eon)
+
+    # --------------------------------------------------------------- timer
+    def on_timer_fired(self) -> List[Effect]:
+        """The ``"lease"`` SetTimer fired (stale generations were already
+        filtered by the runtime).  Expire if the lease really ran out; a
+        renewal that raced the fire just re-arms the remainder."""
+        if not self.held:
+            return []
+        now = self._now()
+        if now >= self.expiry:
+            self._revoke("expired")
+            return []
+        return [self.rt._arm("lease", self.expiry - now)]
+
+    # --------------------------------------------------------------- serve
+    def valid(self, now: Optional[float] = None) -> bool:
+        if not self.held:
+            return False
+        if now is None:
+            now = self._now()
+        return now + self.cfg.safety_margin < self.expiry
+
+    def deny_reason(self, now: Optional[float] = None) -> str:
+        """Why a read cannot be lease-served right now (trace diagnostics)."""
+        if not self.held:
+            return (f"revoked:{self.last_reason}" if self.last_reason
+                    else "no_lease")
+        if now is None:
+            now = self._now()
+        return "margin" if now + self.cfg.safety_margin >= self.expiry \
+            else "valid"
+
+    def margin(self, now: Optional[float] = None) -> float:
+        """Remaining serve window (``expiry - margin - now``); wall-clock
+        safety headroom measured by the net bench rows."""
+        if now is None:
+            now = self._now()
+        return self.expiry - self.cfg.safety_margin - now

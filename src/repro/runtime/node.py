@@ -112,6 +112,11 @@ class NodeRuntime:
         # per-source incremental frame reassembly (on_bytes)
         self._splitters: Dict[int, Any] = {}
 
+        # round-stability lease (enable_lease); clock is injected by the
+        # scheduler (Cluster: steps, sim: sim.now, net: loop.time)
+        self.lease: Optional[Any] = None
+        self.clock: Optional[Callable[[], float]] = None
+
     # ------------------------------------------------------------ properties
     @property
     def halted(self) -> bool:
@@ -184,6 +189,27 @@ class NodeRuntime:
         if self.server.on_eon_change is not self._eon_wrapper:
             self._wrap_eon()
         return self.manager
+
+    def enable_lease(self, cfg: Any, clock: Callable[[], float]) -> None:
+        """Turn on the round-stability lease state machine (see
+        :mod:`repro.runtime.lease`).  ``clock`` is the scheduler's time
+        source — the same one its ``SetTimer`` delays are measured in.
+
+        When the heartbeat FD is armed, the sizing rule
+        ``duration + safety_margin < hb_timeout`` is enforced: a lease must
+        not outlive the window in which a dead peer is still undetected,
+        otherwise a partitioned holder could serve a read after the rest of
+        the cluster removed it and committed past it."""
+        from .lease import LeaseConfig, LeaseManager
+        if not isinstance(cfg, LeaseConfig):
+            raise TypeError("enable_lease expects a LeaseConfig")
+        if self._hb and cfg.duration + cfg.safety_margin >= self.hb_timeout:
+            raise ValueError(
+                f"lease duration+margin ({cfg.duration + cfg.safety_margin}) "
+                f"must stay below hb_timeout ({self.hb_timeout}): a lease "
+                f"may never outlive the failure-detection window")
+        self.clock = clock
+        self.lease = LeaseManager(self, cfg)
 
     # --------------------------------------------------------------- inputs
     def start(self) -> List[Effect]:
@@ -293,6 +319,8 @@ class NodeRuntime:
             if target in self._suspected or not self._is_pred(target):
                 return []
             return self.on_peer_down(target)
+        if timer_id == "lease" and self.lease is not None:
+            return self.lease.on_timer_fired()
         return []
 
     # ---------------------------------------------------------------- drain
@@ -305,8 +333,62 @@ class NodeRuntime:
         out, self.server.outbox = self.server.outbox, []
         if limit is not None:
             out = out[:limit]
-        return pend + [SendBytes(dst, msg, n=self.codec_n)
-                       for dst, msg in out]
+        effects = pend + [SendBytes(dst, msg, n=self.codec_n)
+                          for dst, msg in out]
+        if self.lease is not None:
+            # the lease re-evaluates after *every* input: it must never
+            # survive an instability signal it did not observe
+            effects.extend(self.lease.observe())
+        return effects
+
+    # ----------------------------------------------------------------- reads
+    def read(self, key: Any, *, client_id: Optional[int] = None,
+             token_round: int = -1, session_ok: bool = False) -> Optional[Any]:
+        """Serve a read locally, or return None (caller falls back to the
+        log-ordered path).
+
+        * **lease path** (linearizable): served iff the round-stability
+          lease is valid (``now + safety_margin < expiry``) *and* local
+          state covers the client's read-your-writes token.
+        * **session path** (``session_ok=True``): no lease required — a
+          stale replica may serve as long as ``applied_round`` has reached
+          the client's last-acked round (read-your-writes, not
+          linearizable).
+
+        Emits ``read_lease`` / ``read_session`` / ``read_fallback`` trace
+        events so the invariant checker can audit every served read."""
+        svc = self.service
+        if svc is None:
+            return None
+        lm = self.lease
+        now = self.clock() if self.clock is not None else 0.0
+        token_ok = token_round <= svc.applied_round
+        if lm is not None and lm.valid(now) and token_ok:
+            res = svc.read_lease(key)
+            lm.served += 1
+            if self._rec is not None:
+                self._rec.emit("read_lease", self.sid, key=key,
+                               kver=res.key_version, round=res.applied_round,
+                               cid=client_id, token=token_round)
+            return res
+        if session_ok and token_ok:
+            res = svc.read_lease(key)
+            if lm is not None:
+                lm.served += 1
+            if self._rec is not None:
+                self._rec.emit("read_session", self.sid, key=key,
+                               kver=res.key_version, round=res.applied_round,
+                               cid=client_id, token=token_round)
+            return res
+        if lm is not None:
+            lm.fallbacks += 1
+        if self._rec is not None:
+            reason = ("token" if not token_ok
+                      else lm.deny_reason(now) if lm is not None
+                      else "disabled")
+            self._rec.emit("read_fallback", self.sid, key=key,
+                           reason=reason, cid=client_id, token=token_round)
+        return None
 
     # ------------------------------------------------------------ recording
     def record_send(self, dst: int, msg: Any, *, nbytes: Optional[int] = None,

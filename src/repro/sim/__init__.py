@@ -1,8 +1,9 @@
-from .network import FatTreeSDC, MultiDC, NetworkModel, UniformNetwork, make_network
+from .baselines import LCRServer, LibpaxosNode
+from .network import (FatTreeSDC, MultiDC, NetworkModel, UniformNetwork,
+                      make_network)
 from .runner import (Metrics, Simulation, SMRMetrics, build_simulation,
                      build_smr_simulation, schedule_membership_change,
                      wire_size)
-from .baselines import LCRServer, LibpaxosNode
 
 __all__ = [
     "FatTreeSDC", "LCRServer", "LibpaxosNode", "Metrics", "MultiDC",

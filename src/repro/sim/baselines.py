@@ -118,8 +118,9 @@ class LibpaxosNode:
                 self.outbox.append((a, ("pax_accept", src, rnd, batch)))
         elif kind == "pax_accept" and self.sid in self.acceptors:
             _, src, rnd, batch = msg
-            for l in self.members:
-                self.outbox.append((l, ("pax_accepted", src, rnd, batch, self.sid)))
+            for dst in self.members:
+                self.outbox.append(
+                    (dst, ("pax_accepted", src, rnd, batch, self.sid)))
         elif kind == "pax_accepted":
             _, src, rnd, batch, _acc = msg
             key = (rnd, src)

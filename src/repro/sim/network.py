@@ -54,9 +54,10 @@ class FatTreeSDC(NetworkModel):
     """Single datacenter: n = k^2/2 servers, one per subnet.
 
     Paths (one server per subnet, so no same-subnet pairs):
-      same pod:      host - edge - aggr - edge - host    (2 host + 2 sw links, 3 switches)
-      different pod: host - edge - aggr - core - aggr - edge - host
-                                                          (2 host + 4 sw links, 5 switches)
+      same pod:      host-edge-aggr-edge-host  (2 host + 2 sw links,
+                                                3 switches)
+      different pod: host-edge-aggr-core-aggr-edge-host  (2 host +
+                                                4 sw links, 5 switches)
     """
 
     def __init__(self, n: int):

@@ -20,12 +20,15 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 from ..core.digraph import gs_digraph, resilience_degree
 from ..core.overlay import make_overlay
 from ..core.server import AllConcurServer, DeliveryRecord, Mode
-from ..runtime import EonFlip, NodeRuntime, SendBytes
+from ..runtime import EonFlip, NodeRuntime, SendBytes, SetTimer
 from ..wire import TXN_BYTES, encoded_size  # noqa: F401  (TXN_BYTES re-export)
 from .baselines import LCRServer, LibpaxosNode
 from .network import NetworkModel, make_network
 
 LOCAL_READ_LATENCY = 5e-6   # co-located client -> replica memory read (5 us)
+# lease-served linearizable read: the local read plus the lease-validity
+# and session-token checks (<~2x the raw local read; still no log trip)
+LEASE_READ_LATENCY = 8e-6
 
 
 def wire_size(msg: Any, n: int) -> int:
@@ -95,7 +98,7 @@ class Metrics:
         return t1, t2
 
     def median_latency(self) -> float:
-        all_l = sorted(l for ls in self.latencies.values() for l in ls)
+        all_l = sorted(v for ls in self.latencies.values() for v in ls)
         if not all_l:
             return float("nan")
         return all_l[len(all_l) // 2]
@@ -151,12 +154,25 @@ class Simulation:
         self.runtimes: Dict[int, NodeRuntime] = {
             sid: NodeRuntime(srv, obs=obs, counters=self._counters)
             for sid, srv in servers.items()}
+        # round-stability lease config (repro.runtime.lease.LeaseConfig,
+        # durations in simulated seconds); see enable_leases()
+        self.lease_config: Optional[Any] = None
+
+    def enable_leases(self, cfg: Any) -> None:
+        """Run the lease state machine on every runtime (joiners included),
+        clocked by simulated time."""
+        self.lease_config = cfg
+        for rt in self.runtimes.values():
+            rt.enable_lease(cfg, lambda: self.now)
 
     def register_server(self, sid: int, srv: Any) -> None:
         """Add a dynamically joining server mid-run (eon membership)."""
         self.servers[sid] = srv
         self.runtimes[sid] = NodeRuntime(srv, obs=self.obs,
                                          counters=self._counters)
+        if self.lease_config is not None:
+            self.runtimes[sid].enable_lease(self.lease_config,
+                                            lambda: self.now)
         self.tx_free.setdefault(sid, 0.0)
         self.crashed.discard(sid)
 
@@ -184,6 +200,11 @@ class Simulation:
         for e in effects:
             if isinstance(e, EonFlip):
                 self._on_eon_flip(e)
+                continue
+            if isinstance(e, SetTimer):
+                # timers bypass the NIC model: they are local alarms
+                self.post(self.now + e.delay, "timer",
+                          (sid, e.timer_id, e.gen))
                 continue
             if not isinstance(e, SendBytes):
                 continue
@@ -268,6 +289,14 @@ class Simulation:
                 if rt.halted:
                     continue
                 self._dispatch(det, rt.on_peer_down(target))
+            elif kind == "timer":
+                sid, tid, gen = data
+                if sid in self.crashed:
+                    continue
+                rt = self.runtimes.get(sid)
+                if rt is None or rt.halted:
+                    continue
+                self._dispatch(sid, rt.on_timer(tid, gen))
             elif kind == "call":
                 # generic timed callback (client arrivals, probes, ...)
                 data()
@@ -454,6 +483,7 @@ def build_smr_simulation(
     client_failover: bool = False,
     failover_delay: Optional[float] = None,
     obs: Optional[Any] = None,
+    lease: Optional[Any] = None,
 ) -> Tuple[Simulation, SMRMetrics, Dict[int, Any]]:
     """Timed end-to-end SMR deployment: AllConcur+ servers (mode from
     ``algo`` in {allconcur+, allconcur, allgather}) each hosting an
@@ -473,7 +503,16 @@ def build_smr_simulation(
     live replica ``failover_delay`` (default: the FD timeout) after the
     crash, resubmitting their in-flight request — the ``(client_id, seq)``
     exactly-once dedup makes the retry safe, and the tail latency through
-    the failover lands in the returned metrics."""
+    the failover lands in the returned metrics.
+
+    ``lease`` (a :class:`~repro.runtime.lease.LeaseConfig`, durations in
+    simulated seconds) turns on round-stability leases: with
+    ``linearizable_reads=True`` a ``get`` is first offered to the
+    co-located replica's lease path (:meth:`NodeRuntime.read`) and only
+    falls back to the log when the lease is invalid; with
+    ``linearizable_reads=False`` the same call serves session-consistent
+    reads gated by the client's read-your-writes token.  Services run with
+    gated acks (``lease_mode=True``)."""
     from ..smr.service import SMRService
     from ..smr.workload import WorkloadConfig, WorkloadGenerator
 
@@ -515,7 +554,22 @@ def build_smr_simulation(
         now = sim.now if t_known is None else t_known
         is_read = req.op.get("op") == "get"
         smr.on_submit(req.uid, now)
-        if is_read and not cfg.linearizable_reads:
+        if is_read and lease is not None:
+            # lease path (linearizable) or, when the workload does not ask
+            # for linearizable reads, the session (read-your-writes) path
+            rt = sim.runtimes.get(sid)
+            res = rt.read(req.op.get("key"), client_id=req.client_id,
+                          token_round=services[sid].session_token(
+                              req.client_id),
+                          session_ok=not cfg.linearizable_reads) \
+                if rt is not None else None
+            if res is not None:
+                sim.post(now + LEASE_READ_LATENCY, "call",
+                         mk_local_ack(client, req.uid))
+                return
+            # lease invalid / token not covered: ride the log (the req is a
+            # plain "get", so it orders like a linearizable read)
+        elif is_read and not cfg.linearizable_reads:
             # stale-bounded local read: answered by the co-located replica
             # without a trip through the log, after a small local-read delay
             res = services[sid].read_local(req.op.get("key"))
@@ -548,6 +602,7 @@ def build_smr_simulation(
         services[sid] = SMRService(sid, batch_max=batch_max,
                                    compact_every=compact_every,
                                    stale_bound=stale_bound,
+                                   lease_mode=lease is not None,
                                    on_ack=mk_ack(sid))
         # seed the replicated config so admin-command results (and their
         # digest coverage) match across harnesses and catch-up replays
@@ -568,6 +623,8 @@ def build_smr_simulation(
     sim = Simulation(servers, net, Metrics(n=n, batch=batch_max),
                      fd_timeout=fd_timeout, obs=obs)
     sim_holder.append(sim)
+    if lease is not None:
+        sim.enable_leases(lease)
 
     # ---- client failover: re-home the clients of a dead/removed server ----
     fo_delay = failover_delay if failover_delay is not None else fd_timeout
@@ -624,7 +681,8 @@ def build_smr_simulation(
     def make_service(sid: int) -> SMRService:
         svc = SMRService(sid, batch_max=batch_max,
                          compact_every=compact_every,
-                         stale_bound=stale_bound, on_ack=mk_ack(sid))
+                         stale_bound=stale_bound,
+                         lease_mode=lease is not None, on_ack=mk_ack(sid))
         services[sid] = svc
         return svc
     sim.smr_make_service = make_service

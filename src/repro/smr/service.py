@@ -75,11 +75,23 @@ class SMRService:
         compact_every: int = 64,
         stale_bound: Optional[int] = None,
         on_ack: Optional[Callable[[ClientRequest, Any, int], None]] = None,
+        lease_mode: bool = False,
+        ack_gate: int = 2,
     ):
         self.sid = sid
         self.batch_max = max(batch_max, 1)
         self.stale_bound = stale_bound
         self.on_ack = on_ack          # (request, result, round) -> None
+        # lease mode: acks are *gated* — a round-R write is acknowledged
+        # only once a round >= R + ack_gate applies here, which proves every
+        # non-crashed member has applied round R (see smr/README.md,
+        # "Leases & read paths"), making lease-served reads linearizable
+        self.lease_mode = lease_mode
+        self.ack_gate = max(int(ack_gate), 1)
+        self._gated: List[Tuple[int, int, Mapping[str, Any], Any, int,
+                                Optional[int]]] = []
+        # read-your-writes session tokens: per client, last acked round
+        self.acked_round: Dict[int, int] = {}
         self.sm = KVStateMachine()
         self.log = DeliveredRoundLog(compact_every=compact_every)
 
@@ -120,6 +132,9 @@ class SMRService:
         if self.applied_seq.get(req.client_id, -1) >= req.seq:
             seq, result = self.last_result.get(req.client_id, (req.seq, None))
             if self.on_ack and seq == req.seq:
+                self.acked_round[req.client_id] = max(
+                    self.acked_round.get(req.client_id, -1),
+                    self.applied_round)
                 self.on_ack(req, result, self.applied_round)
             return False
         if req.uid in self._pending_uids:
@@ -140,6 +155,17 @@ class SMRService:
             return ReadResult(None, 0, self.applied_round, stale=True)
         value, kver = self.sm.read(key)
         return ReadResult(value, kver, self.applied_round)
+
+    def read_lease(self, key: Any) -> ReadResult:
+        """Unconditional local read for lease/session serving — the caller
+        (:meth:`NodeRuntime.read`) already established that serving locally
+        is safe (valid lease, or a covered read-your-writes token)."""
+        value, kver = self.sm.read(key)
+        return ReadResult(value, kver, self.applied_round)
+
+    def session_token(self, client_id: int) -> int:
+        """The client's read-your-writes token: its last acked round."""
+        return self.acked_round.get(client_id, -1)
 
     def submit_linearizable_read(self, client_id: int, seq: int,
                                  key: Any) -> bool:
@@ -182,7 +208,7 @@ class SMRService:
                     # it ride payloads forever
                     last = self.last_result.get(cid)
                     cached = last[1] if last and last[0] == seq else None
-                    self._ack(cid, seq, op, cached, rec.round)
+                    self._ack_or_gate(cid, seq, op, cached, rec.round, None)
                     continue
                 if op.get("op") not in VALID_OPS:
                     # a faulty peer batched garbage: skip it *deterministically*
@@ -203,7 +229,7 @@ class SMRService:
                     result = {"error": type(exc).__name__}
                     self.applied_seq[cid] = seq
                     self.last_result[cid] = (seq, result)
-                    self._ack(cid, seq, op, result, rec.round)
+                    self._ack_or_gate(cid, seq, op, result, rec.round, None)
                     continue
                 self.applied_seq[cid] = seq
                 self.last_result[cid] = (seq, result)
@@ -212,7 +238,15 @@ class SMRService:
                     # every replica sees the same command in the same round,
                     # so every replica schedules the same eon change here
                     self.on_membership(op, rec)
-                self._ack(cid, seq, op, result, rec.round)
+                o = op.get("op")
+                if o in ("put", "incr"):
+                    wver: Optional[int] = self.sm.key_version.get(
+                        op.get("key"), 0)
+                elif o == "del":
+                    wver = 0      # deletion resets the key's version floor
+                else:
+                    wver = None   # reads/noops/admin: no write to audit
+                self._ack_or_gate(cid, seq, op, result, rec.round, wver)
         self.applied_round = rec.round
         self.applied_digests[rec.round] = self.sm.digest()
         if self.obs_counters is not None:
@@ -236,16 +270,40 @@ class SMRService:
             floor = self.log.snapshot_round - self.log.compact_every
             self.applied_digests = {r: d for r, d in self.applied_digests.items()
                                     if r > floor}
+        self._flush_gated(rec.round)
+
+    def _ack_or_gate(self, cid: int, seq: int, op: Mapping[str, Any],
+                     result: Any, rnd: int, wver: Optional[int]) -> None:
+        """Release the ack now, or — in lease mode — gate it until a round
+        >= rnd + ack_gate applies (the proof every member applied rnd)."""
+        if self.lease_mode:
+            self._gated.append((cid, seq, op, result, rnd, wver))
+        else:
+            self._ack(cid, seq, op, result, rnd, wver)
+
+    def _flush_gated(self, applied: int) -> None:
+        """Release every gated ack whose proof round has now applied.
+        Rounds apply in increasing order, so the gate queue is sorted."""
+        while self._gated and self._gated[0][4] <= applied - self.ack_gate:
+            cid, seq, op, result, rnd, wver = self._gated.pop(0)
+            self._ack(cid, seq, op, result, rnd, wver)
 
     def _ack(self, cid: int, seq: int, op: Mapping[str, Any], result: Any,
-             rnd: int) -> None:
+             rnd: int, wver: Optional[int] = None) -> None:
         uid = (cid, seq)
         if uid in self._pending_uids:
             self._pending_uids.discard(uid)
             self.pending = [r for r in self.pending if r.uid != uid]
             self.acked += 1
+            self.acked_round[cid] = max(self.acked_round.get(cid, -1), rnd)
             if self.obs_counters is not None:
                 self.obs_counters["acked"].inc()
+            if self.lease_mode and wver is not None and self.tracer is not None:
+                # audited by the trace checker's stale_lease_read rule: any
+                # later lease-served read of this key must see >= wver
+                # (0 marks a delete: the version floor resets)
+                self.tracer.emit("write_ack", self.sid, cid=cid, seq=seq,
+                                 key=op.get("key"), version=wver, round=rnd)
             if self.on_ack:
                 self.on_ack(ClientRequest(cid, seq, op), result, rnd)
 
@@ -338,6 +396,7 @@ class SMRService:
         self.highest_seen_round = max(self.highest_seen_round,
                                       self.applied_round)
         self.applied_digests[self.applied_round] = self.sm.digest()
+        self._flush_gated(self.applied_round)
         return self.sm.digest()
 
 
@@ -356,6 +415,7 @@ def build_smr_cluster(
     stale_bound: Optional[int] = None,
     on_ack: Optional[Callable[[int, ClientRequest, Any, int], None]] = None,
     membership: bool = True,
+    lease: Optional[Any] = None,
     **cluster_kwargs: Any,
 ) -> Tuple[Cluster, Dict[int, SMRService]]:
     """A :class:`Cluster` whose servers run the SMR service: payloads come
@@ -365,10 +425,16 @@ def build_smr_cluster(
     :class:`~repro.smr.membership.MembershipManager` to every service
     (available as ``service.membership``) so ``add_server`` /
     ``remove_server`` commands delivered through the log trigger the agreed
-    eon change and serve catch-up snapshots to joiners."""
+    eon change and serve catch-up snapshots to joiners.
+
+    ``lease`` (a :class:`~repro.runtime.lease.LeaseConfig`, durations in
+    scheduler steps) turns on round-stability leases: every runtime runs
+    the lease state machine and every service gates its acks
+    (``lease_mode=True``) so lease-served reads are linearizable."""
     services: Dict[int, SMRService] = {
         sid: SMRService(sid, batch_max=batch_max, compact_every=compact_every,
                         stale_bound=stale_bound,
+                        lease_mode=lease is not None,
                         on_ack=(lambda s: (lambda req, res, rnd:
                                            on_ack(s, req, res, rnd)))(sid)
                         if on_ack else None)
@@ -378,6 +444,7 @@ def build_smr_cluster(
         n, d, mode=mode, seed=seed,
         payload_fn=lambda sid, rnd: services[sid].payload_for(rnd),
         on_deliver_fn=lambda sid, rec: services[sid].on_deliver(rec),
+        lease=lease,
         **cluster_kwargs,
     )
     for sid, svc in services.items():

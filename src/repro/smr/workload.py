@@ -104,7 +104,8 @@ class WorkloadGenerator:
     def client(self, cid: int) -> WorkloadClient:
         return self.clients[cid]
 
-    def assign_round_robin(self, server_ids: List[int]) -> Dict[int, List[WorkloadClient]]:
+    def assign_round_robin(
+            self, server_ids: List[int]) -> Dict[int, List[WorkloadClient]]:
         """Partition clients across servers (co-located client model)."""
         out: Dict[int, List[WorkloadClient]] = {sid: [] for sid in server_ids}
         for i, c in enumerate(self.clients):

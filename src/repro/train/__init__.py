@@ -1,8 +1,8 @@
+from .checkpoint import CheckpointManager, tree_hash
+from .data import DataPipeline, batch_struct, synthetic_batch
 from .optimizer import OptConfig, apply_updates, lr_at, opt_state_specs
 from .steps import (cross_entropy, make_decode_step, make_loss_fn,
                     make_prefill_step, make_serve_step, make_train_step)
-from .data import DataPipeline, batch_struct, synthetic_batch
-from .checkpoint import CheckpointManager, tree_hash
 
 __all__ = [
     "CheckpointManager", "DataPipeline", "OptConfig", "apply_updates",

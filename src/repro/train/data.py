@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig, ShapeConfig
 
 
-def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+def batch_struct(cfg: ModelConfig,
+                 shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
     b, s = shape.global_batch, shape.seq_len
     out: Dict[str, jax.ShapeDtypeStruct] = {
@@ -51,7 +52,8 @@ def synthetic_batch(cfg: ModelConfig, shape: ShapeConfig, step: int,
         out["vision_embeds"] = 0.02 * jax.random.normal(
             kvis, (b, cfg.frontend_len, cfg.d_model)).astype(cfg.dtype)
         pos = jnp.broadcast_to(jnp.arange(s), (b, s))
-        out["positions3"] = jnp.broadcast_to(pos[:, None, :], (b, 3, s)).astype(jnp.int32)
+        out["positions3"] = jnp.broadcast_to(
+            pos[:, None, :], (b, 3, s)).astype(jnp.int32)
     if cfg.encoder_layers:
         out["frames"] = 0.02 * jax.random.normal(
             kfrm, (b, cfg.frontend_len, cfg.d_model)).astype(cfg.dtype)

@@ -52,7 +52,9 @@ def clip_by_global_norm(grads, max_norm: float):
 # ---------------------------------------------------------------------------
 
 def adamw_state_specs(param_specs: SpecTree) -> Dict[str, Any]:
-    f32 = lambda s: ParamSpec(s.shape, s.axes, init="zeros", dtype=jnp.float32)
+    def f32(s):
+        return ParamSpec(s.shape, s.axes, init="zeros", dtype=jnp.float32)
+
     return {
         "m": tree_map_spec(f32, param_specs),
         "v": tree_map_spec(f32, param_specs),

@@ -57,9 +57,9 @@ def make_train_step(cfg: ModelConfig, oc: OptConfig,
                 sl = {k: jax.lax.dynamic_slice_in_dim(v, i * mb, mb, axis=0)
                       if v.ndim and v.shape[0] == b else v
                       for k, v in batch.items()}
-                g, l = single(params, sl)
+                g, loss = single(params, sl)
                 gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
-                return (gacc, lacc + l), None
+                return (gacc, lacc + loss), None
 
             zeros = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)

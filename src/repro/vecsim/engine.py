@@ -188,7 +188,10 @@ def run_unreliable(parent, send_off, occ, prop, *, rounds: int,
         max_iters = 2 * int(np.ceil(np.log2(max(n, 2)))) + 8
 
     fn = _compiled_unreliable(n, K, max_iters, engine)
-    flat = lambda a: np.asarray(a, np.float64).reshape((-1,) + a.shape[len(batch_shape):])
+    def flat(a):
+        return np.asarray(a, np.float64).reshape(
+            (-1,) + a.shape[len(batch_shape):])
+
     C, tstart, iters = fn(
         parent.reshape((-1, n, n)).astype(np.int32),
         flat(np.asarray(send_off)), flat(np.asarray(occ)),
@@ -337,7 +340,10 @@ def run_reliable(adj, edge_off, occ, prop, *, rounds: int,
 
     adj_f = adj.reshape((-1, n, n))
     B = adj_f.shape[0]
-    flat = lambda a: np.asarray(a, np.float64).reshape((-1,) + a.shape[len(batch_shape):])
+    def flat(a):
+        return np.asarray(a, np.float64).reshape(
+            (-1,) + a.shape[len(batch_shape):])
+
     eoff_f, occ_f, prop_f = (flat(np.asarray(edge_off)), flat(np.asarray(occ)),
                              flat(np.asarray(prop)))
 

@@ -46,7 +46,9 @@ class MonteCarloResult:
     total_time: np.ndarray      # [S] seconds to deliver all rounds
 
     def summary(self) -> dict:
-        q = lambda a, p: float(np.percentile(a, p))
+        def q(a, p):
+            return float(np.percentile(a, p))
+
         return {
             "throughput_mean": float(self.throughput.mean()),
             "throughput_p5": q(self.throughput, 5),

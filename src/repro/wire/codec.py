@@ -62,8 +62,8 @@ import struct
 from typing import Any, List, Mapping, Optional, Tuple
 
 from ..core.messages import (FailNotification, Heartbeat, LogSuffix, Message,
-                             MsgKind, PartitionMarker, SnapshotChunk,
-                             SnapshotRequest)
+                             MsgKind, PartitionMarker, ReadReply, ReadRequest,
+                             SnapshotChunk, SnapshotRequest)
 from .crc32c import crc32c
 from .errors import (BadMagicError, ChecksumError, FrameTooLargeError,
                      MalformedFieldError, TrailingBytesError,
@@ -83,12 +83,15 @@ FRAME_BASELINE = 0x05
 FRAME_SNAP_REQUEST = 0x06
 FRAME_SNAP_CHUNK = 0x07
 FRAME_LOG_SUFFIX = 0x08
+FRAME_READ_REQUEST = 0x09
+FRAME_READ_REPLY = 0x0A
 
 FRAME_KIND_NAMES = {
     FRAME_MESSAGE: "message", FRAME_FAIL: "fail",
     FRAME_HEARTBEAT: "heartbeat", FRAME_MARKER: "marker",
     FRAME_BASELINE: "baseline", FRAME_SNAP_REQUEST: "snap_request",
     FRAME_SNAP_CHUNK: "snap_chunk", FRAME_LOG_SUFFIX: "log_suffix",
+    FRAME_READ_REQUEST: "read_request", FRAME_READ_REPLY: "read_reply",
 }
 
 # optional codec-level observer (repro.obs.WireObserver): counts frames,
@@ -390,6 +393,23 @@ def _body(msg: Any, n: int) -> Tuple[int, bytearray, int]:
         _encode_value(out, msg.from_round)
         _encode_value(out, tuple(msg.entries))
         return FRAME_LOG_SUFFIX, out, 0
+    if isinstance(msg, ReadRequest):
+        _write_u32(out, msg.src, "src")
+        _write_u32(out, msg.client_id, "client_id")
+        out.append(1 if msg.session_ok else 0)
+        _encode_value(out, msg.key)
+        _encode_value(out, msg.token_round)
+        return FRAME_READ_REQUEST, out, 0
+    if isinstance(msg, ReadReply):
+        _write_u32(out, msg.src, "src")
+        _write_u32(out, msg.client_id, "client_id")
+        out.append(1 if msg.served else 0)
+        _write_u64(out, msg.key_version, "key_version")
+        _encode_value(out, msg.key)
+        _encode_value(out, msg.value)
+        _encode_value(out, msg.applied_round)
+        _encode_value(out, float(msg.lease_ms))
+        return FRAME_READ_REPLY, out, 0
     if isinstance(msg, tuple):
         _encode_value(out, msg)
         pad = _baseline_pad(msg, n)
@@ -544,6 +564,38 @@ def _decode_frame(buf: bytes, pos: int = 0) -> Tuple[Any, int]:
         if not isinstance(entries, tuple):
             raise MalformedFieldError("log-suffix entries must be a tuple")
         msg = LogSuffix(src, from_round=fr, entries=entries)
+    elif kind == FRAME_READ_REQUEST:
+        src = r.u32("src")
+        cid = r.u32("client_id")
+        sess = r.byte("session_ok flag")
+        if sess not in (0, 1):
+            raise MalformedFieldError(
+                f"session_ok flag must be 0/1, got {sess}")
+        key = r.value()
+        token = r.value()
+        if not isinstance(token, int) or isinstance(token, bool):
+            raise MalformedFieldError("token_round must be an int")
+        msg = ReadRequest(src, cid, key, token_round=token,
+                          session_ok=bool(sess))
+    elif kind == FRAME_READ_REPLY:
+        src = r.u32("src")
+        cid = r.u32("client_id")
+        served = r.byte("served flag")
+        if served not in (0, 1):
+            raise MalformedFieldError(
+                f"served flag must be 0/1, got {served}")
+        kver = r.u64("key_version")
+        key = r.value()
+        value = r.value()
+        ar = r.value()
+        if not isinstance(ar, int) or isinstance(ar, bool):
+            raise MalformedFieldError("applied_round must be an int")
+        lease_ms = r.value()
+        if not isinstance(lease_ms, float):
+            raise MalformedFieldError("lease_ms must be a float")
+        msg = ReadReply(src, cid, key, value=value, key_version=kver,
+                        applied_round=ar, served=bool(served),
+                        lease_ms=lease_ms)
     elif kind == FRAME_BASELINE:
         t = r.value()
         if not isinstance(t, tuple):

@@ -37,8 +37,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from ..core.messages import (FailNotification, Heartbeat, LogSuffix, Message,
-                             MsgKind, PartitionMarker, SnapshotChunk,
-                             SnapshotRequest)
+                             MsgKind, PartitionMarker, ReadReply, ReadRequest,
+                             SnapshotChunk, SnapshotRequest)
 from .codec import FrameSplitter, decode, encode
 from .errors import WireDecodeError
 
@@ -87,6 +87,12 @@ def corpus_messages() -> List[Tuple[str, object, int]]:
          8),
         ("marker_fwd", PartitionMarker(True, 0, 2, 5), 8),
         ("marker_bwd", PartitionMarker(False, 7, 2, 5), 8),
+        ("read_request", ReadRequest(3, 41, 12, token_round=9,
+                                     session_ok=True), 8),
+        ("read_reply_hit", ReadReply(3, 41, 12, value="v41.2", key_version=7,
+                                     applied_round=11, served=True,
+                                     lease_ms=3.25), 8),
+        ("read_reply_miss", ReadReply(5, 42, "k", served=False), 8),
         ("lcr_m", ("lcr_m", 0, 1, 0, 4), 16),
         ("lcr_ack", ("lcr_ack", 0, 1, 2), 16),
         ("pax_accept", ("pax_accept", 0, 1, 4), 16),

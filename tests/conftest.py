@@ -7,7 +7,7 @@ import pytest
 # process) forces 512 placeholder devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
+import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 

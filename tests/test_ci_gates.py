@@ -179,6 +179,86 @@ def test_check_bench_gates_the_committed_baseline_shape():
     assert r.returncode == 0, r.stderr
 
 
+def test_check_bench_required_cols(tmp_path):
+    """A bench that silently stops emitting a gated column must fail the
+    gate, not slide by — required_cols is baseline-side metadata."""
+    base_rows = [{"name": "lease_row", "us_per_call": 10.0,
+                  "speedup_x": 12.3,
+                  "required_cols": ["speedup_x", "checker"]}]
+    base = _write(tmp_path, "base.json", base_rows)
+    ok = [{"name": "lease_row", "us_per_call": 10.0, "speedup_x": 12.5,
+           "checker": "pass"}]
+    assert _run(_write(tmp_path, "ok.json", ok),
+                "--baseline", base).returncode == 0
+    dropped = [{"name": "lease_row", "us_per_call": 10.0, "checker": "pass"}]
+    r = _run(_write(tmp_path, "dropped.json", dropped), "--baseline", base)
+    assert r.returncode == 1
+    assert "required column 'speedup_x' missing" in r.stderr
+
+
+def test_check_bench_per_row_overrides_beat_global_flags(tmp_path):
+    """Per-row band overrides win over CLI flags in BOTH directions: a row
+    pinning a strict max_speedup_drop fails even under a loose global
+    --max-speedup-drop (how the lease row enforces its 10x floor on slow
+    runners), and a row granting itself a loose band passes under the
+    strict default."""
+    base_rows = [{"name": "pinned", "speedup_x": 12.3,
+                  "max_speedup_drop": 0.18},     # floor ~10.09x
+                 {"name": "loose", "us_per_call": 100.0,
+                  "max_us_regress": 2.0}]
+    base = _write(tmp_path, "base.json", base_rows)
+
+    # pinned row drops below its floor: fails despite a loose global flag
+    fresh = [dict(base_rows[0], speedup_x=9.5), base_rows[1]]
+    r = _run(_write(tmp_path, "f1.json", fresh), "--baseline", base,
+             "--max-speedup-drop", "0.6")
+    assert r.returncode == 1 and "pinned" in r.stderr
+    # just above the pinned floor: passes even under a strict global flag
+    fresh = [dict(base_rows[0], speedup_x=10.5), base_rows[1]]
+    r = _run(_write(tmp_path, "f2.json", fresh), "--baseline", base,
+             "--max-speedup-drop", "0.01")
+    assert r.returncode == 0, r.stderr
+
+    # loose row: +150% us_per_call passes under the strict default band
+    fresh = [base_rows[0], dict(base_rows[1], us_per_call=250.0)]
+    r = _run(_write(tmp_path, "f3.json", fresh), "--baseline", base)
+    assert r.returncode == 0, r.stderr
+    fresh = [base_rows[0], dict(base_rows[1], us_per_call=350.0)]  # > 3x
+    r = _run(_write(tmp_path, "f4.json", fresh), "--baseline", base)
+    assert r.returncode == 1 and "loose" in r.stderr
+
+
+def test_check_bench_update_baseline_carries_metadata(tmp_path):
+    """--update-baseline copies fresh rows over the baseline but carries
+    the baseline-side metadata (required_cols, band overrides) forward onto
+    same-named rows, so a bless never silently disarms a gate."""
+    base_rows = [{"name": "lease_row", "speedup_x": 12.3,
+                  "max_speedup_drop": 0.18, "required_cols": ["speedup_x"]},
+                 {"name": "plain", "us_per_call": 5.0}]
+    base = _write(tmp_path, "base.json", base_rows)
+    fresh_rows = [{"name": "lease_row", "speedup_x": 14.0},
+                  {"name": "plain", "us_per_call": 4.0},
+                  {"name": "brand_new", "us_per_call": 1.0}]
+    fresh = _write(tmp_path, "fresh.json", fresh_rows)
+    r = _run(fresh, "--baseline", base, "--update-baseline")
+    assert r.returncode == 0, r.stderr
+    assert "2 metadata entries carried forward" in r.stdout
+    blessed = {row["name"]: row for row in json.loads(open(base).read())}
+    assert blessed["lease_row"]["speedup_x"] == 14.0
+    assert blessed["lease_row"]["max_speedup_drop"] == 0.18
+    assert blessed["lease_row"]["required_cols"] == ["speedup_x"]
+    assert "max_speedup_drop" not in blessed["plain"]
+    assert "brand_new" in blessed
+    # a fresh row that re-states a metadata key keeps its own value
+    fresh2 = _write(tmp_path, "fresh2.json",
+                    [{"name": "lease_row", "speedup_x": 15.0,
+                      "max_speedup_drop": 0.25}])
+    assert _run(fresh2, "--baseline", base,
+                "--update-baseline").returncode == 0
+    blessed = json.loads(open(base).read())
+    assert blessed[0]["max_speedup_drop"] == 0.25
+
+
 def test_lint_fallback_flags_unused_import(tmp_path):
     pkg = tmp_path / "src"
     pkg.mkdir()
@@ -188,6 +268,36 @@ def test_lint_fallback_flags_unused_import(tmp_path):
     assert r.returncode == 1
     assert "'os' imported but unused" in r.stdout
     (pkg / "bad.py").write_text("import sys\nprint(sys.path)\n")
+    r = subprocess.run([sys.executable, LINT_FALLBACK, str(pkg)],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout
+
+
+def test_lint_fallback_flags_style_rules_and_honours_noqa(tmp_path):
+    """The widened rule set (E, I) in the stdlib fallback: long lines,
+    ambiguous names, lambda assignment, None comparison, unsorted imports —
+    and a targeted ``# noqa: CODE`` silences exactly that code."""
+    pkg = tmp_path / "src"
+    pkg.mkdir()
+    (pkg / "bad.py").write_text(
+        "import sys\n"
+        "import os\n"                               # I001: os after sys
+        "x = 'y' * 2  # " + "pad" * 40 + "\n"       # E501
+        "l = len(sys.path)\n"                       # E741
+        "f = lambda: os.sep\n"                      # E731
+        "ok = f() == None\n"                        # E711
+        "print(x, l, ok)\n")
+    r = subprocess.run([sys.executable, LINT_FALLBACK, str(pkg)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1
+    for code in ("I001", "E501", "E741", "E731", "E711"):
+        assert code in r.stdout, (code, r.stdout)
+    (pkg / "bad.py").write_text(
+        "import os\n"
+        "import sys\n"
+        "x = 'y' * 2  # " + "pad" * 40 + "  # noqa: E501\n"
+        "l = len(sys.path)  # noqa: E741\n"
+        "print(x, l, os.sep)\n")
     r = subprocess.run([sys.executable, LINT_FALLBACK, str(pkg)],
                        capture_output=True, text=True)
     assert r.returncode == 0, r.stdout

@@ -1,7 +1,7 @@
 """Gradient compression: codecs, error feedback, coordinator integration."""
 import numpy as np
 
-from repro.configs import get_config, ShapeConfig
+from repro.configs import ShapeConfig, get_config
 from repro.coordinator.runtime import ElasticTrainer
 from repro.train.compression import (CompressionConfig, GradCompressor,
                                      compressed_bytes, decompress)

@@ -3,7 +3,7 @@ checkpoint commit, straggler policy."""
 import tempfile
 
 
-from repro.configs import get_config, ShapeConfig
+from repro.configs import ShapeConfig, get_config
 from repro.coordinator.runtime import ElasticTrainer
 
 CFG = get_config("qwen3-1.7b", reduced=True).replace(dtype="float32",

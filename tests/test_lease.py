@@ -1,0 +1,427 @@
+"""Round-stability lease safety: grants, revocation, serving, auditing.
+
+Acceptance surface:
+
+* config/sizing guards: a lease may never outlive the failure-detection
+  window (``duration + safety_margin < hb_timeout``), and the net
+  transport refuses heartbeat timeouts a reconnecting live peer could
+  trip;
+* on a healthy cluster the lease is granted, renewed by clean round
+  progress, and serves linearizable reads locally (with read-your-writes
+  tokens honoured);
+* any instability signal — a crash (FD suspicion / failure
+  notification), an eon flip — revokes immediately, reads fall back to
+  the log, and the lease re-grants once the machinery quiesces;
+* every lease-served read is auditable: the trace checker's
+  ``stale_lease_read`` rule rejects a read that returns a key version
+  older than an acked write (pinned by a corrupted golden fixture), and
+  seeded chaos runs on both the schedule-randomized ``Cluster`` and the
+  timed ``Simulation`` must produce traces it accepts.
+
+The wide chaos sweeps are slow-marked; the nightly workflow owns them
+(``scripts/ci.sh nightly``).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import Observability
+from repro.obs.check import TraceInvariantError, check_trace
+from repro.obs.trace import load_jsonl
+from repro.runtime import LeaseConfig
+from repro.smr import ClientRequest, build_smr_cluster
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # container lacks it
+    HAVE_HYPOTHESIS = False
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURE = os.path.join(REPO, "tests", "golden", "lease_violation.jsonl")
+
+
+# --------------------------------------------------------------- helpers
+
+def _put(svc, cid, seq, key, value):
+    assert svc.submit(ClientRequest(cid, seq, {"op": "put", "key": key,
+                                               "value": value}))
+
+
+def _covered(c, svcs, sub, cid, nacks):
+    """The submitting service ``sub`` has released ``nacks`` acks and every
+    live replica's applied state covers the client's last-acked round, so a
+    read-your-writes token is honoured anywhere."""
+    def pred():
+        if svcs[sub].acked < nacks:
+            return False
+        tok = svcs[sub].acked_round.get(cid, -1)
+        return all(svcs[s].applied_round >= tok for s in c.alive()
+                   if s in svcs)
+    return pred
+
+
+def _lease_cluster(n=6, d=2, *, seed=1, duration=2000.0, margin=50.0,
+                   obs=None):
+    c, svcs = build_smr_cluster(n, d, seed=seed, batch_max=8,
+                                lease=LeaseConfig(duration, margin), obs=obs)
+    c.start()
+    return c, svcs
+
+
+# ---------------------------------------------------------------- config
+
+def test_lease_config_validation():
+    with pytest.raises(ValueError):
+        LeaseConfig(0)
+    with pytest.raises(ValueError):
+        LeaseConfig(-1.0)
+    with pytest.raises(ValueError):
+        LeaseConfig(1.0, safety_margin=-0.1)
+    with pytest.raises(ValueError):
+        LeaseConfig(1.0, safety_margin=1.0)     # margin must be < duration
+    cfg = LeaseConfig(1.0, safety_margin=0.25)
+    assert cfg.duration == 1.0 and cfg.safety_margin == 0.25
+
+
+def test_enable_lease_rejects_non_config_and_fd_overhang():
+    from tests.test_runtime import build_rt
+    rt = build_rt()
+    with pytest.raises(TypeError):
+        rt.enable_lease({"duration": 1.0}, lambda: 0.0)
+    # with the heartbeat FD armed, duration + margin must stay below
+    # hb_timeout: a partitioned holder may never outlive detection
+    rt = build_rt(hb_interval=0.05, hb_timeout=0.3)
+    with pytest.raises(ValueError):
+        rt.enable_lease(LeaseConfig(0.4, 0.01), lambda: 0.0)
+    with pytest.raises(ValueError):
+        rt.enable_lease(LeaseConfig(0.25, 0.05), lambda: 0.0)  # == timeout
+    rt.enable_lease(LeaseConfig(0.2, 0.05), lambda: 0.0)
+    assert rt.lease is not None
+
+
+def test_net_transport_refuses_undetectable_hb_timeout():
+    from repro.net.transport import (HANDSHAKE_TIMEOUT, RECONNECT_DELAY,
+                                     NetNode)
+    from tests.test_runtime import build_rt
+    floor = HANDSHAKE_TIMEOUT + RECONNECT_DELAY
+    rt = build_rt(hb_interval=0.05, hb_timeout=floor)   # == floor: refused
+    with pytest.raises(ValueError):
+        NetNode(rt, bind="unused.sock", peers={})
+    rt = build_rt(hb_interval=0.05, hb_timeout=floor + 0.5)
+    NetNode(rt, bind="unused.sock", peers={})           # constructs fine
+
+
+# --------------------------------------------------- grant / serve / token
+
+def test_cluster_grants_and_serves_linearizable_read():
+    c, svcs = _lease_cluster()
+    _put(svcs[0], 9, 0, "k", 41)
+    _put(svcs[0], 9, 1, "k", 42)
+    assert c.run_until(_covered(c, svcs, 0, 9, 2), 60_000)
+
+    # continuous clean rounds have granted (and renewed) on every node
+    holders = [s for s, rt in c.runtimes.items() if rt.lease.held]
+    assert holders, "no node holds a lease on an idle healthy cluster"
+    sid = holders[0]
+    rt, svc = c.runtimes[sid], svcs[sid]
+    assert rt.lease.grants >= 1 and rt.lease.renewals >= 1
+    assert rt.lease.revokes == 0
+
+    res = rt.read("k", client_id=9, token_round=svc.session_token(9))
+    assert res is not None and res.value == 42
+    assert res.key_version >= 2            # two puts bumped the version
+    assert rt.lease.served == 1
+
+    # an uncovered read-your-writes token forces the log fallback
+    ahead = svc.applied_round + 10
+    assert rt.read("k", client_id=9, token_round=ahead) is None
+    assert rt.lease.fallbacks == 1
+
+
+def test_read_without_lease_falls_back_unless_session_ok():
+    c, svcs = build_smr_cluster(5, 2, seed=3, batch_max=8)   # no lease
+    c.start()
+    _put(svcs[0], 4, 0, "x", "v")
+    assert c.run_until(_covered(c, svcs, 0, 4, 1), 60_000)
+    rt = c.runtimes[2]
+    assert rt.lease is None
+    assert rt.read("x", client_id=4) is None         # linearizable: refuse
+    res = rt.read("x", client_id=4, session_ok=True,
+                  token_round=svcs[2].session_token(4))
+    assert res is not None and res.value == "v"      # read-your-writes only
+
+
+# ----------------------------------------------------------- revocation
+
+def test_crash_revokes_every_survivor_then_regrants():
+    c, svcs = _lease_cluster(n=6, d=2, seed=7)
+    _put(svcs[0], 9, 0, "k", 1)
+    assert c.run_until(_covered(c, svcs, 0, 9, 1), 60_000)
+    assert c.run_until(
+        lambda: all(c.runtimes[s].lease.held for s in c.alive()), 60_000)
+
+    c.crash(4)
+    # the FD suspicion / failure notification must reach every survivor
+    # and drop its lease (a revocation is counted even if a new lease has
+    # already been re-granted by post-recovery round progress)
+    assert c.run_until(
+        lambda: all(c.runtimes[s].lease.revokes >= 1 for s in c.alive()),
+        200_000)
+    reasons = set()
+    for s in c.alive():
+        reasons |= set(c.runtimes[s].lease.revoke_reasons)
+    assert reasons & {"peer_down", "failure_notification", "expired"}, reasons
+
+    # liveness: once recovery completes, clean rounds re-grant
+    assert c.run_until(
+        lambda: all(c.runtimes[s].lease.held for s in c.alive()), 200_000)
+    sid = c.alive()[0]
+    res = c.runtimes[sid].read("k", client_id=9,
+                               token_round=svcs[sid].session_token(9))
+    assert res is not None and res.value == 1
+
+
+def test_eon_flip_revokes_leases():
+    from repro.smr import AdminClient, add_smr_server
+    c, svcs = _lease_cluster(n=5, d=2, seed=11)
+    _put(svcs[0], 9, 0, "k", 1)
+    assert c.run_until(_covered(c, svcs, 0, 9, 1), 60_000)
+    assert c.run_until(
+        lambda: all(c.runtimes[s].lease.held for s in c.alive()), 60_000)
+    base_eon = c.servers[0].eon
+
+    admin = AdminClient()
+    svcs[5] = add_smr_server(c, svcs, 5, seeds=[0, 1], d=2)
+    assert admin.add(svcs[2], 5)
+    assert c.run_until(
+        lambda: all(c.servers[s].eon > base_eon for s in c.alive()), 300_000)
+
+    revoked = [s for s in c.alive() if s != 5
+               and c.runtimes[s].lease.revokes >= 1]
+    assert revoked, "an eon flip must revoke the incumbents' leases"
+    reasons = set()
+    for s in revoked:
+        reasons |= set(c.runtimes[s].lease.revoke_reasons)
+    assert any(r == "eon_flip" or r.startswith("transition_") or
+               r in ("gr_update", "expired") for r in reasons), reasons
+
+
+# -------------------------------------------------------- trace auditing
+
+def test_checker_counts_and_accepts_clean_lease_trace():
+    events = [
+        {"t": 0.0, "ev": "lease_grant", "sid": 0, "round": 3, "eon": 0,
+         "expiry": 0.010},
+        {"t": 0.001, "ev": "write_ack", "sid": 0, "cid": 7, "seq": 0,
+         "key": "x", "version": 1, "round": 4},
+        {"t": 0.002, "ev": "read_lease", "sid": 0, "cid": 9, "key": "x",
+         "kver": 1, "round": 4, "token": -1},
+        {"t": 0.003, "ev": "lease_revoke", "sid": 0, "reason": "peer_down",
+         "round": 5, "eon": 0},
+    ]
+    report = check_trace(events)
+    assert report.lease_reads == 1 and report.write_acks == 1
+    assert report.lease_grants == 1 and report.lease_revokes == 1
+    assert "lease reads audited" in str(report)
+
+
+def test_checker_rejects_stale_lease_read():
+    events = [
+        {"t": 0.0, "ev": "write_ack", "sid": 1, "cid": 7, "seq": 0,
+         "key": "x", "version": 3, "round": 5},
+        {"t": 0.001, "ev": "read_lease", "sid": 0, "cid": 9, "key": "x",
+         "kver": 2, "round": 4, "token": -1},
+    ]
+    with pytest.raises(TraceInvariantError) as ei:
+        check_trace(events)
+    assert ei.value.code == "stale_lease_read"
+
+
+def test_checker_delete_resets_version_floor():
+    events = [
+        {"t": 0.0, "ev": "write_ack", "sid": 0, "cid": 7, "seq": 0,
+         "key": "x", "version": 3, "round": 5},
+        {"t": 0.001, "ev": "write_ack", "sid": 0, "cid": 7, "seq": 1,
+         "key": "x", "version": 0, "round": 7},      # delete
+        {"t": 0.002, "ev": "read_lease", "sid": 2, "cid": 9, "key": "x",
+         "kver": 0, "round": 7, "token": -1},
+    ]
+    report = check_trace(events)                     # the miss is current
+    assert report.lease_reads == 1 and report.write_acks == 2
+
+
+def test_golden_lease_violation_fixture_is_rejected():
+    events = load_jsonl(FIXTURE)
+    with pytest.raises(TraceInvariantError) as ei:
+        check_trace(events)
+    assert ei.value.code == "stale_lease_read"
+    # the CLI gate (scripts/ci.sh obs-smoke / nightly) must refuse it too
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "trace_report.py"),
+         FIXTURE, "--check"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode != 0
+    assert "stale_lease_read" in proc.stdout + proc.stderr
+
+
+# ------------------------------------------------------------ chaos audit
+
+def _cluster_chaos_audit(seed):
+    """One schedule-randomized run: writes + reads racing a crash; the
+    full trace must pass the checker's ``stale_lease_read`` rule."""
+    obs = Observability(trace=True)
+    c, svcs = _lease_cluster(n=6, d=2, seed=seed, duration=400.0,
+                             margin=10.0, obs=obs)
+    cid, seq = 9, 0
+    for batch in range(4):
+        for _ in range(3):
+            _put(svcs[0], cid, seq, f"k{seq % 3}", seq)
+            seq += 1
+        assert c.run_until(_covered(c, svcs, 0, cid, seq), 120_000)
+        for s in c.alive():
+            c.runtimes[s].read(f"k{seq % 3}", client_id=cid,
+                               token_round=svcs[s].session_token(cid))
+        if batch == 1:
+            c.crash(5)
+    report = check_trace(obs.recorder.events)
+    served = sum(c.runtimes[s].lease.served for s in c.alive())
+    return report, served
+
+
+def test_cluster_chaos_lease_audit_fast():
+    hits = 0
+    for seed in (2, 13):
+        report, served = _cluster_chaos_audit(seed)
+        assert report.write_acks > 0
+        hits += served
+    assert hits > 0, "no chaos run ever lease-served a read"
+
+
+def _sim_chaos_audit(seed):
+    """Timed-simulator twin (simulated seconds): crash + AddServer eon
+    flip racing lease expiry, every read linearizable."""
+    from repro.sim import build_smr_simulation, schedule_membership_change
+    from repro.smr import WorkloadConfig
+    n, rpc = 6, 30
+    cfg = WorkloadConfig(num_clients=2 * n, read_ratio=0.9,
+                         distribution="zipfian", arrival="closed", seed=seed,
+                         linearizable_reads=True)
+    obs = Observability(trace=True)
+    sim, smr, services = build_smr_simulation(
+        "allconcur+", n, workload=cfg, requests_per_client=rpc, batch_max=16,
+        network="sdc", obs=obs, lease=LeaseConfig(0.002, 1e-4))
+    schedule_membership_change(sim, services, 0.002, add=n, via=1)
+    sim.schedule_crash(1, 0.0005, 1)
+    alive = [c for c in sim.workload.clients if sim.client_home[c.client_id] != 1]
+    sim.start()
+    sim.run(until=lambda: all(c.acked >= rpc for c in alive), max_time=8.0)
+    report = check_trace(obs.recorder.events)
+    revokes = sum(rt.lease.revokes for rt in sim.runtimes.values()
+                  if rt.lease is not None)
+    return report, revokes
+
+
+def test_sim_chaos_lease_audit_fast():
+    report, revokes = _sim_chaos_audit(0)
+    assert report.lease_reads > 0 and report.write_acks > 0
+    assert revokes >= 1, "crash + eon flip never revoked a lease"
+
+
+@pytest.mark.slow
+def test_sim_chaos_lease_audit_sweep():
+    audited = 0
+    for seed in range(1, 7):
+        report, _revokes = _sim_chaos_audit(seed)
+        audited += report.lease_reads
+    assert audited > 0
+
+
+@pytest.mark.slow
+def test_cluster_chaos_lease_audit_sweep():
+    for seed in range(20, 28):
+        report, _served = _cluster_chaos_audit(seed)
+        assert report.write_acks > 0
+
+
+# -------------------------------------------------- session-token property
+
+def _token_history(seed):
+    c, svcs = _lease_cluster(n=5, d=2, seed=seed, duration=800.0, margin=5.0)
+    cid = 3
+    tokens = [svcs[0].session_token(cid)]
+    for seq in range(6):
+        _put(svcs[0], cid, seq, "k", seq)
+        assert c.run_until(lambda: svcs[0].acked >= seq + 1, 120_000)
+        tokens.append(svcs[0].session_token(cid))
+    return tokens
+
+
+def test_session_token_monotone_seeded():
+    tokens = _token_history(5)
+    assert tokens[0] == -1                      # fresh session
+    assert tokens == sorted(tokens)             # read-your-writes only grows
+    assert tokens[-1] >= 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_session_token_monotone_property(seed):
+        tokens = _token_history(seed)
+        assert tokens == sorted(tokens)
+
+
+# ------------------------------------------------------------------ wire
+
+def test_read_frames_roundtrip_wire_codec():
+    from repro.core.messages import ReadReply, ReadRequest
+    from repro.wire.codec import decode, encode
+    rq = ReadRequest(3, 17, "k", token_round=42, session_ok=True)
+    assert decode(encode(rq)) == rq
+    rp = ReadReply(3, 17, "k", value=9, key_version=4, applied_round=12,
+                   served=True, lease_ms=1.5)
+    assert decode(encode(rp)) == rp
+    # defaults survive too (fresh session, fallback-escalate reply)
+    assert decode(encode(ReadRequest(0, 1, 2))) == ReadRequest(0, 1, 2)
+    assert decode(encode(ReadReply(0, 1, 2))) == ReadReply(0, 1, 2)
+
+
+# ---------------------------------------------------------- net (slow)
+
+@pytest.mark.slow
+def test_net_lease_reads_over_real_sockets(tmp_path):
+    """3-process UDS cluster: all reads lease-served on an idle cluster,
+    and a crash revokes the survivors' leases (status counters)."""
+    import asyncio
+
+    from repro.net.harness import Controller
+
+    async def run():
+        ctl = Controller(str(tmp_path), [0, 1, 2], transport="uds", d=2,
+                         chaos=None, hb_timeout=2.0,
+                         lease_duration=0.4, lease_margin=0.05)
+        try:
+            members = [0, 1, 2]
+            await asyncio.gather(*(ctl.spawn(s, members) for s in members))
+            for seq in range(8):
+                assert await ctl.submit(0, 7, seq,
+                                        {"op": "incr", "key": seq % 2})
+            await ctl.wait_acks(0, [(7, s) for s in range(8)])
+            served = 0
+            for i in range(10):
+                rep = await ctl.read(1, 7, i % 2)
+                served += bool(rep["served"])
+            st = await ctl.status(1)
+            return served, st["lease"]
+        finally:
+            await ctl.stop_all()
+
+    served, lease = asyncio.run(run())
+    assert served == 10, f"only {served}/10 reads lease-served while idle"
+    assert lease["grants"] >= 1 and lease["held"]

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ALL_ARCHS, get_config, ShapeConfig
+from repro.configs import ALL_ARCHS, ShapeConfig, get_config
 from repro.models import (decode_state_specs, decode_step, forward,
                           init_params, model_specs)
 from repro.models.params import init_params as init_tree

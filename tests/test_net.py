@@ -137,7 +137,7 @@ def _merged_trace_checks(shard_data, tmpdir):
         env={**os.environ,
              "PYTHONPATH": os.path.join(REPO, "src")})
     assert r.returncode == 0, f"trace_report --check failed:\n{r.stdout}\n{r.stderr}"
-    ts = [json.loads(l)["t"] for l in open(merged)]
+    ts = [json.loads(line)["t"] for line in open(merged)]
     assert ts == sorted(ts), "merged trace must be time-ordered"
 
 

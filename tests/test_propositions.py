@@ -9,9 +9,9 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
-from hypothesis import HealthCheck, given, settings, strategies as st
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
-from repro.core import Cluster
+from repro.core import Cluster  # noqa: E402
 
 
 def observe_states(c: Cluster, steps: int, crash_at=None, victim=None):

@@ -4,9 +4,9 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
-from hypothesis import HealthCheck, given, settings, strategies as st
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
-from repro.core import Cluster, Mode
+from repro.core import Cluster, Mode  # noqa: E402
 
 
 def check_invariants(c: Cluster):

@@ -2,8 +2,8 @@
 import numpy as np
 
 from repro.configs import SHAPES, get_config
-from repro.roofline.analysis import (RooflineReport, parse_collectives,
-                                     wire_bytes, model_flops_for)
+from repro.roofline.analysis import (RooflineReport, model_flops_for,
+                                     parse_collectives, wire_bytes)
 from repro.roofline.analytic import cost_model
 
 

@@ -47,7 +47,7 @@ def test_param_pspecs_cover_all_archs():
         specs = tree_pspecs(logical, train_rules(False))
         leaves = jax.tree_util.tree_leaves(
             specs, is_leaf=lambda v: isinstance(v, P))
-        assert leaves and all(isinstance(l, P) for l in leaves)
+        assert leaves and all(isinstance(leaf, P) for leaf in leaves)
 
 
 def test_expert_weights_ep_sharded():

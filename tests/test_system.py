@@ -6,7 +6,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, ShapeConfig
+from repro.configs import ShapeConfig, get_config
 from repro.coordinator.runtime import ElasticTrainer
 from repro.models import (decode_state_specs, decode_step, forward,
                           init_params, model_specs)

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, ShapeConfig
+from repro.configs import ShapeConfig, get_config
 from repro.models import init_params, model_specs
 from repro.models.params import init_params as init_tree
 from repro.train import (CheckpointManager, DataPipeline, OptConfig, lr_at,

@@ -142,7 +142,9 @@ def test_rounds_are_monotone_and_batched_equals_single():
     assert C.shape == (6, 8)
     assert (np.diff(C, axis=0) > 0).all()
     # stacking the same config twice gives identical per-lane results
-    stack = lambda a: np.stack([a, a])
+    def stack(a):
+        return np.stack([a, a])
+
     rt2 = vec_engine.run_unreliable(stack(t.parent), stack(t.send_off),
                                     stack(t.occ), stack(t.prop), rounds=6)
     assert rt2.completion.shape == (2, 6, 8)

@@ -22,7 +22,7 @@ from repro.obs import Observability
 from repro.obs.critpath import critical_paths
 from repro.obs.work import work_from_harness
 from repro.sim import build_smr_simulation, schedule_membership_change
-from repro.smr import WorkloadConfig
+from repro.smr import WorkloadConfig, nearest_rank
 
 from .common import emit
 
@@ -165,10 +165,8 @@ def main(full: bool = False) -> None:
             # whole-run distribution
             w0, w1 = t_flip - 0.0005, t_flip + 0.002
             win = smr.latencies_in(w0, w1)
-            win.sort()
-            flip_p50 = win[len(win) // 2] if win else float("nan")
-            flip_p99 = (win[min(int(0.99 * len(win)), len(win) - 1)]
-                        if win else float("nan"))
+            flip_p50 = nearest_rank(win, 0.50)
+            flip_p99 = nearest_rank(win, 0.99)
             gap = smr.max_ack_gap(w0, w1)
             emit(f"smr_{algo}_eonflip_n{n}", smr.p50() * 1e6,
                  f"req_s={smr.throughput():.0f};p50_ms={smr.p50()*1e3:.3f};"

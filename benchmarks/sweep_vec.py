@@ -30,6 +30,85 @@ def _run_event(cfg, window=(3, 10)):
     return met.median_latency(), met.throughput(*window)
 
 
+def _steady_round(times) -> float:
+    """Steady-state round period of a failure-free timeline (server 0)."""
+    import numpy as np
+    e = np.asarray(times.start)
+    return float(e[-1, 0] - e[-2, 0])
+
+
+def _smr_vec_rows(full: bool) -> None:
+    """Vectorized SMR client rows: >=1e5 open-loop clients per deployment
+    (1e6 under --full) replayed against SMR-sized round timelines, plus a
+    Monte-Carlo crash-schedule variant.  Simulated time is deterministic, so
+    the p50-based us_per_call sits in check_bench's strict band."""
+    import time as _time
+
+    import numpy as np
+
+    from repro.vecsim.clients import (arrival_times, client_latencies,
+                                      mc_client_latencies, server_streams,
+                                      smr_round_times)
+    from repro.vecsim.failures import monte_carlo_times
+
+    n, batch, util, mode = 8, 64, 0.6, "allconcur+"
+    clients = 1_000_000 if full else 100_000
+    q = 2                                    # requests per client
+    cps = clients // n
+
+    t0 = _time.time()
+    du = _steady_round(smr_round_times(mode, n, reqs_per_round=batch,
+                                       rounds=16))
+    # DUAL payloads ride two rounds (fresh + duplicate), so a server's
+    # sustained capacity is batch/(2 du) req/s; run at `util` of it, with
+    # enough rounds to drain the whole backlog plus slack
+    cap = batch / (2 * du)
+    rate = util * cap / cps
+    # horizon: the per-client arrival span is Gamma(q, 1/rate) with mean
+    # `base` rounds — cover 6x the mean so the unserved (censored) tail of
+    # late arrivals is negligible (~1e-4 for q=2)
+    base = int(cps * q / (util * batch / 2))
+    rounds = 6 * base + 64
+    times = smr_round_times(mode, n, reqs_per_round=batch, rounds=rounds)
+    s = server_streams(arrival_times(0, clients, q, rate), n)
+    res = client_latencies(np.asarray(times.start).T,
+                           np.asarray(times.completion).T, s,
+                           mode=mode, batch_max=batch)
+    wall = _time.time() - t0
+    p = res.percentiles
+    emit("smr_vec_latency_n8", p[0.5] * 1e6,
+         f"p50_ms={p[0.5]*1e3:.4f};p99_ms={p[0.99]*1e3:.4f};"
+         f"p999_ms={p[0.999]*1e3:.4f};clients_simulated={clients};"
+         f"served={res.served};rounds={rounds};wall_s={wall:.1f}")
+
+    # ---- Monte-Carlo crash schedules: same population, one request each,
+    # replayed against spliced (crash + recovery) timelines
+    t0 = _time.time()
+    dr_times = smr_round_times("allconcur", n, reqs_per_round=batch,
+                               rounds=16)
+    dr = float(np.asarray(dr_times.completion)[-1, 0]
+               - np.asarray(dr_times.start)[-1, 0])
+    schedules = 256 if full else 64
+    mc_q = 1
+    mc_rate = util * cap / cps
+    mc_rounds = 8 * int(cps * mc_q / (util * batch / 2)) + 64
+    # ~2 crashes per schedule horizon: the pooled tail (p999) is shaped by
+    # detection + recovery splices while p50 stays near failure-free
+    mct = monte_carlo_times(du, dr, n=n, batch=batch,
+                            mtbf=mc_rounds * du / 2,
+                            rounds=mc_rounds, n_schedules=schedules, seed=7)
+    s_mc = server_streams(arrival_times(1, clients, mc_q, mc_rate), n)
+    mc = mc_client_latencies(mct.entry, mct.deliver, s_mc, mode=mode,
+                             batch_max=batch)
+    wall = _time.time() - t0
+    mp = mc["percentiles"]
+    emit("smr_vec_mc_crash_n8", mp[0.5] * 1e6,
+         f"p50_ms={mp[0.5]*1e3:.4f};p99_ms={mp[0.99]*1e3:.4f};"
+         f"p999_ms={mp[0.999]*1e3:.4f};clients_simulated={clients};"
+         f"served={mc['served']};schedules={schedules};"
+         f"rounds={mc_rounds};wall_s={wall:.1f}")
+
+
 def main(full: bool = False) -> None:
     cfgs = _grid(full)
     window = (3, 10)
@@ -83,6 +162,8 @@ def main(full: bool = False) -> None:
             emit(f"sweep_vec_{row['algo']}_n16", row["median_latency_us"],
                  f"throughput_txn_s={row['throughput_txn_s']:.0f};"
                  f"round_period_us={row['round_period_us']:.3f}")
+
+    _smr_vec_rows(full)
 
 
 if __name__ == "__main__":

@@ -59,11 +59,12 @@ stage_tier1() {
 }
 
 stage_kernels_smoke() {
-  echo "== kernels smoke: interpret-mode rmsnorm + tropical_matmul =="
+  echo "== kernels smoke: interpret-mode rmsnorm + tropical_matmul + segred =="
   python - <<'PY'
 import numpy as np
 import jax, jax.numpy as jnp
-from repro.kernels import rmsnorm, tropical_matmul
+from repro.kernels import (rmsnorm, segment_counts, segment_counts_reference,
+                           tropical_matmul)
 from repro.kernels.ref import rmsnorm_ref
 
 x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
@@ -74,7 +75,34 @@ a = jax.random.uniform(jax.random.PRNGKey(2), (48, 96), maxval=10.0)
 b = jax.random.uniform(jax.random.PRNGKey(3), (96, 33), maxval=10.0)
 ref = jnp.min(a[:, :, None] + b[None], axis=1)
 assert (tropical_matmul(a, b, interpret=True) == ref).all()
+s = jax.random.uniform(jax.random.PRNGKey(4), (4, 300))
+e = jnp.sort(jax.random.uniform(jax.random.PRNGKey(5), (4, 77)), axis=-1)
+assert (segment_counts(s, e, interpret=True)
+        == segment_counts_reference(s, e)).all()
 print("kernels smoke OK")
+PY
+  echo "== vec smoke: small smr_vec client grid vs event sim =="
+  python - <<'PY'
+import numpy as np
+from repro.vecsim.clients import (arrival_times, client_latencies,
+                                  closed_loop_latencies, server_streams,
+                                  smr_round_times)
+
+# closed-loop lockstep across all three modes: DUAL must ack two rounds
+# after abcast, the others one; every latency positive and finite
+for mode in ("allconcur+", "allconcur", "allgather"):
+    times = smr_round_times(mode, 8, reqs_per_round=2, rounds=14)
+    lat = closed_loop_latencies(times, mode=mode, batch_max=2,
+                                clients_per_server=2)
+    assert np.isfinite(lat).all() and (lat > 0).all(), mode
+    # open loop, jnp vs pallas engines bit-for-bit
+    s = server_streams(arrival_times(0, 16, 4, rate=4000.0), 8)
+    e = np.asarray(times.start).T
+    c = np.asarray(times.completion).T
+    rv = client_latencies(e, c, s, mode=mode, batch_max=2, engine="vec")
+    rp = client_latencies(e, c, s, mode=mode, batch_max=2, engine="pallas")
+    assert (rv.ack == rp.ack).all() and rv.percentiles == rp.percentiles, mode
+print("vec smoke OK")
 PY
 }
 

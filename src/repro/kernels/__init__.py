@@ -1,7 +1,8 @@
+from .clients_segred import segment_counts, segment_counts_reference
 from .ops import decode_attention, flash_attention, mamba_scan, rmsnorm
 from .tropical import (tropical_closure, tropical_matmul,
                        tropical_matmul_threshold, tropical_relax)
 
 __all__ = ["decode_attention", "flash_attention", "mamba_scan", "rmsnorm",
-           "tropical_closure", "tropical_matmul",
-           "tropical_matmul_threshold", "tropical_relax"]
+           "segment_counts", "segment_counts_reference", "tropical_closure",
+           "tropical_matmul", "tropical_matmul_threshold", "tropical_relax"]

@@ -1,0 +1,123 @@
+"""Blocked segment-reduction (arrival counting) as a Pallas kernel.
+
+Companion to :mod:`repro.kernels.tropical`: where the tropical kernel powers
+the *server-side* round recurrence, this one powers the *client-side* batch
+formation in ``repro.vecsim.clients``.  The quantity it computes is the
+arrival-count prefix
+
+    counts[..., k] = #{ j : s[..., j] <= edges[..., k] }
+
+i.e. for every round-entry edge ``edges[k]`` of a server's timeline, how many
+of that server's client submit times ``s[j]`` have arrived by then.  Batch
+formation then reduces to a tiny scan over ``counts`` (see
+``vecsim/README.md``); this kernel is the only part that touches the
+million-client axis.
+
+Tiling: the grid is purely parallel over (batch, K-blocks); the client axis
+is staged into VMEM once per tile and reduced with a ``fori_loop`` over
+``block_m`` slices, bounding the materialized ``(block_m, block_k)`` boolean
+intermediate.  A purely parallel grid keeps the kernel ``vmap``-safe (the
+sweep's per-config ``vmap`` adds one more grid axis).
+
+Exactness: the reduction is an integer sum of exact float comparisons, so
+the kernel is *bit-for-bit* equal to the jnp reference
+(:func:`segment_counts_reference`, a searchsorted over the sorted submit
+times) for finite ``edges``.  Submit times may include ``+inf`` entries
+(padding for ragged client populations) — they compare False against every
+finite edge and contribute nothing.  ``edges`` must be finite and NaN-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .compat import CompilerParams
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _segred_kernel(s_ref, e_ref, o_ref, *, block_m: int, nm: int):
+    s = s_ref[...]                                 # (1, Mp)
+    e = e_ref[...]                                 # (1, bk)
+
+    def body(mi, acc):
+        chunk = jax.lax.dynamic_slice_in_dim(s, mi * block_m, block_m, axis=1)
+        hit = (chunk[0][:, None] <= e[0][None, :])   # (bm, bk) bool
+        return acc + jnp.sum(hit, axis=0, dtype=jnp.int32)
+
+    acc0 = jnp.zeros((e.shape[1],), jnp.int32)
+    o_ref[...] = jax.lax.fori_loop(0, nm, body, acc0)[None, :]
+
+
+def segment_counts(s, edges, *, block_k: int = 128, block_m: int = 1024,
+                   interpret: bool | None = None):
+    """``counts[..., k] = #{j : s[..., j] <= edges[..., k]}`` as int32.
+
+    ``s``: (..., M) submit times, any order, ``+inf`` allowed as padding;
+    ``edges``: (..., K) finite edge times, leading dims matching ``s``.
+    Bit-for-bit equal to :func:`segment_counts_reference`.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    s = jnp.asarray(s)
+    edges = jnp.asarray(edges)
+    if s.ndim < 1 or edges.ndim < 1 or s.shape[:-1] != edges.shape[:-1]:
+        raise ValueError(f"batch mismatch: {s.shape} x {edges.shape}")
+    dtype = jnp.promote_types(s.dtype, edges.dtype)
+    if not jnp.issubdtype(dtype, jnp.floating):
+        dtype = jnp.float32
+    batch_shape = s.shape[:-1]
+    m, k = s.shape[-1], edges.shape[-1]
+    B = 1
+    for d in batch_shape:
+        B *= d
+
+    bm, bk = min(block_m, max(m, 1)), min(block_k, max(k, 1))
+    pm, pk = (-m) % bm, (-k) % bk
+    sf = jnp.pad(s.astype(dtype).reshape(B, m), ((0, 0), (0, pm)),
+                 constant_values=jnp.inf)
+    # edge padding value is arbitrary (the padded columns are sliced off);
+    # +inf would count every submit, so pad with -inf to keep the padded
+    # lanes cheap and obviously out-of-band
+    ef = jnp.pad(edges.astype(dtype).reshape(B, k), ((0, 0), (0, pk)),
+                 constant_values=-jnp.inf)
+    mp, kp = m + pm, k + pk
+
+    grid = (B, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_segred_kernel, block_m=bm, nm=mp // bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, mp), lambda bi, ki: (bi, 0)),
+            pl.BlockSpec((1, bk), lambda bi, ki: (bi, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, bk), lambda bi, ki: (bi, ki)),
+        out_shape=jax.ShapeDtypeStruct((B, kp), jnp.int32),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",) * 2),
+    )(sf, ef)
+    return out[:, :k].reshape(batch_shape + (k,))
+
+
+def segment_counts_reference(s, edges):
+    """jnp reference: searchsorted of ``edges`` over the sorted submit times.
+
+    Mathematically identical to :func:`segment_counts` (both are exact
+    integer counts of exact float comparisons); used as the bitexactness
+    oracle in tests and as the ``engine="vec"`` path in vecsim.clients.
+    """
+    s = jnp.asarray(s)
+    edges = jnp.asarray(edges)
+    s_sorted = jnp.sort(s, axis=-1)
+    if s.ndim == 1:
+        return jnp.searchsorted(s_sorted, edges, side="right").astype(jnp.int32)
+    flat_s = s_sorted.reshape((-1, s.shape[-1]))
+    flat_e = edges.reshape((-1, edges.shape[-1]))
+    counts = jax.vmap(
+        lambda a, b: jnp.searchsorted(a, b, side="right"))(flat_s, flat_e)
+    return counts.astype(jnp.int32).reshape(edges.shape)

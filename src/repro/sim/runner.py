@@ -447,11 +447,8 @@ class SMRMetrics:
 
     @staticmethod
     def _pct(xs: List[float], p: float) -> float:
-        if not xs:
-            return float("nan")
-        ys = sorted(xs)
-        idx = min(int(p * len(ys)), len(ys) - 1)
-        return ys[idx]
+        from ..smr.percentiles import nearest_rank
+        return nearest_rank(xs, p)
 
     def p50(self) -> float:
         return self._pct(self.latencies, 0.50)

@@ -29,6 +29,7 @@ replica reports an identical digest.
 from .log import DeliveredRoundLog, LogEntry
 from .membership import (ADMIN_CLIENT_ID, AdminClient, MembershipManager,
                          add_smr_server)
+from .percentiles import nearest_rank, nearest_rank_index
 from .service import (ADMIN_OPS, ClientRequest, ReadResult, SMRService,
                       build_smr_cluster)
 from .state_machine import KVStateMachine, Snapshot
@@ -40,5 +41,6 @@ __all__ = [
     "DeliveredRoundLog", "KVStateMachine", "LogEntry", "MembershipManager",
     "ReadResult", "SMRService", "Snapshot", "WorkloadClient",
     "WorkloadConfig", "WorkloadGenerator", "ZipfianGenerator",
-    "add_smr_server", "build_smr_cluster",
+    "add_smr_server", "build_smr_cluster", "nearest_rank",
+    "nearest_rank_index",
 ]

@@ -1,0 +1,31 @@
+"""Nearest-rank percentiles — the one indexing rule for latency reports.
+
+Every latency percentile in the repo (``SMRMetrics`` p50/p99, the
+eon-flip window stats in ``benchmarks/smr_throughput.py``, and the
+vectorized per-client percentiles in ``repro.vecsim.clients``) uses the
+same nearest-rank rule so numbers stay comparable across engines:
+
+    idx = min(int(p * count), count - 1)      # over the ascending sort
+
+The rule is deliberately simple (no interpolation): on tiny samples it
+picks an actual observed latency, and the vectorized kernel can replicate
+it bit-for-bit with one gather.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def nearest_rank_index(count: int, p: float) -> int:
+    """Index of the p-th percentile in an ascending sort of ``count`` items."""
+    if count <= 0:
+        raise ValueError(f"need at least one sample, got count={count}")
+    return min(int(p * count), count - 1)
+
+
+def nearest_rank(xs: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile of ``xs`` (any order); NaN on empty input."""
+    if not xs:
+        return float("nan")
+    ys = sorted(xs)
+    return ys[nearest_rank_index(len(ys), p)]

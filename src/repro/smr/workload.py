@@ -37,7 +37,11 @@ class ZipfianGenerator:
         self._cdf = cdf
 
     def draw(self, rng: random.Random) -> int:
-        return bisect.bisect_left(self._cdf, rng.random())
+        # Float accumulation can leave _cdf[-1] a few ulps below 1.0, in
+        # which case bisect_left returns nkeys for a draw above it — clamp
+        # to the last key (the vectorized path in vecsim.clients mirrors
+        # this clamp so both engines agree on boundary draws).
+        return min(bisect.bisect_left(self._cdf, rng.random()), self.nkeys - 1)
 
 
 @dataclass
@@ -52,6 +56,16 @@ class WorkloadConfig:
     arrival: str = "closed"            # "closed" | "open"
     open_rate: float = 1000.0          # req/s per client (open loop)
     seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.arrival not in ("closed", "open"):
+            raise ValueError(f"arrival must be 'closed' or 'open', "
+                             f"got {self.arrival!r}")
+        if self.arrival == "open" and self.open_rate <= 0:
+            # Fail here rather than from expovariate() deep in the event
+            # loop on the first interarrival draw.
+            raise ValueError(f"open-loop arrival requires open_rate > 0, "
+                             f"got open_rate={self.open_rate!r}")
 
 
 @dataclass

@@ -6,16 +6,25 @@ cross-validated (exactly, not just within tolerance) against the
 discrete-event simulator in :mod:`repro.sim`.  See README.md in this
 directory for the recurrence derivation and when to trust which engine.
 """
+from .clients import (ClientLatencies, arrival_times, client_latencies,
+                      closed_loop_latencies, draw_keys, keys_from_uniform,
+                      mc_client_latencies, server_streams, smr_round_times,
+                      zipf_cdf)
 from .engine import RoundTimes, run_reliable, run_unreliable, summarize
-from .failures import MonteCarloResult, monte_carlo
+from .failures import (MonteCarloResult, MonteCarloTimes, monte_carlo,
+                       monte_carlo_times)
 from .sweep import SweepConfig, SweepResult, grid, sweep
 from .topology import (ReliableTables, UnreliableTables, message_bytes,
-                       reliable_tables, unreliable_tables)
+                       reliable_tables, smr_message_bytes, unreliable_tables)
 
 __all__ = [
     "RoundTimes", "run_reliable", "run_unreliable", "summarize",
-    "MonteCarloResult", "monte_carlo",
+    "ClientLatencies", "arrival_times", "client_latencies",
+    "closed_loop_latencies", "draw_keys", "keys_from_uniform",
+    "mc_client_latencies", "server_streams", "smr_round_times", "zipf_cdf",
+    "MonteCarloResult", "MonteCarloTimes", "monte_carlo",
+    "monte_carlo_times",
     "SweepConfig", "SweepResult", "grid", "sweep",
     "ReliableTables", "UnreliableTables", "message_bytes",
-    "reliable_tables", "unreliable_tables",
+    "reliable_tables", "smr_message_bytes", "unreliable_tables",
 ]

@@ -60,6 +60,24 @@ class MonteCarloResult:
         }
 
 
+@dataclass(frozen=True)
+class MonteCarloTimes:
+    """Per-round spliced timelines (one row per sampled schedule).
+
+    ``entry[s, k]`` is the abcast time of round ``k`` under schedule ``s``
+    and ``deliver[s, k]`` the A-delivery time of that round's payload (for
+    AllConcur+ the one-round delivery lag and crash-recovery splices are
+    already folded in, exactly as :func:`monte_carlo` aggregates them).
+    The vectorized client layer replays arrival streams against these
+    timelines to turn Fig.-6-style robustness sweeps into client-perceived
+    latency distributions.
+    """
+    entry: np.ndarray           # [S, R] round abcast times
+    deliver: np.ndarray         # [S, R] payload A-delivery times
+    crashes: np.ndarray         # [S] crashes inside the horizon
+    total_time: np.ndarray      # [S] seconds to deliver all rounds
+
+
 def monte_carlo(du: float, dr: float, *, n: int, batch: int,
                 mtbf: float, fd_timeout: float = 10e-3,
                 rounds: int = 200, n_schedules: int = 2048, seed: int = 0,
@@ -81,6 +99,48 @@ def monte_carlo(du: float, dr: float, *, n: int, batch: int,
     ``eon_round`` (with ``du2_by_f``/``dr2_by_f``/``n2``) splices an eon
     transition: see the module docstring.
     """
+    thr, lat, crashes, total, _entry, _deliver = _mc_run(
+        du, dr, n=n, batch=batch, mtbf=mtbf, fd_timeout=fd_timeout,
+        rounds=rounds, n_schedules=n_schedules, seed=seed,
+        max_failures=max_failures, du_by_f=du_by_f, dr_by_f=dr_by_f,
+        eon_round=eon_round, du2_by_f=du2_by_f, dr2_by_f=dr2_by_f, n2=n2)
+    return MonteCarloResult(throughput=thr, mean_latency=lat,
+                            crashes=crashes, total_time=total)
+
+
+def monte_carlo_times(du: float, dr: float, *, n: int, batch: int,
+                      mtbf: float, fd_timeout: float = 10e-3,
+                      rounds: int = 200, n_schedules: int = 2048,
+                      seed: int = 0, max_failures: int = 4,
+                      du_by_f: Optional[Sequence[float]] = None,
+                      dr_by_f: Optional[Sequence[float]] = None,
+                      eon_round: Optional[int] = None,
+                      du2_by_f: Optional[Sequence[float]] = None,
+                      dr2_by_f: Optional[Sequence[float]] = None,
+                      n2: Optional[int] = None) -> MonteCarloTimes:
+    """Like :func:`monte_carlo` but export the spliced per-round timelines
+    (abcast + A-delivery time per round per schedule) instead of aggregate
+    throughput/latency — the input the vectorized client layer needs to
+    compute client-perceived percentiles under crash/eon-flip schedules.
+    """
+    _thr, _lat, crashes, total, entry, deliver = _mc_run(
+        du, dr, n=n, batch=batch, mtbf=mtbf, fd_timeout=fd_timeout,
+        rounds=rounds, n_schedules=n_schedules, seed=seed,
+        max_failures=max_failures, du_by_f=du_by_f, dr_by_f=dr_by_f,
+        eon_round=eon_round, du2_by_f=du2_by_f, dr2_by_f=dr2_by_f, n2=n2)
+    return MonteCarloTimes(entry=entry, deliver=deliver,
+                           crashes=crashes, total_time=total)
+
+
+def _mc_run(du: float, dr: float, *, n: int, batch: int, mtbf: float,
+            fd_timeout: float, rounds: int, n_schedules: int, seed: int,
+            max_failures: int,
+            du_by_f: Optional[Sequence[float]],
+            dr_by_f: Optional[Sequence[float]],
+            eon_round: Optional[int],
+            du2_by_f: Optional[Sequence[float]],
+            dr2_by_f: Optional[Sequence[float]],
+            n2: Optional[int]):
     import jax
     import jax.numpy as jnp
     from jax.experimental import enable_x64
@@ -145,19 +205,17 @@ def monte_carlo(du: float, dr: float, *, n: int, batch: int,
                                     max_failures)
                 return ((t_next, ptr + crashed.astype(jnp.int32), new_f,
                          lat_sum + lat * alive, msg_sum + alive),
-                        None)
+                        (t, t + lat))
 
             init = (jnp.float64(0.0), jnp.int32(0), jnp.int32(0),
                     jnp.float64(0.0), jnp.int64(0))
-            (t, ptr, f, lat_sum, msg_sum), _ = jax.lax.scan(
+            (t, ptr, f, lat_sum, msg_sum), (entry, deliver) = jax.lax.scan(
                 step, init, jnp.arange(rounds))
             thr = msg_sum * batch / t            # txn / s / server
-            return thr, lat_sum / msg_sum, ptr, t
+            return thr, lat_sum / msg_sum, ptr, t, entry, deliver
 
         fn = jax.jit(jax.vmap(one_schedule))
-        thr, lat, crashes, total = fn(crash_times)
+        thr, lat, crashes, total, entry, deliver = fn(crash_times)
 
-    return MonteCarloResult(throughput=np.asarray(thr),
-                            mean_latency=np.asarray(lat),
-                            crashes=np.asarray(crashes),
-                            total_time=np.asarray(total))
+    return (np.asarray(thr), np.asarray(lat), np.asarray(crashes),
+            np.asarray(total), np.asarray(entry), np.asarray(deliver))

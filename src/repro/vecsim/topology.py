@@ -83,6 +83,29 @@ def message_bytes(mode: str, batch: int) -> int:
     return wire_size(probe, n=0)
 
 
+def smr_message_bytes(mode: str, batch: int, *, value_size: int = 16) -> int:
+    """Wire bytes of one failure-free SMR round message carrying ``batch``
+    put requests, via the same probe-encode path as :func:`message_bytes`.
+
+    The probe mirrors ``SMRService.payload_for`` exactly: a ``reqs`` tuple of
+    ``(client_id, seq, op)`` with padded values, so the frame length matches
+    the event simulator byte-for-byte *within the small-varint band* — all of
+    client_id, seq, payload round and key must encode to one zigzag-varint
+    byte (value <= 63) and ``value_size >= 6`` must absorb the ``"v%d.%d"``
+    prefix.  The exactness tests stay inside this band; sweep-scale runs use
+    the probe as the representative constant frame size.
+    """
+    kind = MsgKind.RBCAST if mode == "allconcur" else MsgKind.BCAST
+    reqs = []
+    for c in range(batch):
+        value = "v%d.%d" % (c % 64, 0)
+        value += "x" * max(value_size - len(value), 0)
+        reqs.append((c % 64, 0, {"op": "put", "key": 0, "value": value}))
+    payload = {"kind": "smr", "src": 0, "round": 1, "batch": len(reqs),
+               "reqs": tuple(reqs)}
+    return wire_size(Message(kind, 0, 1, 1, payload=payload), n=0)
+
+
 def prop_matrix(network: str, n: int) -> np.ndarray:
     net = make_network(network, n)
     prop = np.zeros((n, n), dtype=np.float64)
@@ -109,12 +132,18 @@ def _ser_time(network: str, n: int, nbytes: int) -> float:
 
 @functools.lru_cache(maxsize=512)
 def unreliable_tables(n: int, *, network: str = "sdc", batch: int = 4,
-                      overlay: str = "binomial",
-                      mode: str = "allconcur+") -> UnreliableTables:
+                      overlay: str = "binomial", mode: str = "allconcur+",
+                      nbytes: Optional[int] = None) -> UnreliableTables:
     """Sweep grids repeat identical (n, network, batch) points across seeds
-    and algorithms, so tables are cached; treat the arrays as read-only."""
+    and algorithms, so tables are cached; treat the arrays as read-only.
+
+    ``nbytes`` overrides the probe message size (e.g.
+    :func:`smr_message_bytes` for SMR-sized rounds); by default the plain
+    A-broadcast probe of :func:`message_bytes` is used.
+    """
     ov = make_overlay(overlay, list(range(n)))
-    ser = _ser_time(network, n, message_bytes(mode, batch))
+    ser = _ser_time(network, n,
+                    message_bytes(mode, batch) if nbytes is None else nbytes)
     parent = np.full((n, n), -1, dtype=np.int32)
     send_off = np.zeros((n, n), dtype=np.float64)
     occ = np.zeros((n, n), dtype=np.float64)
@@ -134,26 +163,30 @@ def unreliable_tables(n: int, *, network: str = "sdc", batch: int = 4,
 
 def reliable_tables(n: int, *, d: Optional[int] = None, network: str = "sdc",
                     batch: int = 4, g_r: Optional[Digraph] = None,
-                    mode: str = "allconcur") -> ReliableTables:
+                    mode: str = "allconcur",
+                    nbytes: Optional[int] = None) -> ReliableTables:
     if g_r is None:
         return _reliable_tables_cached(n, d=d, network=network, batch=batch,
-                                       mode=mode)
+                                       mode=mode, nbytes=nbytes)
     return _reliable_tables(n, d=d, network=network, batch=batch, g_r=g_r,
-                            mode=mode)
+                            mode=mode, nbytes=nbytes)
 
 
 @functools.lru_cache(maxsize=512)
 def _reliable_tables_cached(n: int, *, d: Optional[int], network: str,
-                            batch: int, mode: str) -> ReliableTables:
+                            batch: int, mode: str,
+                            nbytes: Optional[int]) -> ReliableTables:
     return _reliable_tables(n, d=d, network=network, batch=batch, g_r=None,
-                            mode=mode)
+                            mode=mode, nbytes=nbytes)
 
 
 def _reliable_tables(n: int, *, d: Optional[int], network: str, batch: int,
-                     g_r: Optional[Digraph], mode: str) -> ReliableTables:
+                     g_r: Optional[Digraph], mode: str,
+                     nbytes: Optional[int] = None) -> ReliableTables:
     dd = d if d is not None else resilience_degree(n)
     g = g_r if g_r is not None else gs_digraph(list(range(n)), dd)
-    ser = _ser_time(network, n, message_bytes(mode, batch))
+    ser = _ser_time(network, n,
+                    message_bytes(mode, batch) if nbytes is None else nbytes)
     adj = np.zeros((n, n), dtype=bool)
     edge_off = np.zeros((n, n), dtype=np.float64)
     occ = np.zeros(n, dtype=np.float64)
